@@ -1,0 +1,288 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Percepta's paper defers benchmarking to future work but enumerates the plan
+(§V): network I/O under load, CPU/memory across stress levels, performance
+across deployment strategies. Each bench below implements one of those
+tables (plus serving, kernels, and the dry-run roofline summary).
+
+Prints ``name,us_per_call,derived`` CSV rows (CPU wall time; the TPU-target
+numbers live in the roofline table from the dry-run artifacts).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _time(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6
+
+
+# --------------------------------------------------------------------------
+# Table 1 — ingest/network-I/O throughput under varying load
+# --------------------------------------------------------------------------
+
+def bench_ingest(quick=False):
+    from repro.runtime.queues import QueueBroker
+    from repro.runtime.records import CODECS
+    from repro.runtime.translator import Translator
+
+    for proto in ("mqtt", "http", "amqp"):
+        enc, _ = CODECS[proto]
+        tr = Translator("src", proto)
+        broker = QueueBroker()
+        n = 2_000 if quick else 20_000
+        payloads = [enc("s", float(i), float(i) * 0.5) for i in range(n)]
+
+        def run():
+            for i, p in enumerate(payloads):
+                rec = tr.translate(f"env-{i % 16}", p)
+                broker.publish(rec)
+
+        t0 = time.time()
+        run()
+        dt = time.time() - t0
+        _row(f"ingest_{proto}", dt / n * 1e6, f"{n / dt:.0f} msg/s")
+
+
+# --------------------------------------------------------------------------
+# Table 2 — per-tick pipeline latency: paper-faithful modular vs fused
+# --------------------------------------------------------------------------
+
+def _pipeline(E, S=8, T=16, M=64, mode="fused"):
+    import jax.numpy as jnp
+
+    from repro.core import PerceptaPipeline, PipelineConfig
+    from repro.core.frame import make_raw_window
+
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    pipe = PerceptaPipeline(cfg, mode=mode)
+    state = pipe.init_state()
+    rng = np.random.RandomState(0)
+    raw = make_raw_window(rng.normal(5, 2, (E, S, M)).astype(np.float32),
+                          rng.uniform(0, T * 60, (E, S, M)).astype(np.float32),
+                          rng.rand(E, S, M) > 0.3)
+    ws = jnp.zeros((E,), jnp.float32)
+
+    def run():
+        nonlocal state
+        state, feats, frame = pipe.run_tick(state, raw, ws)
+        feats.features.block_until_ready()
+
+    return run
+
+
+def bench_tick_latency(quick=False):
+    envs = (16, 256) if quick else (16, 256, 1024)
+    for E in envs:
+        t_mod = _time(_pipeline(E, mode="modular"), n=3 if quick else 8)
+        t_fus = _time(_pipeline(E, mode="fused"), n=3 if quick else 8)
+        _row(f"tick_modular_E{E}", t_mod, "paper-faithful per-module jits")
+        _row(f"tick_fused_E{E}", t_fus,
+             f"speedup {t_mod / t_fus:.2f}x over modular")
+
+
+# --------------------------------------------------------------------------
+# Table 3 — per-stage cost + CPU/RSS across stress levels
+# --------------------------------------------------------------------------
+
+def bench_stage_breakdown(quick=False):
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import psutil
+
+    from repro.core import PipelineConfig
+    from repro.core import pipeline as pl
+    from repro.core.frame import make_raw_window
+
+    E, S, T, M = (256, 8, 16, 64)
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    state = pl.init_state(cfg)
+    rng = np.random.RandomState(0)
+    raw = make_raw_window(rng.normal(5, 2, (E, S, M)).astype(np.float32),
+                          rng.uniform(0, T * 60, (E, S, M)).astype(np.float32),
+                          rng.rand(E, S, M) > 0.3)
+    ws = jnp.zeros((E,), jnp.float32)
+
+    h = jax.jit(functools.partial(pl.stage_harmonize, cfg))
+    v, obs, ticks = jax.block_until_ready(h(state, raw, ws))
+    a = jax.jit(functools.partial(pl.stage_anomaly, cfg))
+    va, oa, rep, na = jax.block_until_ready(a(state, v, obs))
+    g = jax.jit(functools.partial(pl.stage_gapfill, cfg))
+    vg, fg, ng = jax.block_until_ready(g(state, va, oa, ticks))
+    nrm = jax.jit(functools.partial(pl.stage_normalize, cfg))
+
+    proc = psutil.Process()
+    _row("stage_harmonize", _time(lambda: jax.block_until_ready(
+        h(state, raw, ws))), f"rss {proc.memory_info().rss / 2**20:.0f} MB")
+    _row("stage_anomaly", _time(lambda: jax.block_until_ready(
+        a(state, v, obs))), "")
+    _row("stage_gapfill", _time(lambda: jax.block_until_ready(
+        g(state, va, oa, ticks))), "")
+    _row("stage_normalize", _time(lambda: jax.block_until_ready(
+        nrm(state, vg, oa | fg))), f"cpu {psutil.cpu_percent(0.1):.0f}%")
+
+
+# --------------------------------------------------------------------------
+# Table 4 — deployment strategies: edge (1 env) / fog (32) / cloud (1024)
+# --------------------------------------------------------------------------
+
+def bench_deployment(quick=False):
+    modes = {"edge": 1, "fog": 32, "cloud": 256 if quick else 1024}
+    for name, E in modes.items():
+        t = _time(_pipeline(E), n=3 if quick else 6)
+        _row(f"deploy_{name}_E{E}", t,
+             f"{t / E:.1f} us/env ({E / (t / 1e6):.0f} env-ticks/s)")
+
+
+# --------------------------------------------------------------------------
+# Table 5 — end-to-end serving throughput (Percepta -> LM, batched requests)
+# --------------------------------------------------------------------------
+
+def bench_serving(quick=False):
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models import LM
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config("qwen3-0.6b:smoke")
+    model = LM(cfg, remat_policy="none")
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=4, max_seq=128)
+    rng = np.random.RandomState(0)
+    n_req = 8 if quick else 16
+    reqs = [Request(rid=i, prompt=rng.randint(1, cfg.vocab_size, (8,))
+                    .astype(np.int32), max_new_tokens=16)
+            for i in range(n_req)]
+    t0 = time.time()
+    engine.run_until_drained(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.tokens) for r in reqs)
+    _row("serving_engine", dt / max(toks, 1) * 1e6,
+         f"{toks / dt:.1f} tok/s | {n_req} reqs on 4 slots | "
+         f"{engine.stats['ticks']} ticks")
+
+
+# --------------------------------------------------------------------------
+# Table 6 — Pallas kernels: interpret-mode correctness vs oracle
+# --------------------------------------------------------------------------
+
+def bench_kernels(quick=False):
+    rng = np.random.RandomState(0)
+    from repro.kernels.window_agg.ops import window_agg
+    E, S, T = 8, 8, 64
+    v = rng.normal(5, 2, (E, S, T)).astype(np.float32)
+    m = rng.rand(E, S, T) > 0.3
+    mu = rng.normal(5, 1, (E, S)).astype(np.float32)
+    var = np.abs(rng.normal(2, .5, (E, S))).astype(np.float32) + .1
+    t0 = time.time()
+    s1, _ = window_agg(v, m, mu, var, use_pallas=True)
+    s2, _ = window_agg(v, m, mu, var, use_pallas=False)
+    err = float(np.abs(np.asarray(s1) - np.asarray(s2)).max())
+    _row("kernel_window_agg", (time.time() - t0) * 1e6,
+         f"max_abs_err {err:.2e} (interpret vs oracle)")
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = rng.normal(0, 1, (1, 128, 4, 32)).astype(np.float32)
+    k = rng.normal(0, 1, (1, 128, 2, 32)).astype(np.float32)
+    vv = rng.normal(0, 1, (1, 128, 2, 32)).astype(np.float32)
+    t0 = time.time()
+    o1 = flash_attention(q, k, vv, use_pallas=True, q_blk=64, kv_blk=64)
+    o2 = flash_attention(q, k, vv, use_pallas=False)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    _row("kernel_flash_attention", (time.time() - t0) * 1e6,
+         f"max_abs_err {err:.2e}")
+
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    a = rng.uniform(.6, .99, (2, 32, 128)).astype(np.float32)
+    b = rng.normal(0, .1, (2, 32, 128)).astype(np.float32)
+    h0 = np.zeros((2, 128), np.float32)
+    t0 = time.time()
+    o1, _ = rglru_scan(a, b, h0, use_pallas=True)
+    o2, _ = rglru_scan(a, b, h0, use_pallas=False)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    _row("kernel_rglru_scan", (time.time() - t0) * 1e6,
+         f"max_abs_err {err:.2e}")
+
+    from repro.kernels.harmonize.ops import harmonize as kharm
+    ts = rng.uniform(0, 960, (4, 4, 32)).astype(np.float32)
+    vals = rng.normal(0, 1, (4, 4, 32)).astype(np.float32)
+    ok = rng.rand(4, 4, 32) > 0.2
+    ws = np.zeros((4,), np.float32)
+    t0 = time.time()
+    o1, _ = kharm(vals, ts, ok, ws, tick_s=60.0, n_ticks=16, use_pallas=True)
+    o2, _ = kharm(vals, ts, ok, ws, tick_s=60.0, n_ticks=16, use_pallas=False)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    _row("kernel_harmonize", (time.time() - t0) * 1e6,
+         f"max_abs_err {err:.2e}")
+
+
+# --------------------------------------------------------------------------
+# Table 7 — dry-run roofline summary (reads experiments/dryrun/*.json)
+# --------------------------------------------------------------------------
+
+def bench_roofline(quick=False):
+    import glob
+    import json
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    cells = []
+    for f in sorted(glob.glob(os.path.join(root, "*.json"))):
+        d = json.load(open(f))
+        if not d.get("skipped") and not d.get("tag"):
+            cells.append(d)
+    if not cells:
+        _row("roofline", 0.0, "no dry-run artifacts (run repro.launch.dryrun)")
+        return
+    fits = sum(1 for d in cells if d.get("fits_hbm"))
+    _row("roofline_cells", 0.0,
+         f"{len(cells)} compiled | {fits} fit 16GiB HBM (TPU-adjusted)")
+    for d in cells:
+        if d["mesh"] != "16x16":
+            continue
+        _row(f"roofline_{d['arch']}_{d['shape']}",
+             max(d["compute_s"], d["memory_s"], d["collective_s"]) * 1e6,
+             f"dom={d['dominant']} frac={d['roofline_fraction']:.3f}")
+
+
+ALL = [bench_ingest, bench_tick_latency, bench_stage_breakdown,
+       bench_deployment, bench_serving, bench_kernels, bench_roofline]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for bench in ALL:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            bench(quick=args.quick)
+        except Exception as e:  # a failing table must not hide the others
+            _row(bench.__name__, -1.0, f"ERROR {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""END-TO-END DRIVER (the paper's kind: real-time inference support).
+
+Percepta at the edge feeding a REAL transformer policy with batched
+requests: simulated MQTT/HTTP/AMQP devices -> Receivers -> Translators ->
+env queues -> Accumulator -> fused device tick (harmonize/gap-fill/de-spike/
+normalize) -> TokenCodec -> qwen3-family LM (reduced config) -> decisions ->
+reward -> replay + LogDB -> Forwarders. Also serves ad-hoc batched text
+requests through the continuous-batching engine between ticks.
+
+Run: PYTHONPATH=src python examples/serve_edge.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import PipelineConfig
+from repro.core.codec import TokenCodec
+from repro.core.reward import energy_reward_spec
+from repro.models import LM
+from repro.runtime.db import LogDB
+from repro.runtime.forwarder import Forwarder, ForwarderHub
+from repro.runtime.predictor import ActionSpace, ModelAdapter, Predictor
+from repro.runtime.receivers import SimulatedDevice
+from repro.runtime.system import PerceptaSystem, SourceSpec
+from repro.serve.engine import Request, ServeEngine
+
+# --- the deployed model: a real (reduced-config) transformer ---------------
+cfg_lm = get_config("qwen3-0.6b:smoke")
+model = LM(cfg_lm, remat_policy="none")
+params = model.init(jax.random.PRNGKey(0))
+codec = TokenCodec(n_features=3, bins=64, clip=4.0)
+assert codec.vocab_needed <= cfg_lm.vocab_size
+
+prefill = jax.jit(model.prefill)
+norm_state = {"s": None}
+
+
+def lm_policy(feats):
+    toks = codec.encode(norm_state["s"], feats)
+    logits, _ = prefill(params, {"tokens": toks})
+    return jnp.tanh(logits[:, :2])  # 2 setpoints (hvac, charger)
+
+
+# --- Percepta wiring ---------------------------------------------------------
+E = 4
+sources = [
+    SourceSpec("meter", "mqtt", SimulatedDevice("grid_kw", 60.0, base=3.0,
+                                                seed=1)),
+    SourceSpec("price", "http", SimulatedDevice("price_eur", 300.0, base=0.2,
+                                                amplitude=0.05, seed=2)),
+    SourceSpec("thermo", "amqp", SimulatedDevice("temp_c", 30.0, base=21.0,
+                                                 amplitude=1.5, seed=3)),
+]
+pcfg = PipelineConfig(n_envs=E, n_streams=3, n_ticks=8, tick_s=60.0,
+                      max_samples=32)
+pred = Predictor(ModelAdapter(lm_policy, "lm_policy"),
+                 energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=2),
+                 ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                 E, pcfg.n_features, db=None, replay_capacity=256)
+db = LogDB("/tmp/percepta_serve_db", salt="opeva")
+hub = ForwarderHub([Forwarder("hvac", "mqtt", [0]),
+                    Forwarder("ev-charger", "amqp", [1])])
+system = PerceptaSystem([f"bldg-{i}" for i in range(E)], sources, pcfg, pred,
+                        forwarders=hub, db=db, speedup=4000.0)
+
+# --- ad-hoc batched request serving between ticks ---------------------------
+engine = ServeEngine(model, params, batch_slots=4, max_seq=64)
+rng = np.random.RandomState(0)
+
+print("=== Percepta edge serving: 6 windows, 12 ad-hoc requests ===")
+norm_state["s"] = system.state.norm
+t_start = time.time()
+tok_count = 0
+for w in range(6):
+    norm_state["s"] = system.state.norm
+    r = system.run_windows(1)[0]
+    # serve a couple of batched ad-hoc requests while streams accumulate
+    reqs = [Request(rid=w * 10 + j,
+                    prompt=rng.randint(1, cfg_lm.vocab_size, (6,))
+                    .astype(np.int32), max_new_tokens=8) for j in range(2)]
+    engine.run_until_drained(reqs)
+    tok_count += sum(len(q.tokens) for q in reqs)
+    print(f"window {w}: {r['records']:4d} records  "
+          f"tick {r['latency_s']*1e3:6.1f} ms  reward {r['mean_reward']:+.3f}  "
+          f"observed {r['observed_frac']:.0%}  filled {r['filled_frac']:.0%}")
+
+dt = time.time() - t_start
+print(f"\nforwarded decisions: "
+      f"{ {f.dest_id: f.stats['sent'] for f in hub.forwarders} }")
+print(f"DB rows (anonymized): {db.stats['rows']}  "
+      f"replay transitions: {int(pred.replay.size())}")
+print(f"ad-hoc serving: {tok_count} tokens via continuous batching "
+      f"({engine.stats['ticks']} engine ticks)")
+print(f"wall time {dt:.1f}s for 48 stream-minutes x {E} buildings + serving")
+db.close()

@@ -1,0 +1,6 @@
+# The paper's primary contribution — Percepta's stream-processing tick as
+# batched JAX: harmonize -> anomaly -> gap-fill -> normalize -> aggregate ->
+# encode -> (model) -> reward -> replay. See pipeline.PerceptaPipeline.
+from repro.core.frame import FeatureFrame, RawWindow, TickFrame  # noqa: F401
+from repro.core.pipeline import (PerceptaPipeline, PipelineConfig,  # noqa: F401
+                                 PipelineState, init_state, tick)

@@ -1,0 +1,68 @@
+"""Window aggregation + cross-stream relationships (the Manager's logic).
+
+"It can prioritize the most recent entries, but it can also apply
+aggregation logic, such as calculating sums, averages ... the Manager
+analyzes the data to identify meaningful relationships within it. For
+instance, it may combine temperature readings from sensors of various
+brands within the same area to compute a weighted average."
+
+``combine`` implements exactly that: a (features x streams) weight matrix
+mapping harmonized per-tick streams to derived features — weighted averages
+across same-area sensors, sums across feeders, etc.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+AGGS = ("last", "mean", "sum", "min", "max", "std", "count")
+
+
+def window_agg(values, mask, agg: str):
+    """Aggregate the tick dim away. values/mask: (E, S, T) -> (E, S)."""
+    w = mask.astype(jnp.float32)
+    n = w.sum(-1)
+    big = jnp.float32(3.4e38)
+    if agg == "last":
+        idx = jnp.where(mask, jnp.arange(values.shape[-1]), -1).max(-1)
+        take = jnp.take_along_axis(values, jnp.maximum(idx, 0)[..., None], -1)[..., 0]
+        return jnp.where(idx >= 0, take, 0.0)
+    if agg == "mean":
+        return jnp.einsum("est,est->es", values, w) / jnp.maximum(n, 1)
+    if agg == "sum":
+        return jnp.einsum("est,est->es", values, w)
+    if agg == "min":
+        return jnp.min(jnp.where(mask, values, big), -1)
+    if agg == "max":
+        return jnp.max(jnp.where(mask, values, -big), -1)
+    if agg == "std":
+        m = jnp.einsum("est,est->es", values, w) / jnp.maximum(n, 1)
+        v = jnp.einsum("est,est->es", jnp.square(values - m[..., None]), w)
+        return jnp.sqrt(v / jnp.maximum(n, 1))
+    if agg == "count":
+        return n
+    raise ValueError(agg)
+
+
+def combine(values, weights):
+    """Cross-stream relationships. values (E,S,T) x weights (F,S) -> (E,F,T).
+
+    Rows of ``weights`` are derived features: a row with 1/k over k
+    temperature streams is the paper's weighted-average example; a row of
+    ones over feeder streams is a total-consumption sum.
+    """
+    return jnp.einsum("est,fs->eft", values, weights)
+
+
+def feature_vector(values, mask, weights, *, per_tick: bool = False):
+    """Full Manager output: derived features flattened for the Encoder.
+
+    values/mask (E,S,T), weights (F,S) ->
+      per_tick=False: (E, F) last-tick features
+      per_tick=True : (E, F*T) the whole harmonized window
+    """
+    feats = combine(values, weights)                     # (E, F, T)
+    if per_tick:
+        E = feats.shape[0]
+        return feats.reshape(E, -1)
+    return feats[..., -1]

@@ -1,0 +1,94 @@
+"""Encoder/Decoder — model-specific format adaptation.
+
+"For each deployed model, an Encoder/Decoder component is implemented to
+translate the standardized format produced by the Manager into the specific
+format required by the model ... After inference, this component decodes the
+model's decisions back into a common format."
+
+Three encoder families cover the assigned architectures:
+  * ``VectorCodec``  — continuous feature vector (classic RL policies)
+  * ``TokenCodec``   — quantile-binned feature tokens for LM-family models
+    (each feature -> one token in a per-feature codebook region; the decode
+    shape fits every ``--arch`` LM in configs/)
+  * ``EmbeddingCodec`` — projects features into d_model frame embeddings
+    (musicgen/internvl2-style stub frontends)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import normalize as nz
+
+
+@dataclass(frozen=True)
+class VectorCodec:
+    n_features: int
+    clip: float = 8.0
+
+    def encode(self, state: nz.NormState, features):
+        z = nz.znorm(state, features[:, :, None])[..., 0]
+        return jnp.clip(z, -self.clip, self.clip)
+
+    def decode(self, state: nz.NormState, outputs, low, high):
+        """Model emits z-scored setpoints; decode to engineering units."""
+        raw = nz.denorm_z(state, outputs[:, :, None])[..., 0]
+        return jnp.clip(raw, low, high)
+
+
+@dataclass(frozen=True)
+class TokenCodec:
+    """Quantile-bin features into LM tokens.
+
+    Feature j maps into the token range [offset + j*bins, offset + (j+1)*bins)
+    so one shared vocabulary serves all features — compatible with every
+    assigned LM's vocab (smallest is musicgen's 2048: 15 features x 128 bins
+    + specials fit).
+    """
+    n_features: int
+    bins: int = 128
+    offset: int = 3          # 0=pad 1=bos 2=sep
+    clip: float = 4.0
+
+    @property
+    def vocab_needed(self):
+        return self.offset + self.n_features * self.bins
+
+    def encode(self, state: nz.NormState, features):
+        z = nz.znorm(state, features[:, :, None])[..., 0]
+        u = (jnp.clip(z, -self.clip, self.clip) + self.clip) / (2 * self.clip)
+        b = jnp.minimum((u * self.bins).astype(jnp.int32), self.bins - 1)
+        return self.offset + jnp.arange(self.n_features) * self.bins + b
+
+    def decode(self, state: nz.NormState, tokens, low, high):
+        rel = tokens - self.offset - jnp.arange(tokens.shape[-1]) * self.bins
+        u = (jnp.clip(rel, 0, self.bins - 1) + 0.5) / self.bins
+        z = u * 2 * self.clip - self.clip
+        raw = nz.denorm_z(state, z[:, :, None])[..., 0]
+        return jnp.clip(raw, low, high)
+
+
+@dataclass(frozen=True)
+class EmbeddingCodec:
+    """Features -> (E, n_frames, d_model) embeddings via a fixed random
+    projection (the modality-frontend stub contract of the assignment)."""
+    n_features: int
+    d_model: int
+    n_frames: int = 1
+    seed: int = 0
+
+    def _proj(self):
+        k = jax.random.PRNGKey(self.seed)
+        return jax.random.normal(k, (self.n_features, self.n_frames * self.d_model)) \
+            / jnp.sqrt(self.n_features)
+
+    def encode(self, state: nz.NormState, features):
+        z = jnp.clip(nz.znorm(state, features[:, :, None])[..., 0], -8, 8)
+        e = z @ self._proj()
+        return e.reshape(features.shape[0], self.n_frames, self.d_model)
+
+    def decode(self, state, outputs, low, high):
+        raise NotImplementedError("embedding codec is input-only (stub frontend)")

@@ -1,0 +1,67 @@
+"""StreamFrame — the batched unit of data flowing through Percepta on device.
+
+The paper's per-environment, per-message flow becomes tensor dimensions:
+  E = environments (paper: isolated processing contexts, one per building)
+  S = streams     (paper: one per Receiver/Translator source)
+  M = raw samples per window (ragged; padded + validity mask)
+  T = tick grid   (the model's time resolution after harmonization)
+
+A RawWindow holds what the Accumulator collected during one Manager window;
+a TickFrame is the harmonized/gap-filled/normalized result the Predictor
+consumes. Both are pytrees (jit/scan/shard friendly).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RawWindow(NamedTuple):
+    """Raw samples collected in one window. Shapes (E, S, M)."""
+    values: jax.Array      # float32
+    timestamps: jax.Array  # float32 seconds (absolute)
+    valid: jax.Array       # bool — padding / lost samples are False
+
+    @property
+    def n_envs(self):
+        return self.values.shape[0]
+
+    @property
+    def n_streams(self):
+        return self.values.shape[1]
+
+    @property
+    def max_samples(self):
+        return self.values.shape[2]
+
+
+class TickFrame(NamedTuple):
+    """Harmonized per-tick data. Shapes (E, S, T)."""
+    values: jax.Array
+    observed: jax.Array    # bool — True where a real sample backed the tick
+    filled: jax.Array      # bool — True where gap-filling synthesized a value
+    anomalous: jax.Array   # bool — True where anomaly handling replaced it
+
+
+class FeatureFrame(NamedTuple):
+    """Model-facing features after aggregation/encoding. Shapes (E, F)."""
+    features: jax.Array     # normalized (what the model consumes)
+    raw: jax.Array          # engineering units (what rewards are computed on)
+    quality: jax.Array      # (E,) fraction of feature inputs actually observed
+    tick_time: jax.Array    # (E,) timestamp of the tick
+
+
+def make_raw_window(values, timestamps, valid=None) -> RawWindow:
+    values = jnp.asarray(values, jnp.float32)
+    timestamps = jnp.asarray(timestamps, jnp.float32)
+    if valid is None:
+        valid = jnp.ones(values.shape, bool)
+    return RawWindow(values, timestamps, jnp.asarray(valid, bool))
+
+
+def empty_tick_frame(E, S, T) -> TickFrame:
+    z = jnp.zeros((E, S, T), jnp.float32)
+    f = jnp.zeros((E, S, T), bool)
+    return TickFrame(z, f, f, f)

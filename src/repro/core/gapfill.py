@@ -1,0 +1,157 @@
+"""Gap filling — detect missing ticks and impute them.
+
+"Percepta is capable of detecting missing data and, when necessary, filling
+in the gaps to maintain the continuity and reliability of the input data."
+
+Strategies (selectable per stream):
+  locf      last observation carried forward (across window boundaries via
+            the carried ``last_value`` state)
+  linear    bridge interior gaps linearly between observations (falls back
+            to locf at the trailing edge)
+  ewma      exponentially-weighted mean of past observations (state-carried)
+  seasonal  mean of the same tick-of-day from history (state-carried slots)
+
+The LOCF scan is a prefix "latest-observation" propagation — associative, so
+it runs as ``jax.lax.associative_scan`` over the tick dim (O(log T) depth).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("locf", "linear", "ewma", "seasonal")
+
+
+class GapFillState(NamedTuple):
+    last_value: jax.Array   # (E, S) last observed value ever
+    last_ts: jax.Array      # (E, S)
+    ewma: jax.Array         # (E, S)
+    seasonal: jax.Array     # (E, S, K) per time-of-day slot running mean
+    seasonal_n: jax.Array   # (E, S, K)
+
+
+def init_state(E, S, K=24) -> GapFillState:
+    z = jnp.zeros((E, S), jnp.float32)
+    return GapFillState(z, z - 1e30, z, jnp.zeros((E, S, K), jnp.float32),
+                        jnp.zeros((E, S, K), jnp.float32))
+
+
+def _locf_scan(values, observed, init_value, init_has):
+    """Carry (value, has) of the latest observation along the tick axis."""
+    v = jnp.concatenate([init_value[..., None], values], axis=-1)
+    o = jnp.concatenate([init_has[..., None], observed], axis=-1)
+
+    def combine(a, b):
+        av, ao = a
+        bv, bo = b
+        return jnp.where(bo, bv, av), ao | bo
+
+    cv, co = jax.lax.associative_scan(combine, (v, o), axis=-1)
+    return cv[..., 1:], co[..., 1:]
+
+
+def locf(values, observed, state: GapFillState):
+    has_prev = state.last_ts > -1e29
+    return _locf_scan(values, observed, state.last_value, has_prev)
+
+
+def linear_bridge(values, observed):
+    """Interior gaps -> linear interp between neighbours (edges untouched)."""
+    T = values.shape[-1]
+    idx = jnp.arange(T, dtype=jnp.float32)
+    big = jnp.float32(1e30)
+    # distance to previous / next observation via two locf passes
+    fwd_v, fwd_has = _locf_scan(values, observed,
+                                jnp.zeros(values.shape[:-1]),
+                                jnp.zeros(values.shape[:-1], bool))
+    fwd_i, _ = _locf_scan(jnp.broadcast_to(idx, values.shape), observed,
+                          -jnp.ones(values.shape[:-1]),
+                          jnp.zeros(values.shape[:-1], bool))
+    rev = lambda x: jnp.flip(x, axis=-1)
+    bwd_v, bwd_has = _locf_scan(rev(values), rev(observed),
+                                jnp.zeros(values.shape[:-1]),
+                                jnp.zeros(values.shape[:-1], bool))
+    bwd_i, _ = _locf_scan(jnp.broadcast_to(idx, values.shape), rev(observed),
+                          -jnp.ones(values.shape[:-1]),
+                          jnp.zeros(values.shape[:-1], bool))
+    bwd_v, bwd_has, bwd_i = rev(bwd_v), rev(bwd_has), (T - 1) - rev(bwd_i)
+    span = jnp.maximum(bwd_i - fwd_i, 1e-6)
+    frac = jnp.clip((idx - fwd_i) / span, 0.0, 1.0)
+    interior = fwd_has & bwd_has
+    interp = fwd_v + frac * (bwd_v - fwd_v)
+    out = jnp.where(observed, values, jnp.where(interior, interp, fwd_v))
+    return out, interior | fwd_has
+
+
+def gap_fill(values, observed, state: GapFillState, tick_ts,
+             strategy, *, tick_of_day=None, ewma_alpha: float = 0.2):
+    """Fill unobserved ticks. strategy: (S,) int32 index into STRATEGIES or a
+    single string. Returns (filled_values, filled_mask, new_state)."""
+    E, S, T = values.shape
+    locf_v, locf_has = locf(values, observed, state)
+    lin_v, lin_has = linear_bridge(values, observed)
+    lin_v = jnp.where(observed | lin_has, lin_v, locf_v)
+    lin_has = lin_has | locf_has
+    ew = state.ewma[..., None]
+    ew_v = jnp.where(observed, values, jnp.broadcast_to(ew, values.shape))
+    ew_has = jnp.broadcast_to(state.last_ts[..., None] > -1e29, values.shape)
+    if tick_of_day is None:
+        tick_of_day = jnp.zeros((E, T), jnp.int32)
+    K = state.seasonal.shape[-1]
+    sea = jnp.take_along_axis(
+        state.seasonal, tick_of_day[:, None, :] % K, axis=-1)
+    sea_n = jnp.take_along_axis(
+        state.seasonal_n, tick_of_day[:, None, :] % K, axis=-1)
+    sea_v = jnp.where(observed, values, sea)
+    sea_has = sea_n > 0
+
+    stack_v = jnp.stack([locf_v, lin_v, ew_v, sea_v])        # (4,E,S,T)
+    stack_h = jnp.stack([locf_has, lin_has, ew_has, sea_has])
+    if isinstance(strategy, str):
+        out_v = stack_v[STRATEGIES.index(strategy)]
+        out_h = stack_h[STRATEGIES.index(strategy)]
+    else:
+        sel = strategy[None, None, :, None]
+        out_v = jnp.take_along_axis(stack_v, sel, axis=0)[0]
+        out_h = jnp.take_along_axis(stack_h, sel, axis=0)[0]
+
+    filled = (~observed) & out_h
+    out = jnp.where(observed, values, jnp.where(filled, out_v, 0.0))
+
+    # ---- state update (from OBSERVED ticks only) ----------------------------
+    any_obs = observed.any(-1)
+    big = jnp.float32(3.4e38)
+    ts_b = jnp.broadcast_to(tick_ts[:, None, :], values.shape)
+    last_key = jnp.where(observed, ts_b, -big)
+    is_last = (last_key == last_key.max(-1, keepdims=True)) & observed
+    new_last = jnp.einsum("est,est->es", values,
+                          is_last.astype(jnp.float32)) / \
+        jnp.maximum(is_last.sum(-1), 1)
+    new_last_ts = jnp.max(jnp.where(observed, ts_b, -1e30), axis=-1)
+    obs_mean = jnp.einsum("est,est->es", values, observed.astype(jnp.float32)) \
+        / jnp.maximum(observed.sum(-1), 1)
+    new_state = GapFillState(
+        last_value=jnp.where(any_obs, new_last, state.last_value),
+        last_ts=jnp.maximum(state.last_ts, new_last_ts),
+        ewma=jnp.where(any_obs,
+                       (1 - ewma_alpha) * state.ewma + ewma_alpha * obs_mean,
+                       state.ewma),
+        seasonal=_seasonal_update(state, values, observed, tick_of_day)[0],
+        seasonal_n=_seasonal_update(state, values, observed, tick_of_day)[1],
+    )
+    return out, filled, new_state
+
+
+def _seasonal_update(state, values, observed, tick_of_day):
+    K = state.seasonal.shape[-1]
+    oh = (jax.nn.one_hot(tick_of_day % K, K, dtype=jnp.float32)[:, None])  # (E,1,T,K)
+    w = oh * observed[..., None]
+    s = jnp.einsum("est,estk->esk", values, w)
+    n = w.sum(axis=2)
+    total_n = state.seasonal_n + n
+    mean = jnp.where(total_n > 0,
+                     (state.seasonal * state.seasonal_n + s) / jnp.maximum(total_n, 1),
+                     state.seasonal)
+    return mean, total_n

@@ -1,0 +1,207 @@
+"""PerceptaPipeline — the per-tick program: Figure 1 as one tensor program.
+
+Two execution modes (the measured §Perf axis on CPU, same math):
+  * ``modular`` — paper-faithful: each module (harmonize, anomaly, gap-fill,
+    normalize, aggregate, encode) is its own jitted call with host hops in
+    between, exactly the RabbitMQ-separated component chain the paper draws.
+  * ``fused``   — the whole tick is ONE jit (and batched across all
+    environments), which is the TPU-native re-think: no host hops, XLA fuses
+    across module boundaries, one dispatch per tick.
+
+State is a single pytree carried tick-to-tick (gap-fill memory, anomaly
+stats, normalizer stats) — checkpointable alongside model params.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as agg
+from repro.core import anomaly as an
+from repro.core import gapfill as gf
+from repro.core import harmonize as hz
+from repro.core import normalize as nz
+from repro.core.frame import FeatureFrame, RawWindow, TickFrame
+
+
+class PipelineState(NamedTuple):
+    gapfill: gf.GapFillState
+    anomaly: an.AnomalyState
+    norm: nz.NormState
+    prev_value: jax.Array   # (E, S) carry for cross-window interpolation
+    prev_ts: jax.Array
+    tick_index: jax.Array   # () int64-ish step counter
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    n_envs: int
+    n_streams: int
+    n_ticks: int = 16            # ticks per window
+    tick_s: float = 60.0         # model time resolution (e.g. 1 min)
+    max_samples: int = 64        # raw samples per stream per window (padded)
+    agg: str = "mean"            # harmonization aggregation
+    harmonize_method: str = "segment"  # segment (O(M)) | onehot (O(M*T))
+    interp_streams: bool = False # use interpolating harmonizer instead
+    gap_strategy: str = "locf"   # locf | linear | ewma | seasonal
+    anomaly_policy: str = "clip" # clip | mean | missing
+    k_sigma: float = 6.0
+    seasonal_slots: int = 24
+    # cross-stream relationships: rows of (F, S) — defaults to identity
+    combine_weights: Optional[tuple] = None
+    per_tick_features: bool = False
+
+    def weights(self):
+        if self.combine_weights is None:
+            return jnp.eye(self.n_streams, dtype=jnp.float32)
+        return jnp.asarray(self.combine_weights, jnp.float32)
+
+    @property
+    def n_features(self):
+        w = self.combine_weights
+        n = self.n_streams if w is None else len(w)
+        return n * (self.n_ticks if self.per_tick_features else 1)
+
+
+def init_state(cfg: PipelineConfig) -> PipelineState:
+    E, S = cfg.n_envs, cfg.n_streams
+    return PipelineState(
+        gapfill=gf.init_state(E, S, cfg.seasonal_slots),
+        anomaly=an.init_state(E, S),
+        norm=nz.init_state(E, S),
+        prev_value=jnp.zeros((E, S), jnp.float32),
+        prev_ts=jnp.full((E, S), -1e30, jnp.float32),
+        tick_index=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (shared by both modes)
+# ---------------------------------------------------------------------------
+
+def stage_harmonize(cfg: PipelineConfig, state, raw: RawWindow, window_start):
+    ticks = hz.tick_grid(window_start, cfg.tick_s, cfg.n_ticks)
+    if cfg.interp_streams:
+        v, obs = hz.harmonize_interp(raw, ticks, prev_value=state.prev_value,
+                                     prev_ts=state.prev_ts)
+    elif cfg.harmonize_method == "segment":
+        v, obs = hz.harmonize_segment(raw, ticks, cfg.tick_s, cfg.agg)
+    else:
+        v, obs = hz.harmonize(raw, ticks, cfg.tick_s, cfg.agg)
+    return v, obs, ticks
+
+
+def stage_anomaly(cfg: PipelineConfig, state, v, obs):
+    spikes = an.detect_zscore(v, obs, state.anomaly, cfg.k_sigma)
+    v, obs, replaced = an.replace(v, obs, spikes, state.anomaly,
+                                  cfg.anomaly_policy, cfg.k_sigma)
+    new_anom = an.update_state(state.anomaly, v, obs)
+    return v, obs, replaced, new_anom
+
+
+def stage_gapfill(cfg: PipelineConfig, state, v, obs, ticks):
+    tod = jnp.mod((ticks / cfg.tick_s).astype(jnp.int32), cfg.seasonal_slots)
+    return gf.gap_fill(v, obs, state.gapfill, ticks, cfg.gap_strategy,
+                       tick_of_day=tod)
+
+
+def stage_normalize(cfg: PipelineConfig, state, v, obs):
+    new_norm = nz.update(state.norm, v, obs)
+    return nz.znorm(new_norm, v), new_norm
+
+
+def stage_features(cfg: PipelineConfig, v_norm, v_raw, obs, filled, ticks):
+    mask = obs | filled
+    feats = agg.feature_vector(v_norm, mask, cfg.weights(),
+                               per_tick=cfg.per_tick_features)
+    raw = agg.feature_vector(v_raw, mask, cfg.weights(),
+                             per_tick=cfg.per_tick_features)
+    quality = obs.astype(jnp.float32).mean(axis=(1, 2))
+    return FeatureFrame(feats, raw, quality, ticks[:, -1])
+
+
+# ---------------------------------------------------------------------------
+# Fused tick
+# ---------------------------------------------------------------------------
+
+def tick(cfg: PipelineConfig, state: PipelineState, raw: RawWindow,
+         window_start):
+    """One full Percepta tick. Returns (new_state, FeatureFrame, TickFrame)."""
+    v, obs, ticks = stage_harmonize(cfg, state, raw, window_start)
+    v, obs, replaced, new_anom = stage_anomaly(cfg, state, v, obs)
+    v, filled, new_gap = stage_gapfill(cfg, state, v, obs, ticks)
+    v_norm, new_norm = stage_normalize(cfg, state, v, obs | filled)
+    features = stage_features(cfg, v_norm, v, obs, filled, ticks)
+
+    big = jnp.float32(3.4e38)
+    ts_b = jnp.where(raw.valid, raw.timestamps, -big).reshape(raw.values.shape)
+    last_ts = ts_b.max(-1)
+    has = last_ts > -big
+    is_last = (ts_b == last_ts[..., None]) & raw.valid
+    last_v = jnp.einsum("esm,esm->es", raw.values, is_last.astype(jnp.float32)) \
+        / jnp.maximum(is_last.sum(-1), 1)
+    new_state = PipelineState(
+        gapfill=new_gap, anomaly=new_anom, norm=new_norm,
+        prev_value=jnp.where(has, last_v, state.prev_value),
+        prev_ts=jnp.where(has, last_ts, state.prev_ts),
+        tick_index=state.tick_index + 1,
+    )
+    frame = TickFrame(v, obs, filled, replaced)
+    return new_state, features, frame
+
+
+class PerceptaPipeline:
+    """User-facing handle; ``mode`` selects fused vs paper-faithful modular."""
+
+    def __init__(self, cfg: PipelineConfig, mode: str = "fused",
+                 donate: bool = False):
+        # donate=True requires the caller's state pytree to have distinct
+        # buffers per leaf (fresh init_state shares zero pages)
+        self.cfg = cfg
+        self.mode = mode
+        tickf = functools.partial(tick, cfg)
+        self._fused = jax.jit(tickf, donate_argnums=(0,) if donate else ())
+        # modular: one jit per module, host transitions in between — the
+        # architecture exactly as drawn (baseline for §Perf)
+        self._m_harm = jax.jit(functools.partial(stage_harmonize, cfg))
+        self._m_anom = jax.jit(functools.partial(stage_anomaly, cfg))
+        self._m_gap = jax.jit(functools.partial(stage_gapfill, cfg))
+        self._m_norm = jax.jit(functools.partial(stage_normalize, cfg))
+        self._m_feat = jax.jit(functools.partial(stage_features, cfg))
+
+    def init_state(self):
+        return init_state(self.cfg)
+
+    def run_tick(self, state, raw: RawWindow, window_start):
+        if self.mode == "fused":
+            return self._fused(state, raw, window_start)
+        # modular: each stage returns to host before the next is dispatched
+        v, obs, ticks = jax.block_until_ready(
+            self._m_harm(state, raw, window_start))
+        v, obs, replaced, new_anom = jax.block_until_ready(
+            self._m_anom(state, v, obs))
+        v, filled, new_gap = jax.block_until_ready(
+            self._m_gap(state, v, obs, ticks))
+        v_norm, new_norm = jax.block_until_ready(
+            self._m_norm(state, v, obs | filled))
+        features = jax.block_until_ready(
+            self._m_feat(v_norm, v, obs, filled, ticks))
+        big = jnp.float32(3.4e38)
+        ts_b = jnp.where(raw.valid, raw.timestamps, -big)
+        last_ts = ts_b.max(-1)
+        has = last_ts > -big
+        is_last = (ts_b == last_ts[..., None]) & raw.valid
+        last_v = jnp.einsum("esm,esm->es", raw.values,
+                            is_last.astype(jnp.float32)) / \
+            jnp.maximum(is_last.sum(-1), 1)
+        new_state = PipelineState(
+            gapfill=new_gap, anomaly=new_anom, norm=new_norm,
+            prev_value=jnp.where(has, last_v, state.prev_value),
+            prev_ts=jnp.where(has, last_ts, state.prev_ts),
+            tick_index=state.tick_index + 1,
+        )
+        return new_state, features, TickFrame(v, obs, filled, replaced)

@@ -1,0 +1,94 @@
+"""Experience storage for retraining — on-device ring buffer + anonymization.
+
+"...storing the necessary data for model retraining in the future,
+anonymizing it and delivering it to the node responsible for training."
+
+The buffer is a fixed-capacity ring over (obs, action, reward, next_obs,
+tick_time) batched across environments, living on device (shardable over the
+env dim). ``anonymize`` applies a salted hash to environment identities so
+exported datasets can't be joined back to buildings.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayBuffer(NamedTuple):
+    obs: jax.Array        # (E, C, F)
+    actions: jax.Array    # (E, C, A)
+    rewards: jax.Array    # (E, C)
+    next_obs: jax.Array   # (E, C, F)
+    times: jax.Array      # (E, C)
+    cursor: jax.Array     # () int32 — total ticks written (ring position)
+
+    @property
+    def capacity(self):
+        return self.obs.shape[1]
+
+    def size(self):
+        return jnp.minimum(self.cursor, self.capacity)
+
+
+def init(E, capacity, n_features, n_actions) -> ReplayBuffer:
+    return ReplayBuffer(
+        obs=jnp.zeros((E, capacity, n_features), jnp.float32),
+        actions=jnp.zeros((E, capacity, n_actions), jnp.float32),
+        rewards=jnp.zeros((E, capacity), jnp.float32),
+        next_obs=jnp.zeros((E, capacity, n_features), jnp.float32),
+        times=jnp.zeros((E, capacity), jnp.float32),
+        cursor=jnp.zeros((), jnp.int32),
+    )
+
+
+def add(buf: ReplayBuffer, obs, actions, rewards, next_obs, times) -> ReplayBuffer:
+    """Write one tick for every env at the ring position (jit-safe)."""
+    i = jnp.mod(buf.cursor, buf.capacity)
+    upd = lambda b, x: b.at[:, i].set(x.astype(b.dtype))
+    return ReplayBuffer(
+        obs=upd(buf.obs, obs),
+        actions=upd(buf.actions, actions),
+        rewards=upd(buf.rewards, rewards),
+        next_obs=upd(buf.next_obs, next_obs),
+        times=upd(buf.times, times),
+        cursor=buf.cursor + 1,
+    )
+
+
+def sample(buf: ReplayBuffer, rng, batch: int):
+    """Uniform sample of (env, slot) transitions for retraining."""
+    E = buf.obs.shape[0]
+    n = jnp.maximum(buf.size(), 1)
+    ke, ks = jax.random.split(rng)
+    es = jax.random.randint(ke, (batch,), 0, E)
+    ss = jax.random.randint(ks, (batch,), 0, n)
+    take = lambda x: x[es, ss]
+    return {"obs": take(buf.obs), "actions": take(buf.actions),
+            "rewards": take(buf.rewards), "next_obs": take(buf.next_obs),
+            "times": take(buf.times)}
+
+
+def anonymize_env_ids(env_ids, salt: str) -> list:
+    """Salted-hash pseudonyms for export (host-side; not jit)."""
+    out = []
+    for e in env_ids:
+        h = hashlib.sha256((salt + "::" + str(e)).encode()).hexdigest()[:16]
+        out.append(f"env-{h}")
+    return out
+
+
+def export_for_training(buf: ReplayBuffer, env_ids, salt: str) -> dict:
+    """Materialize an anonymized dataset dict (host-side)."""
+    import numpy as np
+    n = int(buf.size())
+    return {
+        "env_ids": anonymize_env_ids(env_ids, salt),
+        "obs": np.asarray(buf.obs[:, :n]),
+        "actions": np.asarray(buf.actions[:, :n]),
+        "rewards": np.asarray(buf.rewards[:, :n]),
+        "next_obs": np.asarray(buf.next_obs[:, :n]),
+        "times": np.asarray(buf.times[:, :n]),
+    }

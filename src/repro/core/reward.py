@@ -1,0 +1,87 @@
+"""Reward computation — Percepta's RL-specific contribution.
+
+"Percepta is designed to ... computing reward functions directly from
+real-world interactions at each edge device."
+
+Rewards are declared as a list of :class:`RewardTerm` (weighted references
+to feature/action indices with a shape function) compiled into one
+vectorized evaluation over all environments per tick. The OPEVA energy
+use-case rewards (grid-import cost, comfort band, export gain, action
+smoothness) are expressible directly; ``custom`` takes any jnp-traceable fn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("linear", "abs_error", "quadratic_error", "band_penalty",
+         "threshold_bonus", "action_smoothness", "custom")
+
+
+@dataclass(frozen=True)
+class RewardTerm:
+    kind: str
+    weight: float = 1.0
+    feature: int = 0              # feature index the term reads
+    action: Optional[int] = None  # action index (for action-dependent terms)
+    target: float = 0.0           # setpoint / threshold
+    band: float = 0.0             # tolerance band half-width
+    fn: Optional[Callable] = None # custom: fn(features, actions, prev_actions)->(E,)
+
+    def evaluate(self, features, actions, prev_actions):
+        f = features[:, self.feature]
+        a = actions[:, self.action] if self.action is not None else 0.0
+        if self.kind == "linear":
+            return self.weight * f
+        if self.kind == "abs_error":
+            return -self.weight * jnp.abs(f - self.target)
+        if self.kind == "quadratic_error":
+            return -self.weight * jnp.square(f - self.target)
+        if self.kind == "band_penalty":
+            over = jnp.maximum(jnp.abs(f - self.target) - self.band, 0.0)
+            return -self.weight * over
+        if self.kind == "threshold_bonus":
+            return self.weight * (f > self.target).astype(jnp.float32)
+        if self.kind == "action_smoothness":
+            pa = prev_actions[:, self.action]
+            return -self.weight * jnp.square(actions[:, self.action] - pa)
+        if self.kind == "custom":
+            return self.weight * self.fn(features, actions, prev_actions)
+        raise ValueError(self.kind)
+
+
+@dataclass(frozen=True)
+class RewardSpec:
+    terms: tuple
+
+    def compute(self, features, actions, prev_actions=None):
+        """features (E, F), actions (E, A) -> (total (E,), per_term (E, K))."""
+        if prev_actions is None:
+            prev_actions = jnp.zeros_like(actions)
+        per = jnp.stack([t.evaluate(features, actions, prev_actions)
+                         for t in self.terms], axis=-1)
+        return per.sum(-1), per
+
+
+def energy_reward_spec(price_idx: int, grid_idx: int, temp_idx: int,
+                       comfort_target: float = 21.0, comfort_band: float = 1.5,
+                       hvac_action: int = 0) -> RewardSpec:
+    """The OPEVA building-energy reward: cost + comfort + smoothness."""
+    return RewardSpec(terms=(
+        RewardTerm("custom", weight=1.0, fn=lambda f, a, p:
+                   -f[:, price_idx] * jnp.maximum(f[:, grid_idx], 0.0)),
+        RewardTerm("band_penalty", weight=2.0, feature=temp_idx,
+                   target=comfort_target, band=comfort_band),
+        RewardTerm("action_smoothness", weight=0.1, action=hvac_action),
+    ))
+
+
+def validate_actions(actions, low, high):
+    """The Predictor "validates" decisions before forwarding: clamp into the
+    actuator envelope and flag violations. Returns (clamped, violated (E,))."""
+    clamped = jnp.clip(actions, low, high)
+    violated = jnp.any((actions < low) | (actions > high), axis=-1)
+    return clamped, violated

@@ -1,0 +1,110 @@
+"""Deterministic, resumable training-data pipeline.
+
+Batches are generated from a seeded stream (synthetic LM token streams, or
+Percepta LogDB exports for the RL-retraining path). The pipeline's position
+is a single integer ``cursor`` saved in every checkpoint — restart resumes
+exactly-once at batch granularity, which is the stream-processing analogue
+of Percepta's "store for retraining, deliver to the training node".
+
+Double-buffered host->device staging overlaps batch synthesis with the
+device step (the classic input-pipeline optimization).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class StreamCursor:
+    batch_index: int = 0
+
+    def state_dict(self):
+        return {"batch_index": self.batch_index}
+
+    @staticmethod
+    def from_dict(d):
+        return StreamCursor(batch_index=int(d.get("batch_index", 0)))
+
+
+class SyntheticLMStream:
+    """Deterministic pseudo-corpus: tokens ~ per-batch seeded zipf-ish mix.
+
+    Every batch is a pure function of (seed, batch_index) — replaying after
+    restore produces bit-identical batches with no saved buffer state.
+    """
+
+    def __init__(self, vocab_size: int, batch: int, seq_len: int,
+                 seed: int = 0, frontend: str = "none", d_model: int = 0,
+                 n_patches: int = 0):
+        self.vocab = vocab_size
+        self.batch = batch
+        self.seq = seq_len
+        self.seed = seed
+        self.frontend = frontend
+        self.d_model = d_model
+        self.n_patches = n_patches
+
+    def make_batch(self, index: int) -> dict:
+        rng = np.random.RandomState((self.seed * 1_000_003 + index) % 2**31)
+        # mixture of a few "topics" to give learnable structure
+        n_topics = 8
+        topic = rng.randint(0, n_topics, (self.batch,))
+        base = (rng.randint(0, self.vocab // n_topics,
+                            (self.batch, self.seq))
+                + topic[:, None] * (self.vocab // n_topics)) % self.vocab
+        # local repetition structure (next-token is learnable)
+        rep = rng.rand(self.batch, self.seq) < 0.5
+        shifted = np.roll(base, 1, axis=1)
+        tokens = np.where(rep, shifted, base).astype(np.int32)
+        if self.frontend == "embeddings":
+            frames = rng.normal(0, 1, (self.batch, self.seq, self.d_model)
+                                ).astype(np.float32)
+            return {"frames": frames, "targets": tokens}
+        if self.frontend == "vlm":
+            st = self.seq - self.n_patches
+            patches = rng.normal(0, 1, (self.batch, self.n_patches,
+                                        self.d_model)).astype(np.float32)
+            return {"tokens": tokens[:, :st], "patches": patches,
+                    "targets": tokens[:, :st]}
+        return {"tokens": tokens, "targets": tokens}
+
+
+class Prefetcher:
+    """One-batch-ahead host prefetch with optional device placement."""
+
+    def __init__(self, stream: SyntheticLMStream, cursor: StreamCursor,
+                 shardings: Optional[dict] = None):
+        self.stream = stream
+        self.cursor = cursor
+        self.shardings = shardings
+        self._next = None
+        self._thread: Optional[threading.Thread] = None
+        self._prefetch()
+
+    def _make(self, idx):
+        batch = self.stream.make_batch(idx)
+        if self.shardings:
+            batch = {k: jax.device_put(v, self.shardings.get(k))
+                     for k, v in batch.items()}
+        return batch
+
+    def _prefetch(self):
+        idx = self.cursor.batch_index
+
+        def work():
+            self._next = self._make(idx)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def next(self) -> dict:
+        self._thread.join()
+        batch = self._next
+        self.cursor.batch_index += 1
+        self._prefetch()
+        return batch

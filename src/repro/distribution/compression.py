@@ -1,0 +1,70 @@
+"""Int8 error-feedback gradient compression.
+
+Before the gradient all-reduce/reduce-scatter, each leaf is quantized to
+int8 with a per-leaf scale; the quantization error is carried in an error-
+feedback buffer and added back next step (Seide et al. / EF-SGD), which
+keeps convergence while cutting gradient-sync bytes 4x (f32) / 2x (bf16).
+
+Integration: optimizer-side transform — ``compress_grads`` runs after the
+per-device grad computation; the psum/reduce-scatter then moves int8. On
+GSPMD the dtype of the all-reduced tensor is what determines link bytes, so
+quantize-before-sync is expressed by computing the sync on the int8 view.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: dict  # pytree of f32 error-feedback buffers
+
+
+def init_ef(params) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize(x):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g, err):
+    """Returns (int8 payload, scale, new_error). g, err: same shape f32."""
+    target = g.astype(jnp.float32) + err
+    q, scale = _quantize(target)
+    recon = _dequantize(q, scale)
+    return q, scale, target - recon
+
+
+def compress_grads(grads, ef: EFState) -> Tuple[dict, dict, EFState]:
+    """Compress every leaf. Returns (q_tree, scale_tree, new_ef)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef.error)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_leaf(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    un = lambda xs: jax.tree.unflatten(treedef, xs)
+    return un(qs), un(scales), EFState(error=un(errs))
+
+
+def decompress_grads(q_tree, scale_tree):
+    return jax.tree.map(_dequantize, q_tree, scale_tree)
+
+
+def roundtrip(grads, ef: EFState):
+    """compress -> (simulated sync) -> decompress, with error feedback."""
+    q, s, ef = compress_grads(grads, ef)
+    return decompress_grads(q, s), ef

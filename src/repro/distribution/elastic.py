@@ -1,0 +1,97 @@
+"""Elastic scaling + straggler mitigation (host-level policies).
+
+Elastic re-meshing: on restart after losing/gaining hosts, pick the largest
+(data', model) mesh that the surviving device count supports, keeping the
+model axis fixed (it must match the weight sharding factors) and shrinking
+the data axis — the checkpoint restores onto the new mesh because
+Checkpointer.restore re-places GLOBAL arrays with the new shardings. At
+1000+ node scale this is the "drain, re-mesh, resume from step N" recovery
+path; the batch size per step stays constant by raising grad-accumulation
+microbatches to cover the lost data-parallel rows.
+
+Straggler mitigation: a deadline monitor around the synchronous step. On
+TPU pods a straggling host stalls the collective; the mitigation at the
+framework level is (a) detect (step time > k x EWMA), (b) after M
+consecutive detections, treat the host as failed: checkpoint, drop it from
+the mesh (elastic path), resume. Both pieces are implemented host-side and
+unit-tested with a simulated slow worker.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int,
+                    multi_pod_at: int = 512) -> tuple:
+    """Largest usable (pod, data, model) given surviving devices."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model sharding {model_parallel} with {n_devices} devices")
+    data = n_devices // model_parallel
+    if n_devices >= multi_pod_at and data % 2 == 0:
+        return (2, data // 2, model_parallel)
+    return (data, model_parallel)
+
+
+def rescale_microbatches(global_batch: int, old_data: int, new_data: int,
+                         old_micro: int) -> int:
+    """Keep the global batch constant when data-parallel width changes."""
+    per_row = global_batch // (old_data * old_micro)
+    need = global_batch // (new_data * per_row)
+    return max(1, need)
+
+
+@dataclass
+class StragglerPolicy:
+    """EWMA step-time deadline detector."""
+    k: float = 3.0                 # deadline = k * ewma
+    alpha: float = 0.2
+    consecutive_to_fail: int = 3
+    min_steps: int = 5
+    ewma: float = 0.0
+    steps: int = 0
+    strikes: int = 0
+    slow_events: int = 0
+
+    def observe(self, step_time_s: float) -> str:
+        """Returns 'ok' | 'slow' | 'fail' (fail => trigger elastic restart)."""
+        self.steps += 1
+        if self.steps <= self.min_steps:
+            self.ewma = step_time_s if self.ewma == 0.0 else \
+                (1 - self.alpha) * self.ewma + self.alpha * step_time_s
+            return "ok"
+        verdict = "ok"
+        if step_time_s > self.k * max(self.ewma, 1e-9):
+            self.strikes += 1
+            self.slow_events += 1
+            verdict = "slow"
+            if self.strikes >= self.consecutive_to_fail:
+                verdict = "fail"
+        else:
+            self.strikes = 0
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time_s
+        return verdict
+
+
+@dataclass
+class PreemptionGuard:
+    """SIGTERM-aware: cloud preemption sends SIGTERM before the kill."""
+    triggered: bool = False
+
+    def install(self):
+        import signal
+
+        def handler(signum, frame):
+            self.triggered = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not main thread (tests)
+        return self

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal (optionally sliding-window, softcapped) GQA
+attention — materializes the full score matrix; ground truth for the kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, window: int = 0, softcap: float = 0.0):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D); H % Hkv == 0. Causal."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = qi >= ki
+    if window:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vr.dtype), vr,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused bucketize+aggregate harmonization kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def harmonize_ref(values, timestamps, valid, t0, tick_s: float, n_ticks: int):
+    """Rows of raw samples -> tick means.
+
+    values/timestamps/valid: (R, M); t0: (R,) window starts.
+    Returns (out (R, T) bucket means, observed (R, T)).
+    """
+    rel = timestamps - t0[:, None]
+    idx = jnp.ceil(rel / tick_s).astype(jnp.int32) - 1
+    ok = valid & (idx >= 0) & (idx < n_ticks)
+    idx = jnp.clip(idx, 0, n_ticks - 1)
+    onehot = ((idx[:, :, None] == jnp.arange(n_ticks)) & ok[:, :, None]
+              ).astype(jnp.float32)                     # (R, M, T)
+    count = onehot.sum(1)
+    total = jnp.einsum("rm,rmt->rt", values.astype(jnp.float32), onehot)
+    observed = count > 0
+    return jnp.where(observed, total / jnp.maximum(count, 1.0), 0.0), observed

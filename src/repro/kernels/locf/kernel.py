@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: LOCF gap filling in one VMEM pass.
+
+The XLA associative_scan materializes O(log T) full-size intermediates in
+HBM; the kernel walks T once per (rows, T) tile with the carry in VREGs —
+the gap-fill stage becomes a single streaming read+write.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_BLK = 8
+
+
+def _kernel(values_ref, obs_ref, init_v_ref, init_h_ref, out_ref, has_ref):
+    R, T = values_ref.shape
+    v = values_ref[...].astype(jnp.float32)
+    o = obs_ref[...] > 0
+    carry_v = init_v_ref[...].astype(jnp.float32)   # (R, 1)
+    carry_h = init_h_ref[...] > 0
+
+    def body(t, carry):
+        cv, ch = carry
+        vt = v[:, t][:, None]
+        ot = o[:, t][:, None]
+        cv = jnp.where(ot, vt, cv)
+        ch = ch | ot
+        out_ref[:, t] = cv[:, 0]
+        has_ref[:, t] = ch[:, 0].astype(jnp.float32)
+        return cv, ch
+
+    jax.lax.fori_loop(0, T, body, (carry_v, carry_h))
+
+
+def locf_pallas(values, observed, init_value, init_has, *,
+                interpret: bool = True):
+    """values/observed: (R, T) f32; init_value/init_has: (R, 1) f32."""
+    R, T = values.shape
+    assert R % ROWS_BLK == 0
+    out, has = pl.pallas_call(
+        _kernel,
+        grid=(R // ROWS_BLK,),
+        in_specs=[
+            pl.BlockSpec((ROWS_BLK, T), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, T), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS_BLK, T), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, T), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, T), jnp.float32),
+            jax.ShapeDtypeStruct((R, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, observed, init_value, init_has)
+    return out, has > 0

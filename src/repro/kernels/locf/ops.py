@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the LOCF kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.locf.kernel import ROWS_BLK, locf_pallas
+from repro.kernels.locf.ref import locf_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def locf(values, observed, init_value, init_has, *, use_pallas: bool = True,
+         interpret: bool = True):
+    """Batched entry: (E, S, T) + carry (E, S). Returns (filled, has)."""
+    E, S, T = values.shape
+    v = values.reshape(E * S, T).astype(jnp.float32)
+    o = observed.reshape(E * S, T).astype(jnp.float32)
+    iv = init_value.reshape(E * S, 1).astype(jnp.float32)
+    ih = init_has.reshape(E * S, 1).astype(jnp.float32)
+    if not use_pallas:
+        out, has = locf_ref(v, o > 0, iv[:, 0], ih[:, 0] > 0)
+    else:
+        pad = (-v.shape[0]) % ROWS_BLK
+        if pad:
+            zp = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
+            v, o, iv, ih = zp(v), zp(o), zp(iv), zp(ih)
+        out, has = locf_pallas(v, o, iv, ih, interpret=interpret)
+        if pad:
+            out, has = out[:E * S], has[:E * S]
+    return out.reshape(E, S, T), has.reshape(E, S, T)

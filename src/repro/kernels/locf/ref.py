@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the LOCF (last-observation-carried-forward) kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def locf_ref(values, observed, init_value, init_has):
+    """Carry the latest observation along the tick axis.
+
+    values/observed: (R, T); init_value/init_has: (R,) carry-in from the
+    previous window. Returns (filled (R, T), has (R, T)).
+    """
+    v = jnp.concatenate([init_value[:, None], values], axis=1)
+    o = jnp.concatenate([init_has[:, None], observed], axis=1)
+
+    def combine(a, b):
+        av, ao = a
+        bv, bo = b
+        return jnp.where(bo, bv, av), ao | bo
+
+    cv, co = jax.lax.associative_scan(combine, (v, o), axis=1)
+    return cv[:, 1:], co[:, 1:]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t.
+
+The recurrence is sequential in T but perfectly parallel over (batch,
+channel). Tiling: grid (B, W/128) — each kernel instance owns a (T, 128)
+channel stripe in VMEM and walks T with a fori_loop, so HBM sees a single
+streaming read of a/b and write of h (the XLA associative_scan path
+materializes O(log T) intermediate full-size arrays instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _kernel(a_ref, b_ref, h0_ref, out_ref, hlast_ref):
+    T = a_ref.shape[1]
+    a = a_ref[0].astype(jnp.float32)        # (T, W_blk)
+    b = b_ref[0].astype(jnp.float32)
+    h0 = h0_ref[0].astype(jnp.float32)      # (1, W_blk)
+
+    def body(t, h):
+        h = a[t][None, :] * h + b[t][None, :]
+        out_ref[0, t, :] = h[0]
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h0.reshape(1, -1))
+    hlast_ref[0, :] = h[0]
+
+
+def rglru_scan_pallas(a, b, h0, *, interpret: bool = True):
+    """a, b: (B, T, W); h0: (B, W). W % 128 == 0 (pad upstream)."""
+    B, T, W = a.shape
+    assert W % LANES == 0, W
+    grid = (B, W // LANES)
+    out, hlast = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, LANES), lambda bi, wi: (bi, 0, wi)),
+            pl.BlockSpec((1, T, LANES), lambda bi, wi: (bi, 0, wi)),
+            pl.BlockSpec((1, LANES), lambda bi, wi: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, LANES), lambda bi, wi: (bi, 0, wi)),
+            pl.BlockSpec((1, LANES), lambda bi, wi: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, h0)
+    return out, hlast

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t. a, b: (B, T, W) f32; h0: (B, W).
+
+    Returns (hs (B, T, W), h_last (B, W)). Plain sequential reference.
+    """
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = a.transpose(1, 0, 2)
+    b_t = b.transpose(1, 0, 2)
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                              (a_t.astype(jnp.float32), b_t.astype(jnp.float32)))
+    return hs.transpose(1, 0, 2), h_last

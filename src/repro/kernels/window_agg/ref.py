@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused window-stats + anomaly-mask kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+N_STATS = 8  # mean, var, min, max, last, count, sum, anomaly_count
+
+
+def window_agg_ref(values, mask, state_mean, state_var, k_sigma: float):
+    """values/mask: (R, T) f32/bool rows; state_mean/var: (R,).
+
+    Returns (stats (R, N_STATS) f32, spikes (R, T) bool) where stats columns
+    are [mean, var, min, max, last, count, sum, n_spikes] over masked ticks.
+    Spikes are z-score outliers against the carried running stats.
+    """
+    values = values.astype(jnp.float32)
+    w = mask.astype(jnp.float32)
+    n = w.sum(-1)
+    s = (values * w).sum(-1)
+    mean = s / jnp.maximum(n, 1.0)
+    var = (jnp.square(values - mean[:, None]) * w).sum(-1) / jnp.maximum(n, 1.0)
+    big = jnp.float32(3.4e38)
+    vmin = jnp.min(jnp.where(mask, values, big), -1)
+    vmax = jnp.max(jnp.where(mask, values, -big), -1)
+    T = values.shape[-1]
+    idx = jnp.where(mask, jnp.arange(T), -1).max(-1)
+    last = jnp.take_along_axis(values, jnp.maximum(idx, 0)[:, None], -1)[:, 0]
+    last = jnp.where(idx >= 0, last, 0.0)
+    vmin = jnp.where(n > 0, vmin, 0.0)
+    vmax = jnp.where(n > 0, vmax, 0.0)
+
+    sigma = jnp.sqrt(jnp.maximum(state_var, 1e-12))
+    z = jnp.abs(values - state_mean[:, None]) / sigma[:, None]
+    spikes = mask & (z > k_sigma)
+    stats = jnp.stack([mean, var, vmin, vmax, last, n, s,
+                       spikes.sum(-1).astype(jnp.float32)], axis=-1)
+    return stats, spikes

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step for train_4k,
+prefill for prefill_32k, decode_step for decode_32k / long_500k) against
+ShapeDtypeStruct inputs on the production mesh, compiles it, checks
+memory_analysis() fits v5e HBM, extracts the three roofline terms, and caches
+everything to experiments/dryrun/<cell>.json (resumable; EXPERIMENTS.md tables
+are generated from these files).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch all --multi-pod both      # full sweep
+  python -m repro.launch.dryrun ... --set seq_parallel=false --tag sp_off
+Cells are compiled in subprocesses (one per cell) so a 62-layer compile can't
+poison the sweep and memory is returned between cells.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh}{suffix}".replace("/", "_")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: list, tag: str) -> dict:
+    import jax
+
+    from repro.configs.base import SHAPES, ShardingConfig, apply_overrides
+    from repro.configs.registry import get_config
+    from repro.launch import roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    perf = apply_overrides(ShardingConfig(), overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    # gradient accumulation for the big models: bounds activation temps and
+    # engages the ZeRO-sharded f32 grad accumulator (see steps.build_train_step)
+    from repro.configs.base import TrainConfig
+    nmicro = 4 if cfg.param_count() > 1.2e10 else 1
+    nmicro = int(os.environ.get("REPRO_MICRO", nmicro))
+    tcfg = TrainConfig(microbatches=nmicro)
+
+    t0 = time.time()
+    fn, specs, shardings, model = build_step(shape.kind, cfg, shape, mesh,
+                                             perf, tcfg)
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(*specs)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    cell = roofline.terms_from_compiled(compiled, n_dev)
+    mf = roofline.model_flops(cfg, shape)
+    cell.update({
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "tag": tag,
+        "kind": shape.kind,
+        "overrides": list(overrides),
+        "n_params": model.param_count(),
+        "n_params_active": cfg.active_param_count(),
+        "model_flops": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    })
+    cell["useful_flops_ratio"] = (
+        cell["model_flops_per_dev"] / cell["hlo_flops_per_dev"]
+        if cell["hlo_flops_per_dev"] else 0.0)
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: cell[k])
+    cell["dominant"] = dom[:-2]
+    # ideal step time: compute-ideal for train/prefill; decode additionally
+    # must stream (params + KV cache) through HBM once per token
+    ideal = cell["model_flops_per_dev"] / roofline.PEAK_FLOPS
+    if shape.kind == "decode":
+        import repro.models.param as Pm
+        pbytes = Pm.bytes_of(model.param_defs())
+        cbytes = Pm.bytes_of(model.cache_defs(shape.global_batch, shape.seq_len))
+        ideal = max(ideal, (pbytes + cbytes) / n_dev / roofline.HBM_BW)
+        cell["min_traffic_bytes_per_dev"] = (pbytes + cbytes) / n_dev
+    cell["ideal_s"] = ideal
+    cell["microbatches"] = nmicro if shape.kind == "train" else 1
+    cell["roofline_fraction"] = ideal / cell[dom] if cell[dom] > 0 else 0.0
+    return cell
+
+
+def sweep(args) -> int:
+    """Spawn one subprocess per cell; cache results; return #failures."""
+    from repro.configs.base import shapes_for, skipped_shapes_for
+    from repro.configs.registry import ARCH_IDS, get_config
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = shapes_for(cfg) if args.shape == "all" else {args.shape: None}
+        if args.shape == "all":
+            for sname in skipped_shapes_for(cfg):
+                path = OUT_DIR / f"{cell_id(arch, sname, False, args.tag)}.json"
+                if not path.exists():
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": sname, "skipped": True,
+                        "reason": "long_500k requires sub-quadratic attention; "
+                                  "arch has full-attention layers (DESIGN.md)"},
+                        indent=1))
+        for sname in shapes:
+            for mp in pods:
+                cid = cell_id(arch, sname, mp, args.tag)
+                path = OUT_DIR / f"{cid}.json"
+                if path.exists() and not args.force:
+                    print(f"[skip cached] {cid}", flush=True)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", sname,
+                       "--multi-pod", "multi" if mp else "single",
+                       "--tag", args.tag, "--one-cell"]
+                for ov in args.set or []:
+                    cmd += ["--set", ov]
+                if args.force:
+                    cmd += ["--force"]
+                print(f"[compile] {cid} ...", flush=True)
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=args.timeout)
+                dt = time.time() - t0
+                if r.returncode != 0:
+                    failures += 1
+                    err = (r.stderr or r.stdout).strip().splitlines()
+                    print(f"[FAIL {dt:.0f}s] {cid}\n  " + "\n  ".join(err[-18:]),
+                          flush=True)
+                    (OUT_DIR / f"{cid}.FAILED").write_text(
+                        r.stderr[-20000:] if r.stderr else r.stdout[-20000:])
+                else:
+                    print(f"[ok {dt:.0f}s] {cid}", flush=True)
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="ShardingConfig override key=value (repeatable)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--one-cell", action="store_true",
+                    help="run exactly one cell in-process (internal)")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if not args.one_cell:
+        n_fail = sweep(args)
+        print(f"sweep done, {n_fail} failures")
+        sys.exit(1 if n_fail else 0)
+
+    assert args.arch != "all" and args.shape != "all"
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    cid = cell_id(args.arch, args.shape, args.multi_pod == "multi", args.tag)
+    path = OUT_DIR / f"{cid}.json"
+    if path.exists() and not args.force:
+        print(f"cached: {path}")
+        return
+    try:
+        cell = run_cell(args.arch, args.shape, args.multi_pod == "multi",
+                        args.set, args.tag)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    path.write_text(json.dumps(cell, indent=1, default=str))
+    from repro.launch import roofline as rl
+    print(f"{cid}: {rl.summarize(cell)}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

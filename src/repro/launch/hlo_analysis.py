@@ -1,0 +1,449 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — with
+``lax.scan`` over layer groups (which we need to keep 1-core compile times
+bounded) that undercounts FLOPs/bytes/collectives by ~n_layers x. This module
+re-derives the three roofline inputs by walking the scheduled HLO text with
+trip-count multiplication:
+
+  * computations are parsed into (name -> instructions) with a shape table;
+  * ``while`` ops multiply their body+condition cost by the trip count from
+    ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the largest
+    s32 constant in the condition computation, else 1);
+  * FLOPs: ``dot`` = 2 * result_elems * K (K = product of lhs contracting
+    dims), ``convolution`` = 2 * result_elems * prod(kernel dims)/out_feat,
+    everything else = result_elems (elementwise approximation — matches
+    XLA's own accounting to within noise at transformer scales);
+  * bytes: operands + result of every *scheduled* op (fusion call sites count
+    their operands/result; fused interiors are free — post-fusion this is the
+    HBM-traffic model XLA itself uses);
+  * collectives: ring-model link bytes (see launch/roofline.py) accumulated
+    with the enclosing trip product.
+
+Everything is per-device (the text is the per-partition module).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"            # result name
+    # type: tuple (may contain /*index=k*/ comments; one nesting level) or array
+    r"((?:\((?:[^()]|\([^()]*\))*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\("                                       # opcode
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"=:{\s]+n[\\":\s]+(\d+)')
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_LCD_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota"}
+
+# Fusion-optimistic HBM-traffic model: only ops that materialize buffers on
+# a TPU (where elementwise chains fuse into their producers/consumers) count
+# bytes. The CPU-backend HLO we analyze is less fused than TPU output would
+# be; charging bytes to every unfused convert/add would overstate the memory
+# term ~5x. Elementwise ops still count their (cheap) flops.
+_BYTES_OPS = {
+    "dot", "convolution", "fusion", "copy", "slice", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "reduce", "reduce-window",
+    "sort", "concatenate", "pad", "select-and-scatter", "custom-call",
+    "cholesky", "triangular-solve", "transpose",
+}
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems(type_str: str) -> int:
+    total = 0
+    for _, shape in _shapes_in(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        k: 0.0 for k in _COLLECTIVES})
+    coll_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_count += other.coll_count * mult
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if line.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                ins = Instr(m.group(1), m.group(2), m.group(3), line)
+                cur.instrs.append(ins)
+                cur.shapes[ins.name] = ins.type_str
+    return comps, entry
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        return max(1, len(ids))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    return default
+
+
+def _link_bytes(op: str, payload: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return payload * (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * payload * (n - 1) / n
+    if op == "reduce-scatter":
+        return payload * (n - 1)
+    if op == "all-to-all":
+        return payload * (n - 1) / n
+    return float(payload)  # collective-permute
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res_elems = _elems(ins.type_str)
+    # operand 0 (lhs) name: first %ref inside parens after opcode
+    paren = ins.line.split(ins.opcode + "(", 1)[1]
+    ops = _OPERAND_RE.findall(paren)
+    k = 1
+    m = _LCD_RE.search(ins.line)
+    if m and ops:
+        lhs_type = comp.shapes.get(ops[0])
+        if lhs_type:
+            shapes = _shapes_in(lhs_type)
+            if shapes:
+                lhs_shape = shapes[0][1]
+                for d in (m.group(1).split(",") if m.group(1) else []):
+                    di = int(d)
+                    if di < len(lhs_shape):
+                        k *= lhs_shape[di]
+    return 2.0 * res_elems * max(k, 1)
+
+
+class Analyzer:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self._memo: Dict[str, Cost] = {}
+
+    def trip_count(self, ins: Instr) -> int:
+        m = _TRIP_RE.search(ins.line)
+        if m:
+            return int(m.group(1))
+        mc = _COND_RE.search(ins.line)
+        if mc and mc.group(1) in self.comps:
+            consts = []
+            for i2 in self.comps[mc.group(1)].instrs:
+                consts += [int(x) for x in _CONST_RE.findall(i2.line)]
+            if consts:
+                return max(consts)
+        return 1
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break recursion defensively
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[name]
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.opcode
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                payload = _type_bytes(ins.type_str)
+                if op.endswith("-start"):
+                    shapes = _shapes_in(ins.type_str)
+                    if len(shapes) > 1:
+                        dt, shape = shapes[-1]
+                        n = 1
+                        for d in shape:
+                            n *= d
+                        payload = n * _DTYPE_BYTES[dt]
+                n = _group_size(ins.line, self.n_devices)
+                total.coll[base_op] += _link_bytes(base_op, payload, n)
+                total.coll_count += 1
+                total.bytes += _type_bytes(ins.type_str)
+                continue
+            if op.endswith("-done"):
+                continue
+            if op == "while":
+                trips = self.trip_count(ins)
+                mb = _BODY_RE.search(ins.line)
+                mc = _COND_RE.search(ins.line)
+                if mb:
+                    total.add(self.comp_cost(mb.group(1)), trips)
+                if mc:
+                    total.add(self.comp_cost(mc.group(1)), trips)
+                continue
+            if op == "fusion":
+                mcall = _CALLS_RE.search(ins.line)
+                if mcall:
+                    inner = self.comp_cost(mcall.group(1))
+                    total.flops += inner.flops  # dots inside fusions
+                total.bytes += self._fusion_bytes(ins, mcall, comp)
+                total.flops += _elems(ins.type_str)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for cname in _CALLS_RE.findall(ins.line):
+                    total.add(self.comp_cost(cname))
+                total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op == "dot":
+                total.flops += _dot_flops(ins, comp)
+                total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op == "convolution":
+                total.flops += 2.0 * _elems(ins.type_str) * 64  # coarse
+                total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op in _NO_BYTES_OPS:
+                continue
+            # generic op: elementwise flops; bytes only if it materializes
+            total.flops += _elems(ins.type_str)
+            if op in _BYTES_OPS:
+                total.bytes += self._io_bytes(ins, comp)
+        self._memo[name] = total
+        return total
+
+    def _fusion_bytes(self, ins: Instr, mcall, comp: Computation) -> float:
+        """HBM traffic of a fusion, slice-access aware.
+
+        Two patterns dominate scan-heavy modules and must NOT be charged at
+        full-buffer size:
+          * slice-read:  the fusion reads ONE layer's window of a stacked
+            (L, ...) param/cache via an inner dynamic-slice;
+          * in-place update (root dynamic-update-slice of the result shape):
+            writes ONE slice of an aliased ys/cache buffer.
+        Operands are matched to inner ``parameter(i)`` positions; operands
+        accessed only through inner dynamic-slices are charged the slice
+        window, everything else full size.
+        """
+        inner = self.comps.get(mcall.group(1)) if mcall else None
+        try:
+            paren = ins.line.split(ins.opcode + "(", 1)[1].split(")", 1)[0]
+            operands = _OPERAND_RE.findall(paren)
+        except IndexError:
+            return float(_type_bytes(ins.type_str))
+        if inner is None:
+            return self._io_bytes(ins, comp)
+
+        # inner parameter name -> operand index
+        pidx = {}
+        for i2 in inner.instrs:
+            if i2.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i2.line)
+                if m:
+                    pidx[i2.name] = int(m.group(1))
+        slice_access: dict = {}   # operand index -> window bytes
+        dus_update_bytes = None
+        out_dims = [s for _, s in _shapes_in(ins.type_str)]
+        for i2 in inner.instrs:
+            if i2.opcode in ("dynamic-slice", "slice", "gather"):
+                try:
+                    p2 = i2.line.split(i2.opcode + "(", 1)[1].split(")", 1)[0]
+                    ops2 = _OPERAND_RE.findall(p2)
+                except IndexError:
+                    continue
+                if ops2 and ops2[0] in pidx:
+                    oi = pidx[ops2[0]]
+                    slice_access[oi] = slice_access.get(oi, 0.0) \
+                        + _type_bytes(i2.type_str)
+            if i2.opcode == "dynamic-update-slice" \
+                    and [s for _, s in _shapes_in(i2.type_str)] == out_dims:
+                try:
+                    p2 = i2.line.split("dynamic-update-slice(", 1)[1] \
+                        .split(")", 1)[0]
+                    ops2 = _OPERAND_RE.findall(p2)
+                except IndexError:
+                    ops2 = []
+                if len(ops2) > 1 and ops2[1] in inner.shapes:
+                    dus_update_bytes = _type_bytes(inner.shapes[ops2[1]])
+
+        # result side
+        b = float(2.0 * dus_update_bytes if dus_update_bytes is not None
+                  else _type_bytes(ins.type_str))
+        # operand side
+        for i, opnd in enumerate(operands):
+            t = comp.shapes.get(opnd)
+            if t is None:
+                continue
+            full = _type_bytes(t)
+            if i in slice_access:
+                b += min(slice_access[i], full)
+            elif dus_update_bytes is not None \
+                    and [s for _, s in _shapes_in(t)] == out_dims:
+                continue  # the aliased in-place buffer: already charged
+            else:
+                b += full
+        return b
+
+    def _io_bytes(self, ins: Instr, comp: Computation) -> float:
+        """HBM traffic of one scheduled op.
+
+        Sliced accesses are charged their SLICE, not the whole operand:
+        an in-place dynamic-update-slice on a donated KV cache touches one
+        token's rows, not the 4 GB buffer (charging the buffer would claim a
+        33B decode step moves ~200 GB). dynamic-slice/gather similarly read
+        only their result-sized window.
+        """
+        b = float(_type_bytes(ins.type_str))
+        op = ins.opcode
+        if op in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * b  # read window ~= result + write result
+        try:
+            paren = ins.line.split(ins.opcode + "(", 1)[1]
+            # cut attrs off at '), ' boundary to avoid matching comp names
+            paren = paren.split(")", 1)[0]
+        except IndexError:
+            return b
+        operands = _OPERAND_RE.findall(paren)
+        if op in ("dynamic-update-slice", "scatter"):
+            # update (operand 1 for DUS, 2 for scatter) read+written in place
+            idx = 1 if op == "dynamic-update-slice" else 2
+            if len(operands) > idx:
+                t = comp.shapes.get(operands[idx])
+                if t:
+                    return 2.0 * _type_bytes(t)
+            return b
+        for opnd in operands:
+            t = comp.shapes.get(opnd)
+            if t:
+                b += _type_bytes(t)
+        return b
+
+    def analyze(self) -> dict:
+        cost = self.comp_cost(self.entry) if self.entry else Cost()
+        coll_total = sum(cost.coll.values())
+        return {
+            "flops": cost.flops,
+            "bytes": cost.bytes,
+            "collective_link_bytes": coll_total,
+            "collectives": dict(cost.coll, count=cost.coll_count,
+                                total=coll_total),
+        }
+
+
+def analyze_hlo(text: str, n_devices: int) -> dict:
+    return Analyzer(text, n_devices).analyze()
+
+
+def cpu_bf16_upcast_bytes(text: str, min_bytes: int = 32 * 2**20) -> int:
+    """Bytes of f32 temp copies that exist ONLY because the CPU backend
+    legalizes bf16 compute to f32.
+
+    The pre-optimization module is pure bf16 for these tensors (verified via
+    --xla_dump_to); XLA:CPU then inserts whole-buffer `f32 convert(bf16)`
+    round-trips for loop-carried caches and weight stacks. XLA:TPU consumes
+    bf16 natively in the MXU and does not materialize these. We count every
+    large `f32[dims] convert(x)` whose operand is bf16 with identical dims —
+    the dry-run reports HBM fit both raw and adjusted by this amount.
+    """
+    comps, _ = parse_module(text)
+    total = 0
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode != "convert":
+                continue
+            shapes = _shapes_in(ins.type_str)
+            if len(shapes) != 1 or shapes[0][0] != "f32":
+                continue
+            n = 1
+            for d in shapes[0][1]:
+                n *= d
+            if n * 4 < min_bytes:
+                continue
+            paren = ins.line.split("convert(", 1)[1].split(")", 1)[0]
+            ops = _OPERAND_RE.findall(paren)
+            if not ops:
+                continue
+            src = comp.shapes.get(ops[0], "")
+            src_shapes = _shapes_in(src)
+            if len(src_shapes) == 1 and src_shapes[0][0] == "bf16" \
+                    and src_shapes[0][1] == shapes[0][1]:
+                total += n * 4
+    return total

@@ -1,0 +1,38 @@
+"""Production mesh construction (function, never module-level state).
+
+Single pod : (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Importing this module never touches jax device state; ``make_production_mesh``
+slices ``jax.devices()`` explicitly so a 512-virtual-device dry-run process
+can also build the 256-device single-pod mesh.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)}; the dry-run "
+            "entrypoint must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """A 1x1 mesh over the single real CPU device (smoke tests)."""
+    import numpy as np
+    dev = np.asarray(jax.devices()[:1]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))

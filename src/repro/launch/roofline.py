@@ -1,0 +1,173 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (per-device, which for
+uniform SPMD equals the global formulae in the brief):
+
+  compute    = HLO_FLOPs_per_dev / PEAK_FLOPS        (cost_analysis 'flops')
+  memory     = HLO_bytes_per_dev / HBM_BW            (cost_analysis 'bytes accessed')
+  collective = link_bytes_per_dev / ICI_BW           (parsed from compiled HLO)
+
+cost_analysis() is per-device post-SPMD (verified against a hand-sharded
+matmul). Collective link-bytes use ring-algorithm multipliers on the result
+shape with the group size n parsed from replica_groups:
+  all-gather: out*(n-1)/n        all-reduce: 2*out*(n-1)/n
+  reduce-scatter: out*(n-1)      all-to-all: out*(n-1)/n
+  collective-permute: out
+(reduce-scatter's input is n x its output, hence (n-1) on the output.)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+16 GiB HBM per chip.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 1024**3
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^()]*(?:\([^()]*\)[^()]*)*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(type_str: str, last_only: bool) -> int:
+    shapes = _SHAPE_RE.findall(type_str)
+    if not shapes:
+        return 0
+    if last_only and len(shapes) > 1:
+        shapes = shapes[-1:]
+    total = 0
+    for dt, dims in shapes:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        return max(1, len(ids))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    return default
+
+
+def collective_link_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device bytes over ICI links, by collective kind + total."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        is_start = m.group("start") is not None
+        payload = _type_bytes(m.group("type"), last_only=is_start)
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            b = payload * (n - 1) / n
+        elif op == "all-reduce":
+            b = 2.0 * payload * (n - 1) / n
+        elif op == "reduce-scatter":
+            b = payload * (n - 1)
+        elif op == "all-to-all":
+            b = payload * (n - 1) / n
+        else:  # collective-permute
+            b = float(payload)
+        out[op] += b
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items() if k not in ("count", "total"))
+    return out
+
+
+def terms_from_compiled(compiled, n_devices: int) -> dict:
+    from repro.launch import hlo_analysis
+    text = compiled.as_text()
+    hlo = hlo_analysis.analyze_hlo(text, n_devices)
+    flops = float(hlo["flops"])
+    bytes_acc = float(hlo["bytes"])
+    colls = hlo["collectives"]
+    # XLA's own (loop-body-counted-once) numbers, kept for cross-checking
+    xla_cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+    }
+    # live working set per device: args + outputs + temps - aliased(donated)
+    peak = mem_d["argument_bytes"] + mem_d["output_bytes"] + \
+        mem_d["temp_bytes"] - mem_d["alias_bytes"]
+    # CPU-backend bf16->f32 legalization copies (absent on the TPU target;
+    # see hlo_analysis.cpu_bf16_upcast_bytes docstring for the evidence).
+    # Clamped: arguments/outputs (params, caches, opt state) always live.
+    upcast = hlo_analysis.cpu_bf16_upcast_bytes(text)
+    floor = mem_d["argument_bytes"] + mem_d["output_bytes"] - mem_d["alias_bytes"]
+    peak_tpu = max(peak - upcast, floor)
+    return {
+        "cpu_upcast_bytes": int(upcast),
+        "peak_bytes_per_dev_tpu_adjusted": int(peak_tpu),
+        "fits_hbm_cpu_raw": bool(peak <= HBM_BYTES),
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_acc,
+        "coll_link_bytes_per_dev": colls["total"],
+        "collectives": colls,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": colls["total"] / ICI_BW,
+        "memory_analysis": mem_d,
+        "peak_bytes_per_dev": int(peak),
+        "fits_hbm": bool(peak_tpu <= HBM_BYTES),
+        "xla_flops_loopfree": float(xla_cost.get("flops", 0.0)),
+        "xla_bytes_loopfree": float(xla_cost.get("bytes accessed", 0.0)),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward-only serve cells).
+
+    N excludes the input embedding table (a gather, not a matmul) but keeps
+    the LM head; tied models count the shared table once (as the head).
+    """
+    n_active = cfg.active_param_count()
+    if not cfg.tie_embeddings:
+        n_active -= cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token
+
+
+def summarize(cell: dict) -> str:
+    t = cell
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+    frac = t.get("model_flops_per_dev", 0.0) / PEAK_FLOPS / max(
+        t[dom], 1e-30)
+    return (f"compute={t['compute_s']:.4g}s memory={t['memory_s']:.4g}s "
+            f"collective={t['collective_s']:.4g}s dominant={dom[:-2]} "
+            f"roofline_frac={frac:.3f} fits={t['fits_hbm']}")

@@ -1,0 +1,194 @@
+"""Build the jitted train/prefill/decode steps with their shardings.
+
+These are the exact programs the multi-pod dry-run lowers and the train/serve
+launchers execute. Buffer donation: params+opt donated in train (in-place
+update), cache donated in decode (in-place KV writes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeConfig, ShardingConfig,
+                                TrainConfig)
+from repro.distribution import sharding as shd
+from repro.models import LM
+from repro.models import param as Pm
+from repro.train import optimizer as opt_lib
+
+
+def make_model(cfg: ModelConfig, perf: ShardingConfig, mesh: Optional[Mesh]):
+    constrain = None
+    attn_constrain = None
+    msize = 1
+    if mesh is not None:
+        constrain = lambda x: shd.constrain_batch(x, mesh, perf)
+        attn_constrain = shd.attn_constrainers(mesh, perf)
+        msize = mesh.shape.get("model", 1)
+    if perf.attn_sharding == "auto":
+        attn_mode = "heads" if (cfg.n_heads == 0 or cfg.n_heads % msize == 0) \
+            else "ctx"
+    else:
+        attn_mode = perf.attn_sharding
+    model = LM(cfg, rwkv_chunk=perf.rwkv_chunk, q_chunk=perf.q_chunk,
+               kv_chunk=perf.kv_chunk, remat_policy=perf.remat_policy,
+               constrain=constrain, attn_mode=attn_mode, nq_shard=msize,
+               attn_constrain=attn_constrain)
+    if mesh is not None and cfg.moe is not None and perf.shard_experts:
+        model.moe_shard = (mesh, ("pod", "data"))
+    if mesh is not None and perf.shard_cache_seq:
+        model.cache_shard = (mesh, ("pod", "data"))
+    return model
+
+
+def _batch_shardings(specs: dict, mesh: Mesh, perf: ShardingConfig):
+    return {
+        k: shd.batch_sharding(mesh, len(s.shape), perf, batch_size=s.shape[0])
+        for k, s in specs.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     perf: ShardingConfig = ShardingConfig(),
+                     tcfg: TrainConfig = TrainConfig()):
+    """Returns (jitted_fn, example_args=(param_specs, opt_specs, batch_specs))."""
+    model = make_model(cfg, perf, mesh)
+    pdefs = model.param_defs()
+    pspecs, pdims = Pm.specs(pdefs), Pm.dims(pdefs)
+    opt_leaf_sh = shd.zero1_shardings(pspecs, pdims, mesh, perf)
+    if perf.layout == "zero3":
+        # params STORED with the extra data-axis shard; gathered to compute
+        # sharding per layer inside the scan (hooks below). Grad reduce-
+        # scatter falls out of the gather constraint's transpose.
+        param_sh = opt_leaf_sh
+        dims_tree = pdims
+        if "groups" in dims_tree:
+            model.gather_group = shd.gather_hook(mesh, perf, dims_tree["groups"])
+        if "tail" in dims_tree:
+            model.gather_tail = shd.gather_hook(mesh, perf, dims_tree["tail"])
+    else:
+        param_sh = shd.tree_shardings(pspecs, pdims, mesh, shd.param_rules(perf))
+    f32 = lambda tree: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree)
+    opt_specs = {"m": f32(pspecs), "v": f32(pspecs),
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    opt_sh = {"m": opt_leaf_sh, "v": opt_leaf_sh, "step": shd.replicated(mesh)}
+    in_specs = model.input_specs(shape)
+    batch_sh = _batch_shardings(in_specs, mesh, perf)
+    rep = shd.replicated(mesh)
+
+    nmicro = tcfg.microbatches
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if nmicro > 1:
+            B = next(iter(batch.values())).shape[0]
+            mb = {k: v.reshape((nmicro, B // nmicro) + v.shape[1:])
+                  for k, v in batch.items()}
+            # accumulated grads carry the ZeRO (param + data-axis) sharding —
+            # a 42B-param f32 accumulator sharded only 16-way is 10.5 GB/dev
+            shard_acc = lambda t: jax.tree.map(
+                jax.lax.with_sharding_constraint, t, opt_leaf_sh)
+
+            def micro(acc, b):
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, b)
+                acc = shard_acc(jax.tree.map(jnp.add, acc, g))
+                return acc, (loss, metrics)
+
+            zero = shard_acc(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, (losses, metricses) = jax.lax.scan(micro, zero, mb)
+            grads = jax.tree.map(lambda g: g / nmicro, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            # pin grads to the (ZeRO) storage sharding at the loop boundary so
+            # XLA can't materialize an unsharded f32 grad stack
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, opt_leaf_sh)
+        new_params, new_opt, gnorm = opt_lib.update(grads, opt_state, params, tcfg)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr=opt_lib.schedule(tcfg, new_opt["step"]))
+        return new_params, new_opt, metrics
+
+    metrics_sh = {k: rep for k in ("ce", "aux", "loss", "grad_norm", "lr")}
+    fn = jax.jit(
+        train_step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+    return fn, (pspecs, opt_specs, in_specs), (param_sh, opt_sh, batch_sh), model
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       perf: ShardingConfig = ShardingConfig()):
+    model = make_model(cfg, perf, mesh)
+    pdefs = model.param_defs()
+    pspecs, pdims = Pm.specs(pdefs), Pm.dims(pdefs)
+    param_sh = shd.tree_shardings(pspecs, pdims, mesh, shd.param_rules(perf))
+    in_specs = model.input_specs(shape)
+    batch_sh = _batch_shardings(in_specs, mesh, perf)
+
+    B = shape.global_batch
+    cdefs = model.cache_defs(B, shape.seq_len)
+    cache_sh = shd.tree_shardings(Pm.specs(cdefs), Pm.dims(cdefs), mesh,
+                                  shd.cache_rules(perf))
+    logits_sh = shd.batch_sharding(mesh, 2, perf, batch_size=B)
+
+    fn = jax.jit(model.prefill,
+                 in_shardings=(param_sh, batch_sh),
+                 out_shardings=(logits_sh, cache_sh))
+    return fn, (pspecs, in_specs), (param_sh, batch_sh), model
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      perf: ShardingConfig = ShardingConfig()):
+    model = make_model(cfg, perf, mesh)
+    pdefs = model.param_defs()
+    pspecs, pdims = Pm.specs(pdefs), Pm.dims(pdefs)
+    param_sh = shd.tree_shardings(pspecs, pdims, mesh, shd.param_rules(perf))
+    in_specs = model.input_specs(shape)
+    batch_sh = _batch_shardings(in_specs, mesh, perf)
+
+    B = shape.global_batch
+    cdefs = model.cache_defs(B, shape.seq_len)
+    cache_specs = Pm.specs(cdefs)
+    cache_sh = shd.tree_shardings(cache_specs, Pm.dims(cdefs), mesh,
+                                  shd.cache_rules(perf))
+    logits_sh = shd.batch_sharding(mesh, 2, perf, batch_size=B)
+
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(param_sh, batch_sh, cache_sh),
+                 out_shardings=(logits_sh, cache_sh),
+                 donate_argnums=(2,))
+    return fn, (pspecs, in_specs, cache_specs), (param_sh, batch_sh, cache_sh), model
+
+
+def build_step(kind: str, cfg, shape, mesh, perf=ShardingConfig(),
+               tcfg=TrainConfig()):
+    if kind == "train":
+        return build_train_step(cfg, shape, mesh, perf, tcfg)
+    if kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, perf)
+    if kind == "decode":
+        return build_decode_step(cfg, shape, mesh, perf)
+    raise ValueError(kind)

@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-0.6b:smoke``.
+
+On this CPU container run reduced (``:smoke``) configs; on a pod the same
+entrypoint takes the full arch ids and the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 pod mesh (needs 256 devices)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ShardingConfig override key=value")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.base import (ShapeConfig, ShardingConfig, TrainConfig,
+                                    apply_overrides)
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    mesh = make_production_mesh() if args.production_mesh else make_smoke_mesh()
+    perf = apply_overrides(ShardingConfig(), args.set)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1),
+                       checkpoint_every=args.ckpt_every,
+                       checkpoint_dir=args.ckpt_dir,
+                       microbatches=args.micro)
+
+    def log(step, metrics):
+        if step % max(args.steps // 20, 1) == 0 or step <= 3:
+            print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                  f"lr {metrics['lr']:.2e} gnorm {metrics['grad_norm']:.3f} "
+                  f"{metrics['time_s']*1e3:.0f} ms", flush=True)
+
+    res = train(cfg, shape, mesh, perf=perf, tcfg=tcfg, on_step=log)
+    print(json.dumps({
+        "steps_run": res.steps_run, "final_step": res.final_step,
+        "first_loss": res.losses[0] if res.losses else None,
+        "last_loss": res.losses[-1] if res.losses else None,
+        "restored_from": res.restored_from,
+        "mean_step_s": sum(res.step_times) / max(len(res.step_times), 1),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,399 @@
+"""Core transformer layers as pure functions over param dicts.
+
+Numerics/structure notes (all deliberate, see DESIGN.md):
+  * RoPE uses the *interleaved* (even/odd pair) formulation so that when the
+    sharding fallback puts the mesh ``model`` axis on ``head_dim`` (archs whose
+    head counts don't divide 16, e.g. gemma2's 8 or deepseek's 56), the
+    rotation stays shard-local (pairs are adjacent) instead of forcing a
+    cross-shard permute as rotate-half would.
+  * Attention is *blockwise* (online-softmax over KV chunks, scanned over Q
+    chunks) — the flash-attention recurrence expressed at the jnp level so the
+    (S, S) score matrix is never materialized. ``kernels/flash_attention`` is
+    the VMEM-tiled Pallas version of the same recurrence for TPU hot paths.
+  * GQA never materializes repeated KV heads: Q is reshaped to
+    (…, kv_heads, q_per_kv, head_dim) and contracted against KV directly.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_defs(d: int, dtype) -> ParamDef:
+    # gemma-style (1 + w) scaling; zero-init == identity
+    return ParamDef((d,), ("d_model",), dtype, "zeros")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (interleaved pairs)
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x_f = x.astype(jnp.float32).reshape(x.shape[:-1] + (half, 2))
+    even, odd = x_f[..., 0], x_f[..., 1]
+    r_even = even * cos - odd * sin
+    r_odd = even * sin + odd * cos
+    out = jnp.stack([r_even, r_odd], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise causal attention (online softmax; GQA; local windows; softcap)
+# ---------------------------------------------------------------------------
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q, k, v, *, q_positions, kv_positions, kv_valid,
+                        window: int = 0, softcap: float = 0.0,
+                        q_chunk: int = 512, kv_chunk: int = 1024,
+                        scale: Optional[float] = None,
+                        q_mode: str = "scan", constrain_qs=None):
+    """Causal (optionally sliding-window) attention without an (S,S) buffer.
+
+    q:  (B, Sq, Hkv, G, Dh)   -- G = q heads per kv head
+    k,v:(B, Skv, Hkv, Dh)
+    q_positions: (B, Sq) absolute positions of the queries
+    kv_positions:(B, Skv) absolute positions of the keys
+    kv_valid:    (B, Skv) bool; invalid slots are masked out
+    window: 0 = global causal; >0 = only attend where 0 <= qpos-kpos < window
+    q_mode: "scan"  — sequential scan over Q chunks (head-sharded TP path);
+            "shard" — Q-chunk dim kept as a tensor dim so the mesh 'model'
+            axis shards it (context parallelism for archs whose head counts
+            don't divide the axis). ``constrain_qs`` places the constraint.
+    Returns (B, Sq, Hkv, G, Dh).
+    """
+    B, Sq, Hkv, G, Dh = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    q = (q * scale).astype(q.dtype)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    # pad seq dims to multiples of the chunk sizes
+    pq = nq * q_chunk - Sq
+    pk = nk * kv_chunk - Skv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pk)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pk)))
+
+    ks = k.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    kpos = kv_positions.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+    kval = kv_valid.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+
+    if q_mode == "shard":
+        return _blockwise_attention_ctx(
+            q, q_positions, ks, vs, kpos, kval, nq=nq, q_chunk=q_chunk,
+            window=window, softcap=softcap, constrain_qs=constrain_qs,
+            out_len=Sq)
+
+    qs = q.reshape(B, nq, q_chunk, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    qpos = q_positions.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+
+    def q_step(_, qc):
+        q_i, qpos_i = qc  # (B, qc, Hkv, G, Dh), (B, qc)
+
+        @jax.checkpoint  # recompute scores in backward: residuals stay O(chunk)
+        def kv_step(carry, kc):
+            acc, m, denom = carry
+            k_j, v_j, kpos_j, kval_j = kc
+            # scores: (B, qc, Hkv, G, kc)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_i, k_j,
+                           preferred_element_type=jnp.float32)
+            s = _softcap(s, softcap)
+            causal = qpos_i[:, :, None] >= kpos_j[:, None, :]
+            mask = causal & kval_j[:, None, :]
+            if window and window > 0:
+                mask &= (qpos_i[:, :, None] - kpos_j[:, None, :]) < window
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+            # clamp so fully-masked rows give p == exp(NEG_INF - m) == 0,
+            # not exp(0); keeps padded rows at exactly zero output.
+            m_new = jnp.maximum(jnp.maximum(m, s.max(axis=-1)), -1e29)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            denom = denom * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, q_i.shape[1], Hkv, G, Dh), jnp.float32)
+        m0 = jnp.full((B, q_i.shape[1], Hkv, G), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, q_i.shape[1], Hkv, G), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0), (ks, vs, kpos, kval))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qs, qpos))
+    # outs: (nq, B, qc, Hkv, G, Dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, Hkv, G, Dh)
+    return out[:, :Sq]
+
+
+def _blockwise_attention_ctx(q, q_positions, ks, vs, kpos, kval, *, nq,
+                             q_chunk, window, softcap, constrain_qs, out_len):
+    """Context-parallel online-softmax attention.
+
+    The Q-chunk count ``nq`` stays a tensor dim (sharded over 'model' via
+    ``constrain_qs``); KV chunks are scanned sequentially and stay replicated,
+    so no (S, S) score matrix ever crosses a link — the only collective is
+    the small q/out reshard at the boundary.
+    """
+    B = q.shape[0]
+    Hkv, G, Dh = q.shape[-3:]
+    qs = q.reshape(B, nq, q_chunk, Hkv, G, Dh)
+    qpos = q_positions.reshape(B, nq, q_chunk)
+    if constrain_qs is not None:
+        qs = constrain_qs(qs)
+
+    @jax.checkpoint
+    def kv_step(carry, kc):
+        acc, m, denom = carry
+        k_j, v_j, kpos_j, kval_j = kc
+        s = jnp.einsum("bnqhgd,bkhd->bnqhgk", qs, k_j,
+                       preferred_element_type=jnp.float32)
+        s = _softcap(s, softcap)
+        causal = qpos[:, :, :, None] >= kpos_j[:, None, None, :]
+        mask = causal & kval_j[:, None, None, :]
+        if window and window > 0:
+            mask &= (qpos[:, :, :, None] - kpos_j[:, None, None, :]) < window
+        s = jnp.where(mask[:, :, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(jnp.maximum(m, s.max(axis=-1)), -1e29)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bnqhgk,bkhd->bnqhgd", p.astype(v_j.dtype), v_j,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((B, nq, q_chunk, Hkv, G, Dh), jnp.float32)
+    m0 = jnp.full((B, nq, q_chunk, Hkv, G), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, nq, q_chunk, Hkv, G), jnp.float32)
+    if constrain_qs is not None:
+        acc0, m0, d0 = constrain_qs(acc0), constrain_qs(m0), constrain_qs(d0)
+    (acc, m, denom), _ = jax.lax.scan(kv_step, (acc0, m0, d0),
+                                      (ks, vs, kpos, kval))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    out = out.astype(q.dtype).reshape(B, nq * q_chunk, Hkv, G, Dh)
+    return out[:, :out_len]
+
+
+def decode_attention(q, k, v, *, kv_positions, kv_valid, q_position,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: Optional[float] = None):
+    """Single-position attention against a (possibly ring) KV cache.
+
+    q: (B, 1, Hkv, G, Dh); k,v: (B, Skv, Hkv, Dh);
+    kv_positions/kv_valid: (B, Skv); q_position: (B,) absolute position.
+    """
+    Dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", (q * scale), k,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    mask = kv_valid & (kv_positions <= q_position[:, None])
+    if window and window > 0:
+        mask &= (q_position[:, None] - kv_positions) < window
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg) -> dict:
+    """Attention projections with *flattened* head dims.
+
+    H*Dh and Hkv*Dh are divisible by the 16-wide mesh 'model' axis for every
+    assigned arch (head counts 8..56 are not — that's the whole point), so
+    the projections' compute always shards fully. The q flat layout is
+    (kv_group, q_per_kv, head_dim) row-major so the grouped-GQA reshape is a
+    local view.
+    """
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    s = 0.02
+    defs = {
+        "norm": rms_norm_defs(d, dt),
+        "wq": ParamDef((d, H * Dh), ("d_model", "heads_flat"), dt, "normal", s),
+        "wk": ParamDef((d, Hkv * Dh), ("d_model", "kv_flat"), dt, "normal", s),
+        "wv": ParamDef((d, Hkv * Dh), ("d_model", "kv_flat"), dt, "normal", s),
+        "wo": ParamDef((H * Dh, d), ("heads_flat", "d_model"), dt, "normal",
+                       s / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((Dh,), ("head_dim",), dt, "zeros")
+        defs["k_norm"] = ParamDef((Dh,), ("head_dim",), dt, "zeros")
+    if cfg.post_norms:
+        defs["post_norm"] = rms_norm_defs(d, dt)
+    return defs
+
+
+def attention_qkv(p, x, cfg, positions):
+    """Project + rope. Returns q (B,S,H,Dh), k,v (B,S,Hkv,Dh) (unrepeated)."""
+    B, S = x.shape[:2]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, Hkv, Dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(p, attn, x_dtype):
+    """attn: (B, S, Hkv, G, Dh) or (B, S, H, 1, Dh) -> (B, S, d)."""
+    B, S = attn.shape[:2]
+    flat = attn.reshape(B, S, -1)
+    return flat @ p["wo"].astype(x_dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    defs = {
+        "norm": rms_norm_defs(d, dt),
+        "w_gate": ParamDef((d, f), ("d_model", "d_ff"), dt, "normal", 0.02),
+        "w_up": ParamDef((d, f), ("d_model", "d_ff"), dt, "normal", 0.02),
+        "w_down": ParamDef((f, d), ("d_ff", "d_model"), dt, "normal",
+                           0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.post_norms:
+        defs["post_norm"] = rms_norm_defs(d, dt)
+    return defs
+
+
+def mlp_apply(p, x, constrain_ff=None):
+    c = constrain_ff if constrain_ff is not None else (lambda t: t)
+    g = c(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype)))
+    u = c(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)))
+    h = c(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    defs = {
+        # ~N(0, 1/d): tied heads get O(1) logits; the sqrt(d) input scaling
+        # for tied models restores unit-variance embeddings
+        "table": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "d_model"),
+                          dt, "normal", 1.0 / math.sqrt(cfg.d_model)),
+        "final_norm": rms_norm_defs(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab_size), ("d_model", "vocab"), dt, "normal", 0.02)
+    return defs
+
+
+def embed_tokens(p, tokens, cfg):
+    x = jnp.take(p["table"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)  # gemma-style scaled tied embedding
+    return x
+
+
+def lm_head(p, x, cfg):
+    w = p.get("head")
+    if w is None:
+        w = p["table"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return _softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def chunked_cross_entropy(p, x, targets, cfg, *, chunk: int = 256,
+                          mask=None):
+    """CE over huge vocabs without a (B, S, V) f32 buffer.
+
+    Scans over sequence chunks; within a chunk the logits stay vocab-sharded
+    (the head weight carries the 'vocab' logical dim) and the logsumexp /
+    target-pick contract over vocab, so only (B, chunk) leaves each step.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.bool_)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xs = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    w = p.get("head")
+    tied = w is None
+    if tied:
+        w = p["table"].T
+
+    @jax.checkpoint  # recompute chunk logits in backward; carry is O(1)
+    def step(carry, c):
+        tot, cnt = carry
+        xc, tc, mc = c
+        logits = jnp.einsum("bsd,dv->bsv", xc, w.astype(xc.dtype)).astype(jnp.float32)
+        if cfg.final_logit_softcap:
+            logits = _softcap(logits, cfg.final_logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tc, cfg.vocab_size, dtype=logits.dtype)
+        picked = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - picked) * mc.astype(jnp.float32)
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (xs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,435 @@
+"""Unified model API over all ten assigned architectures.
+
+One ``LM`` class; the config's ``layer_pattern`` picks the blocks. Layers run
+under ``lax.scan`` over *pattern groups* (stacked params) so HLO size — and
+1-core CPU compile time for the 512-device dry-run — stays bounded; pattern
+remainders run unscanned as ``tail`` layers.
+
+Three entry points (what the dry-run lowers):
+  * ``loss(params, batch)``            — train_4k
+  * ``prefill(params, inputs)``        — prefill_32k
+  * ``decode_step(params, inputs, cache)`` — decode_32k / long_500k
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, RWKV,
+                                ModelConfig, ShapeConfig)
+from repro.models import cache as cache_lib
+from repro.models import layers as L
+from repro.models import param as P
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.rglru import rglru_apply, rglru_defs, rglru_step
+from repro.models.rwkv6 import channel_mix, rwkv_defs, time_mix, time_mix_step
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, *, rwkv_chunk: int = 0,
+                 q_chunk: int = 512, kv_chunk: int = 1024,
+                 remat_policy: str = "full", constrain=None,
+                 attn_mode: str = "heads", nq_shard: int = 1,
+                 attn_constrain=None):
+        self.cfg = cfg
+        self.rwkv_chunk = rwkv_chunk
+        self.q_chunk = q_chunk
+        self.kv_chunk = kv_chunk
+        self.remat_policy = remat_policy
+        # sharding-constraint hook applied at block boundaries (set by the
+        # distribution layer; identity on a single device)
+        self.constrain = constrain if constrain is not None else (lambda x: x)
+        # attention sharding: "heads" = repeat-KV + head-sharded (no attention
+        # collectives; used when n_heads % model_axis == 0), "ctx" = context-
+        # parallel Q chunks (used otherwise — 8/10/24/56-head archs)
+        self.attn_mode = attn_mode
+        self.nq_shard = max(1, nq_shard)
+        ident = {"heads": (lambda x: x), "qs": (lambda x: x)}
+        self.attn_constrain = attn_constrain if attn_constrain else ident
+        # (mesh, dp_axes) for shard_map expert parallelism; None = dense path
+        self.moe_shard = None
+        # ZeRO-3 hooks (set by the distribution layer for train steps):
+        # gather storage-sharded layer params to compute sharding inside scan
+        self.gather_group = None
+        self.gather_tail = None
+        # (mesh, dp_axes) for shard_map-local KV-cache writes in decode
+        self.cache_shard = None
+
+    # ------------------------------------------------------------------ params
+    def _slot_defs(self, kind: str) -> dict:
+        cfg = self.cfg
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            d = {"attn": L.attention_defs(cfg)}
+        elif kind == RGLRU:
+            d = {"rglru": rglru_defs(cfg)}
+        elif kind == RWKV:
+            return {"rwkv": rwkv_defs(cfg)}  # channel-mix included
+        else:
+            raise ValueError(kind)
+        if cfg.moe is not None:
+            d["ffn"] = moe_defs(cfg)
+        else:
+            d["ffn"] = L.mlp_defs(cfg)
+        return d
+
+    def _group_defs(self) -> dict:
+        return {f"slot{i}": self._slot_defs(k)
+                for i, k in enumerate(self.cfg.layer_pattern)}
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        defs: dict = {"embed": L.embed_defs(cfg)}
+        if cfg.n_groups > 0:
+            defs["groups"] = P.stack(self._group_defs(), cfg.n_groups)
+        tail_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.layer_pattern):]
+        if tail_kinds:
+            defs["tail"] = {f"tail{i}": self._slot_defs(k)
+                            for i, k in enumerate(tail_kinds)}
+        return defs
+
+    def param_specs(self):
+        return P.specs(self.param_defs())
+
+    def param_dims(self):
+        return P.dims(self.param_defs())
+
+    def init(self, rng):
+        return P.init(self.param_defs(), rng)
+
+    def param_count(self) -> int:
+        return P.count(self.param_defs())
+
+    # ------------------------------------------------------------------ cache
+    def _slot_cache_defs(self, kind: str, batch: int, max_seq: int):
+        cfg = self.cfg
+        if kind == ATTN_GLOBAL:
+            return cache_lib.kv_cache_defs(cfg, batch, max_seq)
+        if kind == ATTN_LOCAL:
+            return cache_lib.kv_cache_defs(cfg, batch, max_seq, window=cfg.local_window)
+        if kind == RGLRU:
+            return cache_lib.rglru_cache_defs(cfg, batch)
+        if kind == RWKV:
+            return cache_lib.rwkv_cache_defs(cfg, batch)
+        raise ValueError(kind)
+
+    def cache_defs(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        defs: dict = {
+            "lengths": P.ParamDef((batch,), ("batch",), jnp.int32, "zeros"),
+        }
+        if cfg.n_groups > 0:
+            defs["groups"] = P.stack(
+                {f"slot{i}": self._slot_cache_defs(k, batch, max_seq)
+                 for i, k in enumerate(cfg.layer_pattern)}, cfg.n_groups)
+        tail_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.layer_pattern):]
+        if tail_kinds:
+            defs["tail"] = {f"tail{i}": self._slot_cache_defs(k, batch, max_seq)
+                            for i, k in enumerate(tail_kinds)}
+        return defs
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return P.specs(self.cache_defs(batch, max_seq))
+
+    def init_cache(self, batch: int, max_seq: int):
+        return P.init(self.cache_defs(batch, max_seq), jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------ inputs
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """Abstract inputs for the dry-run (ShapeDtypeStruct only)."""
+        cfg = self.cfg
+        B = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            S = shape.seq_len
+            if cfg.frontend == "embeddings":
+                return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+                        "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if cfg.frontend == "vlm":
+                St = S - cfg.n_patches
+                return {"tokens": jax.ShapeDtypeStruct((B, St), jnp.int32),
+                        "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), dt),
+                        "targets": jax.ShapeDtypeStruct((B, St), jnp.int32)}
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            S = shape.seq_len
+            if cfg.frontend == "embeddings":
+                return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)}
+            if cfg.frontend == "vlm":
+                return {"tokens": jax.ShapeDtypeStruct((B, S - cfg.n_patches), jnp.int32),
+                        "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), dt)}
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        # decode: one new token against a cache of size seq_len
+        if cfg.frontend == "embeddings":
+            return {"frames": jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    # ------------------------------------------------------------------ blocks
+    def _attn_block(self, p, x, kind, positions, mode, slot_cache, lengths):
+        cfg = self.cfg
+        window = cfg.local_window if kind == ATTN_LOCAL else 0
+        H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        G = H // Hkv
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        new_cache = slot_cache
+        if mode == "decode":
+            q_position = lengths  # (B,)
+            q, k, v = L.attention_qkv(p, h, cfg, q_position[:, None])
+            B = q.shape[0]
+            q = q.reshape(B, 1, Hkv, G, Dh)
+            ck = cache_lib.write_token(slot_cache["k"], k, lengths, window,
+                                       shard=self.cache_shard)
+            cv = cache_lib.write_token(slot_cache["v"], v, lengths, window,
+                                       shard=self.cache_shard)
+            kv_pos, kv_valid = cache_lib.slot_positions(
+                lengths + 1, ck.shape[1], window)
+            attn = L.decode_attention(q, ck.astype(h.dtype), cv.astype(h.dtype),
+                                      kv_positions=kv_pos, kv_valid=kv_valid,
+                                      q_position=q_position, window=window,
+                                      softcap=cfg.attn_logit_softcap)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            q, k, v = L.attention_qkv(p, h, cfg, positions)
+            B, S = q.shape[:2]
+            valid = jnp.ones(positions.shape, jnp.bool_)
+            if self.attn_mode == "heads":
+                # repeat KV -> every q head has a private kv head; the head
+                # dim then shards over 'model' with zero attention collectives
+                ch = self.attn_constrain["heads"]
+                q5 = ch(q[:, :, :, None, :])                    # (B,S,H,1,Dh)
+                kr = ch(jnp.repeat(k, G, axis=2)) if G > 1 else ch(k)
+                vr = ch(jnp.repeat(v, G, axis=2)) if G > 1 else ch(v)
+                attn = L.blockwise_attention(
+                    q5, kr, vr, q_positions=positions, kv_positions=positions,
+                    kv_valid=valid, window=window,
+                    softcap=cfg.attn_logit_softcap,
+                    q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+                attn = attn.reshape(B, S, Hkv, G, Dh)
+            else:  # context-parallel q chunks
+                q5 = q.reshape(B, S, Hkv, G, Dh)
+                nq = self.nq_shard
+                qc = max(1, -(-S // nq))
+                attn = L.blockwise_attention(
+                    q5, k, v, q_positions=positions, kv_positions=positions,
+                    kv_valid=valid, window=window,
+                    softcap=cfg.attn_logit_softcap,
+                    q_chunk=qc, kv_chunk=self.kv_chunk,
+                    q_mode="shard", constrain_qs=self.attn_constrain["qs"])
+            if mode == "prefill":
+                size = slot_cache["k"].shape[1]
+                new_cache = {"k": cache_lib.fill_from_prefill(k, size, window),
+                             "v": cache_lib.fill_from_prefill(v, size, window)}
+        out = L.attention_out(p, attn, x.dtype)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post_norm"], cfg.norm_eps)
+        return x + out, new_cache
+
+    def _ffn_block(self, p, x, mode):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None:
+            out, aux = moe_apply(p, h, cfg, shard=self.moe_shard)
+        else:
+            out = L.mlp_apply(p, h, constrain_ff=self.attn_constrain.get("ff"))
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post_norm"], cfg.norm_eps) \
+                if "post_norm" in p else out
+        return x + out, aux
+
+    def _rglru_block(self, p, x, mode, slot_cache):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        if mode == "decode":
+            out, (conv, hstate) = rglru_step(p, h, cfg, slot_cache["conv"],
+                                             slot_cache["h"])
+            new_cache = {"conv": conv, "h": hstate}
+        elif mode == "prefill":
+            out, (conv, hstate) = rglru_apply(p, h, cfg, return_state=True)
+            new_cache = {"conv": conv, "h": hstate}
+        else:
+            out, _ = rglru_apply(p, h, cfg)
+            new_cache = slot_cache
+        return x + out, new_cache
+
+    def _rwkv_block(self, p, x, mode, slot_cache):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        if mode == "decode":
+            tm_state = {"shift": slot_cache["shift"], "wkv": slot_cache["wkv"]}
+            out, new_tm = time_mix_step(p, h, cfg, tm_state)
+            x = x + out
+            h2 = L.rms_norm(x, p["cm_norm"], cfg.norm_eps)
+            out2, new_cm = channel_mix(p, h2, cfg, slot_cache["cm_shift"],
+                                       return_state=True)
+            x = x + out2
+            return x, {"shift": new_tm["shift"], "wkv": new_tm["wkv"],
+                       "cm_shift": new_cm}
+        want_state = mode == "prefill"
+        out, new_tm = time_mix(p, h, cfg, None, chunk=self.rwkv_chunk,
+                               return_state=want_state)
+        x = x + out
+        h2 = L.rms_norm(x, p["cm_norm"], cfg.norm_eps)
+        out2, new_cm = channel_mix(p, h2, cfg, None, return_state=want_state)
+        x = x + out2
+        if want_state:
+            return x, {"shift": new_tm["shift"], "wkv": new_tm["wkv"],
+                       "cm_shift": new_cm}
+        return x, slot_cache
+
+    def _apply_slot(self, kind, p, x, positions, mode, slot_cache, lengths):
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            x, new_cache = self._attn_block(p["attn"], x, kind, positions,
+                                            mode, slot_cache, lengths)
+            x, aux = self._ffn_block(p["ffn"], x, mode)
+            return x, new_cache, aux
+        if kind == RGLRU:
+            x, new_cache = self._rglru_block(p["rglru"], x, mode, slot_cache)
+            x, aux = self._ffn_block(p["ffn"], x, mode)
+            return x, new_cache, aux
+        if kind == RWKV:
+            x, new_cache = self._rwkv_block(p["rwkv"], x, mode, slot_cache)
+            return x, new_cache, jnp.zeros((), jnp.float32)
+        raise ValueError(kind)
+
+    # ------------------------------------------------------------------ forward
+    def _remat(self, fn):
+        if self.remat_policy == "none":
+            return fn
+        if self.remat_policy == "dots":
+            pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            return jax.checkpoint(fn, policy=pol)
+        return jax.checkpoint(fn)
+
+    def backbone(self, params, x, positions, mode="train", cache=None):
+        """x: (B, S, d). Returns (x, new_cache, aux_loss)."""
+        cfg = self.cfg
+        pattern = cfg.layer_pattern
+        lengths = cache["lengths"] if cache is not None else None
+        dummy = jnp.zeros((x.shape[0],), jnp.int32)
+        use_cache = cache is not None and mode != "train"
+
+        def group_fn(x, group_params, group_cache):
+            if self.gather_group is not None:
+                group_params = self.gather_group(group_params)
+            aux_tot = jnp.zeros((), jnp.float32)
+            new_cache = {}
+            for i, kind in enumerate(pattern):
+                key = f"slot{i}"
+                sc = group_cache.get(key) if group_cache else None
+                x, nc, aux = self._apply_slot(
+                    kind, group_params[key], x, positions, mode, sc,
+                    lengths if lengths is not None else dummy)
+                new_cache[key] = nc
+                aux_tot += aux
+            return self.constrain(x), new_cache, aux_tot
+
+        aux_total = jnp.zeros((), jnp.float32)
+        new_groups = None
+        if cfg.n_groups > 0:
+            gp = params["groups"]
+            gc = cache["groups"] if use_cache else None
+            fn = self._remat(group_fn) if mode == "train" else group_fn
+
+            def scan_body(carry, xs):
+                x, aux = carry
+                g_params, g_cache = xs
+                x, nc, a = fn(x, g_params, g_cache)
+                return (x, aux + a), nc
+
+            (x, aux_total), new_groups = jax.lax.scan(
+                scan_body, (x, aux_total), (gp, gc))
+
+        new_tail = None
+        if "tail" in params:
+            new_tail = {}
+            if self.gather_tail is not None:
+                params = dict(params, tail=self.gather_tail(params["tail"]))
+            tail_kinds = cfg.layer_kinds[cfg.n_groups * len(pattern):]
+            for i, kind in enumerate(tail_kinds):
+                key = f"tail{i}"
+                sc = cache["tail"][key] if use_cache else None
+                x, nc, aux = self._apply_slot(
+                    kind, params["tail"][key], x, positions, mode, sc,
+                    lengths if lengths is not None else dummy)
+                new_tail[key] = nc
+                aux_total += aux
+
+        x = L.rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+        new_cache = None
+        if use_cache:
+            new_cache = {"lengths": lengths + (1 if mode == "decode" else 0)}
+            if new_groups is not None:
+                new_cache["groups"] = new_groups
+            if new_tail is not None:
+                new_cache["tail"] = new_tail
+        return x, new_cache, aux_total
+
+    def _embed_inputs(self, params, inputs, *, start_positions=None):
+        """Returns (x, positions, target_mask_offset)."""
+        cfg = self.cfg
+        e = params["embed"]
+        if cfg.frontend == "embeddings":
+            x = inputs["frames"].astype(jnp.dtype(cfg.dtype))
+        elif cfg.frontend == "vlm":
+            tok = L.embed_tokens(e, inputs["tokens"], cfg)
+            if "patches" in inputs:  # decode steps carry tokens only
+                x = jnp.concatenate(
+                    [inputs["patches"].astype(tok.dtype), tok], axis=1)
+            else:
+                x = tok
+        else:
+            x = L.embed_tokens(e, inputs["tokens"], cfg)
+        B, S = x.shape[:2]
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        if start_positions is not None:
+            pos = pos + start_positions[:, None]
+        pos = jnp.broadcast_to(pos, (B, S))
+        return self.constrain(x), pos
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x, _, aux = self.backbone(params, x, positions, mode="train")
+        targets = batch["targets"]
+        if cfg.frontend == "vlm":
+            # only text positions carry next-token targets
+            x = x[:, cfg.n_patches:]
+        # next-token shift: predict t+1 from t
+        x = x[:, :-1]
+        t = targets[:, 1:]
+        loss = L.chunked_cross_entropy(params["embed"], x, t, cfg)
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    # ------------------------------------------------------------------ serve
+    def prefill(self, params, inputs, max_seq=None):
+        """max_seq sizes the cache (>= prompt + planned generation); the
+        dry-run's prefill cell uses the default (cache == prompt length)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, inputs)
+        B, S = x.shape[:2]
+        cache = self.cache_specs(B, max_seq or S)  # structure only
+        cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cache,
+            is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+        cache["lengths"] = jnp.full((B,), S, jnp.int32)
+        x, new_cache, _ = self.backbone(params, x, positions, mode="prefill",
+                                        cache=cache)
+        new_cache["lengths"] = jnp.full((B,), S, jnp.int32)
+        logits = L.lm_head(params["embed"], x[:, -1:], cfg)[:, 0]
+        return logits, new_cache
+
+    def decode_step(self, params, inputs, cache):
+        cfg = self.cfg
+        x, _ = self._embed_inputs(params, inputs,
+                                  start_positions=cache["lengths"])
+        positions = cache["lengths"][:, None]
+        x, new_cache, _ = self.backbone(params, x, positions, mode="decode",
+                                        cache=cache)
+        logits = L.lm_head(params["embed"], x, cfg)[:, 0]
+        return logits, new_cache

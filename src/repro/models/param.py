@@ -1,0 +1,92 @@
+"""Declarative parameter trees.
+
+Models declare parameters as nested dicts of :class:`ParamDef` carrying the
+shape, dtype, initializer AND the *logical dimension names* of every axis.
+The distribution layer maps logical dims onto mesh axes (with divisibility
+fallback), which is what lets one rule-set shard ten different architectures.
+
+The same tree yields:
+  * ``specs(tree)``        -> ShapeDtypeStruct pytree (abstract dry-run inputs)
+  * ``init(tree, rng)``    -> materialized arrays (smoke tests / real training)
+  * ``dims(tree)``         -> logical-dims pytree (sharding resolution)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    dims: tuple                 # logical dim name per axis, len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"        # normal | zeros | ones | lecun | custom
+    scale: float = 0.02
+    custom: Optional[Callable] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+    def spec(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "custom":
+            return self.custom(key, self.shape).astype(self.dtype)
+        if self.init == "lecun":
+            fan_in = self.shape[0] if len(self.shape) >= 1 else 1
+            s = 1.0 / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, self.shape) * s).astype(self.dtype)
+        return (jax.random.normal(key, self.shape) * self.scale).astype(self.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def specs(tree):
+    return tree_map_defs(lambda d: d.spec(), tree)
+
+
+def dims(tree):
+    return tree_map_defs(lambda d: d.dims, tree)
+
+
+def init(tree, rng):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [d.materialize(k) for d, k in zip(leaves, keys)])
+
+
+def stack(tree, n: int, dim_name: str = "layers"):
+    """Prepend a stacking axis (for ``lax.scan`` over layer groups)."""
+    return tree_map_defs(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape, dims=(dim_name,) + d.dims),
+        tree,
+    )
+
+
+def count(tree) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(tree, is_leaf=is_def))
+
+
+def bytes_of(tree) -> int:
+    return sum(
+        int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+        for d in jax.tree.leaves(tree, is_leaf=is_def)
+    )

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin recurrent block):
+    x -> norm -> [branch A: linear -> temporal conv(4) -> RG-LRU]
+              -> [branch B: linear -> GeLU]  -> A * B -> out linear
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)          (data-dependent decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over time (the linear
+recurrence (a, b) ∘ (a', b') = (a a', a' b + b') is associative) — O(log T)
+depth instead of O(T); decode is a single fused update. A Pallas kernel
+(kernels/rglru_scan) implements the same recurrence VMEM-tiled for TPU.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm_defs
+from repro.models.param import ParamDef
+
+_C = 8.0  # Griffin's fixed decay temperature
+
+
+def rglru_defs(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.param_dtype)
+    s = 0.02
+    return {
+        "norm": rms_norm_defs(d, dt),
+        "w_x": ParamDef((d, w), ("d_model", "lru_width"), dt, "normal", s),
+        "w_gate_branch": ParamDef((d, w), ("d_model", "lru_width"), dt, "normal", s),
+        "conv_w": ParamDef((cfg.conv_width, w), ("conv", "lru_width"), dt, "normal", s),
+        "conv_b": ParamDef((w,), ("lru_width",), dt, "zeros"),
+        # RG-LRU gates (block-diagonal in Griffin; dense-per-channel here)
+        "w_a": ParamDef((w,), ("lru_width",), dt, "normal", s),
+        "b_a": ParamDef((w,), ("lru_width",), dt, "zeros"),
+        "w_i": ParamDef((w,), ("lru_width",), dt, "normal", s),
+        "b_i": ParamDef((w,), ("lru_width",), dt, "zeros"),
+        "lam": ParamDef((w,), ("lru_width",), dt, "custom",
+                        custom=lambda k, sh: jax.random.uniform(k, sh, minval=0.9, maxval=0.999)),
+        "w_out": ParamDef((w, d), ("lru_width", "d_model"), dt, "normal",
+                          s / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _gates(p, u):
+    """u: (..., w) conv output. Returns decay a and gated input (f32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, gated
+
+
+def _conv_full(p, x, conv_state=None):
+    """Causal depthwise temporal conv, width W. x: (B, S, w)."""
+    W = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, w)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out + p["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan. a,b: (B,S,w)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hs
+
+
+def rglru_apply(p, x, cfg, conv_state=None, h_state=None, *, return_state=False):
+    """Full-sequence (train/prefill) Griffin recurrent block.
+
+    x: (B, S, d) normalized input. Returns (out (B, S, d), (conv_state, h)).
+    """
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"].astype(x.dtype))
+    u, new_conv = _conv_full(p, xb, conv_state)
+    a, b = _gates(p, u)
+    hs = rglru_scan(a, b, h_state)                         # (B, S, w) f32
+    h_out = hs.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", h_out, p["w_out"].astype(x.dtype))
+    if return_state:
+        return out, (new_conv, hs[:, -1])
+    return out, None
+
+
+def rglru_step(p, x, cfg, conv_state, h_state):
+    """Single-token decode step. x: (B, 1, d). States: (B, W-1, w), (B, w)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"].astype(x.dtype))
+    W = p["conv_w"].shape[0]
+    hist = jnp.concatenate([conv_state.astype(x.dtype), xb], axis=1)  # (B, W, w)
+    u = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(x.dtype))[:, None, :]
+    u = u + p["conv_b"].astype(x.dtype)
+    a, b = _gates(p, u)
+    h = a[:, 0] * h_state.astype(jnp.float32) + b[:, 0]               # (B, w)
+    h_out = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", h_out, p["w_out"].astype(x.dtype))
+    return out, (hist[:, 1:].astype(conv_state.dtype), h)

@@ -1,0 +1,225 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Recurrence (per head, head_dim = hd):
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          S: (hd_k, hd_v), w_t in (0,1)
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with data-dependent per-channel decay  w_t = exp(-exp(wb + tanh(x W_A) W_B))
+(the Finch hallmark) and a learned per-head "bonus" u for the current token.
+
+Two execution paths:
+  * ``scan``    — exact sequential ``lax.scan`` over time (baseline; the
+    decode path is the single-step specialization of it).
+  * ``chunked`` — chunkwise-parallel: within a chunk of L tokens the
+    intra-chunk contribution uses an explicit (L, L, hd) decay tensor
+    ``exp(lp[t-1] - lp[s]) <= 1`` (numerically safe, no factorized
+    exp(+big)), and chunks are stitched with the carried state. This is the
+    flash-linear-attention idea adapted to stay overflow-free; it is the
+    §Perf hillclimb lever for the rwkv6 cells.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm_defs
+from repro.models.param import ParamDef
+
+_LORA = 64  # decay LoRA rank
+
+
+def rwkv_defs(cfg) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    f = cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    s = 0.02
+    so = s / math.sqrt(2 * cfg.n_layers)
+    return {
+        "norm": rms_norm_defs(d, dt),
+        # token-shift mix coefficients for r,k,v,g,w
+        "mu": ParamDef((5, d), ("mix5", "d_model"), dt, "custom",
+                       custom=lambda k, sh: jax.random.uniform(k, sh)),
+        "w_r": ParamDef((d, d), ("d_model", "heads_flat"), dt, "normal", s),
+        "w_k": ParamDef((d, d), ("d_model", "heads_flat"), dt, "normal", s),
+        "w_v": ParamDef((d, d), ("d_model", "heads_flat"), dt, "normal", s),
+        "w_g": ParamDef((d, d), ("d_model", "heads_flat"), dt, "normal", s),
+        "w_o": ParamDef((d, d), ("heads_flat", "d_model"), dt, "normal", so),
+        # data-dependent decay: w = exp(-exp(wb + tanh(x A) B))
+        "decay_base": ParamDef((d,), ("heads_flat",), dt, "custom",
+                               custom=lambda k, sh: jax.random.uniform(k, sh, minval=-1.0, maxval=1.0)),
+        "decay_A": ParamDef((d, _LORA), ("d_model", "lora"), dt, "normal", s),
+        "decay_B": ParamDef((_LORA, d), ("lora", "heads_flat"), dt, "normal", s),
+        "bonus_u": ParamDef((d,), ("heads_flat",), dt, "normal", s),
+        "ln_out": ParamDef((d,), ("heads_flat",), dt, "zeros"),  # per-head groupnorm scale
+        # channel mix
+        "cm_norm": rms_norm_defs(d, dt),
+        "cm_mu": ParamDef((2, d), ("mix2", "d_model"), dt, "custom",
+                          custom=lambda k, sh: jax.random.uniform(k, sh)),
+        "cm_k": ParamDef((d, f), ("d_model", "d_ff"), dt, "normal", s),
+        "cm_v": ParamDef((f, d), ("d_ff", "d_model"), dt, "normal", so),
+        "cm_r": ParamDef((d, d), ("d_model", "heads_flat"), dt, "normal", s),
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """shifted[t] = x[t-1]; shifted[0] = carried last token of prev segment."""
+    return jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _rkvgw(p, x, shifted, cfg):
+    """Project the five mixed streams. x, shifted: (B, S, d)."""
+    mu = p["mu"].astype(x.dtype)  # (5, d)
+    mix = lambda i: x + (shifted - x) * mu[i]
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = xr @ p["w_r"].astype(x.dtype)
+    k = xk @ p["w_k"].astype(x.dtype)
+    v = xv @ p["w_v"].astype(x.dtype)
+    g = xg @ p["w_g"].astype(x.dtype)
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+    log_w = -jnp.exp(
+        jnp.clip(p["decay_base"].astype(jnp.float32)
+                 + lora @ p["decay_B"].astype(jnp.float32), -8.0, 3.0))
+    # clamp decay so chunked exp() differences stay in f32 range
+    log_w = jnp.clip(log_w, -20.0, -1e-5)
+    return r, k, v, g, log_w
+
+
+def _heads(x, hd):
+    B, S, d = x.shape
+    return x.reshape(B, S, d // hd, hd)
+
+
+def _group_norm(x, scale, eps):
+    """Per-head LayerNorm of the wkv output. x: (B, S, H, hd)."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    n = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return n.reshape(x.shape[:2] + (-1,)) * (1.0 + scale.astype(jnp.float32))
+
+
+def time_mix(p, x, cfg, state=None, *, chunk: int = 0, return_state: bool = False):
+    """RWKV-6 time-mix over a full sequence.
+
+    x: (B, S, d). state: dict(shift (B, d), wkv (B, H, hd, hd) f32) or None.
+    """
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    shift0 = state["shift"].astype(x.dtype) if state else jnp.zeros((B, d), x.dtype)
+    S0 = state["wkv"] if state else jnp.zeros((B, H, hd, hd), jnp.float32)
+    shifted = _token_shift(x, shift0)
+    r, k, v, g, log_w = _rkvgw(p, x, shifted, cfg)
+    rh, kh, vh = (_heads(t, hd).astype(jnp.float32) for t in (r, k, v))
+    wh = _heads(log_w, hd)                                # (B, S, H, hd) log-decay
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, hd)
+
+    if chunk and chunk > 1:
+        wkv, S_new = _chunked_wkv(rh, kh, vh, wh, u, S0, chunk)
+    else:
+        wkv, S_new = _scan_wkv(rh, kh, vh, wh, u, S0)
+
+    out = _group_norm(wkv.astype(x.dtype), p["ln_out"], cfg.norm_eps)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = out @ p["w_o"].astype(x.dtype)
+    if return_state:
+        return out, {"shift": x[:, -1], "wkv": S_new}
+    return out, None
+
+
+def _scan_wkv(r, k, v, w_log, u, S0):
+    """Exact sequential recurrence. r/k/v/w_log: (B, S, H, hd)."""
+    def step(S, t):
+        rt, kt, vt, wt = t                                # (B, H, hd)
+        att = S + u[None, :, :, None] * (kt[..., None] * vt[..., None, :])
+        out = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        S = jnp.exp(wt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w_log))
+    S_new, outs = jax.lax.scan(step, S0, xs)              # outs: (S, B, H, hd)
+    B, Sq = r.shape[0], r.shape[1]
+    return outs.transpose(1, 0, 2, 3).reshape(B, Sq, -1), S_new
+
+
+def _chunked_wkv(r, k, v, w_log, u, S0, L):
+    """Chunkwise-parallel recurrence, overflow-safe.
+
+    Within a chunk: decay(t, s) = exp(lp[t-1] - lp[s]) for s < t (<= 1), the
+    diagonal uses the bonus u. Cross-chunk: carried state decayed by
+    exp(lp[t-1]) (<= 1). All exps are of non-positive numbers.
+    """
+    B, S, H, hd = r.shape
+    n = -(-S // L)
+    pad = n * L - S
+    if pad:
+        zr = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zr(r), zr(k), zr(v)
+        w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=-1e-5)
+    resh = lambda t: t.reshape(B, n, L, H, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = (resh(t) for t in (r, k, v, w_log))  # (n, B, L, H, hd)
+
+    def chunk_step(S_in, c):
+        rr, kk, vv, ww = c                                # (B, L, H, hd)
+        lp = jnp.cumsum(ww, axis=1)                       # inclusive log-cumprod
+        lp_prev = lp - ww                                 # exclusive (lp[t-1])
+        # inter-chunk: r_t decayed-dot carried state
+        r_dec = rr * jnp.exp(lp_prev)
+        inter = jnp.einsum("blhk,bhkv->blhv", r_dec, S_in)
+        # intra-chunk: explicit (L, L, hd) decay tensor, all exps <= 0
+        ddec = lp_prev[:, :, None] - lp[:, None, :]       # (B, L_t, L_s, H, hd)
+        strict = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+        ddec = jnp.where(strict[None, :, :, None, None], ddec, -jnp.inf)
+        amat = jnp.einsum("blhk,bshk,blshk->blsh", rr, kk, jnp.exp(ddec))
+        diag = jnp.einsum("blhk,hk,blhk->blh", rr, u, kk)
+        intra = jnp.einsum("blsh,bshv->blhv", amat, vv)
+        intra = intra + diag[..., None] * vv
+        # state to end of chunk
+        k_dec = kk * jnp.exp(lp[:, -1:, :, :] - lp)       # exps <= 0
+        S_out = jnp.exp(lp[:, -1])[..., None] * S_in \
+            + jnp.einsum("blhk,blhv->bhkv", k_dec, vv)
+        return S_out, inter + intra
+
+    S_new, outs = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * L, H, hd)[:, :S]
+    return out.reshape(B, S, -1), S_new
+
+
+def time_mix_step(p, x, cfg, state):
+    """Single-token decode. x: (B, 1, d)."""
+    B, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    shifted = state["shift"].astype(x.dtype)[:, None, :]
+    r, k, v, g, log_w = _rkvgw(p, x, shifted, cfg)
+    rh, kh, vh = (_heads(t, hd).astype(jnp.float32)[:, 0] for t in (r, k, v))
+    wh = _heads(log_w, hd)[:, 0]                          # (B, H, hd)
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, hd)
+    S0 = state["wkv"]
+    att = S0 + u[None, :, :, None] * (kh[..., None] * vh[..., None, :])
+    wkv = jnp.einsum("bhk,bhkv->bhv", rh, att).reshape(B, 1, d)
+    S_new = jnp.exp(wh)[..., None] * S0 + kh[..., None] * vh[..., None, :]
+    out = _group_norm(wkv.astype(x.dtype), p["ln_out"], cfg.norm_eps)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = out @ p["w_o"].astype(x.dtype)
+    return out, {"shift": x[:, -1], "wkv": S_new}
+
+
+def channel_mix(p, x, cfg, state=None, *, return_state: bool = False):
+    """RWKV channel-mix (the FFN analogue). x: (B, S, d) normalized."""
+    B, S, d = x.shape
+    shift0 = state.astype(x.dtype) if state is not None else jnp.zeros((B, d), x.dtype)
+    shifted = _token_shift(x, shift0)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + (shifted - x) * mu[0]
+    xr = x + (shifted - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    out = jax.nn.sigmoid((xr @ p["cm_r"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype) \
+        * (kk @ p["cm_v"].astype(x.dtype))
+    if return_state:
+        return out, x[:, -1]
+    return out, None

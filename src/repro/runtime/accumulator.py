@@ -1,0 +1,59 @@
+"""Accumulator — provider-agnostic per-environment collection.
+
+"Each environment has its own dedicated Accumulator instance, which listens
+to the corresponding queue. Upon receiving a message, it forwards the data
+to the environment-specific Manager." Here the Accumulator also performs the
+device-batch assembly: records -> padded (streams, max_samples) arrays with
+validity masks for the window that just closed.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.runtime.queues import EnvQueue
+from repro.runtime.records import Record
+
+
+class Accumulator:
+    def __init__(self, env_id: str, streams: Sequence[str], max_samples: int):
+        self.env_id = env_id
+        self.streams = list(streams)
+        self.stream_index = {s: i for i, s in enumerate(self.streams)}
+        self.max_samples = max_samples
+        self._pending: Dict[int, List[Record]] = defaultdict(list)
+        self.stats = {"records": 0, "unknown_stream": 0, "overflow": 0}
+
+    def ingest(self, records: Sequence[Record]):
+        for r in records:
+            idx = self.stream_index.get(r.stream)
+            if idx is None:
+                self.stats["unknown_stream"] += 1
+                continue
+            self.stats["records"] += 1
+            self._pending[idx].append(r)
+
+    def close_window(self, t_start: float, t_end: float):
+        """Build the padded raw-window arrays for [t_start, t_end) and retain
+        newer records for later windows."""
+        S, M = len(self.streams), self.max_samples
+        values = np.zeros((S, M), np.float32)
+        ts = np.zeros((S, M), np.float32)
+        valid = np.zeros((S, M), bool)
+        for s in range(S):
+            recs = self._pending.get(s, [])
+            take, keep = [], []
+            for r in recs:
+                (take if r.timestamp < t_end else keep).append(r)
+            self._pending[s] = keep
+            take.sort(key=lambda r: r.timestamp)
+            if len(take) > M:
+                self.stats["overflow"] += len(take) - M
+                take = take[-M:]
+            for j, r in enumerate(take):
+                values[s, j] = r.value
+                ts[s, j] = r.timestamp
+                valid[s, j] = r.timestamp >= t_start
+        return values, ts, valid

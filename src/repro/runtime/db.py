@@ -1,0 +1,81 @@
+"""Append-only log store — "All input data and model decisions are also
+logged in a database, enabling future analysis and potential retraining."
+
+JSONL segments with atomic rotation; env identities are stored anonymized
+(salted hash) per the paper's anonymization requirement. A cursor (segment,
+offset) is exposed so the training node can consume exactly-once.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Iterator, Optional
+
+from repro.core.replay import anonymize_env_ids
+
+
+class LogDB:
+    def __init__(self, root: str, salt: str = "percepta",
+                 rotate_bytes: int = 8 * 2**20):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.salt = salt
+        self.rotate_bytes = rotate_bytes
+        self._lock = threading.Lock()
+        self._seg = self._latest_segment()
+        self._fh = None
+        self.stats = {"rows": 0, "bytes": 0, "segments": 0}
+
+    def _latest_segment(self) -> int:
+        segs = sorted(self.root.glob("seg-*.jsonl"))
+        return int(segs[-1].stem.split("-")[1]) if segs else 0
+
+    def _open(self):
+        if self._fh is None:
+            path = self.root / f"seg-{self._seg:06d}.jsonl"
+            self._fh = open(path, "a", buffering=1)
+            self.stats["segments"] += 1
+
+    def append(self, env_id: str, tick_time: float, obs, action, reward,
+               extra: Optional[dict] = None):
+        row = {
+            "env": anonymize_env_ids([env_id], self.salt)[0],
+            "t": float(tick_time),
+            "obs": [float(x) for x in obs],
+            "action": [float(x) for x in action],
+            "reward": float(reward),
+            "logged_at": time.time(),
+        }
+        if extra:
+            row.update(extra)
+        line = json.dumps(row)
+        with self._lock:
+            self._open()
+            self._fh.write(line + "\n")
+            self.stats["rows"] += 1
+            self.stats["bytes"] += len(line) + 1
+            if self._fh.tell() > self.rotate_bytes:
+                self._fh.close()
+                self._fh = None
+                self._seg += 1
+
+    def read_from(self, segment: int = 0, offset: int = 0) -> Iterator[tuple]:
+        """Yield (cursor, row) from the given cursor for retraining export."""
+        for path in sorted(self.root.glob("seg-*.jsonl")):
+            seg = int(path.stem.split("-")[1])
+            if seg < segment:
+                continue
+            with open(path) as fh:
+                for i, line in enumerate(fh):
+                    if seg == segment and i < offset:
+                        continue
+                    yield (seg, i + 1), json.loads(line)
+
+    def close(self):
+        with self._lock:
+            if self._fh:
+                self._fh.close()
+                self._fh = None

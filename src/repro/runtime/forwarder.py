@@ -1,0 +1,48 @@
+"""Forwarders — decision delivery, one per destination system.
+
+"If there is a smart light device that receives a 'turn on' decision, then
+the decision is routed to the specific Forwarder associated with that
+system. This Forwarder ensures the decision is formatted and transmitted
+correctly."
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.runtime.records import CODECS
+
+
+class Forwarder:
+    """Formats and 'transmits' decisions for one destination (transport
+    simulated by an in-memory sink; swap `transmit` for a real client)."""
+
+    def __init__(self, dest_id: str, protocol: str, action_indices: Sequence[int],
+                 transmit: Optional[Callable[[bytes], None]] = None):
+        self.dest_id = dest_id
+        self.protocol = protocol
+        self.action_indices = list(action_indices)
+        self.sink: List[bytes] = []
+        self._transmit = transmit or self.sink.append
+        self.stats = {"sent": 0, "bytes": 0}
+        self._lock = threading.Lock()
+
+    def forward(self, env_id: str, tick_time: float, actions):
+        encode = CODECS[self.protocol][0]
+        for idx in self.action_indices:
+            payload = encode(f"{self.dest_id}/act{idx}", tick_time,
+                             float(actions[idx]))
+            with self._lock:
+                self._transmit(payload)
+                self.stats["sent"] += 1
+                self.stats["bytes"] += len(payload)
+
+
+class ForwarderHub:
+    def __init__(self, forwarders: Sequence[Forwarder]):
+        self.forwarders = list(forwarders)
+
+    def dispatch(self, env_id: str, tick_time: float, actions):
+        for f in self.forwarders:
+            f.forward(env_id, tick_time, actions)

@@ -1,0 +1,102 @@
+"""Predictor — routes features to the decision model, validates actions,
+computes rewards, logs for retraining, hands decisions to Forwarders.
+
+The model is pluggable (``ModelAdapter``): a vector policy (edge RL), an
+LM-family model through a TokenCodec, or anything callable on (E, F)
+features. This is the "support any type of AI model that consumes this
+data" requirement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import replay as rp
+from repro.core.reward import RewardSpec, validate_actions
+
+
+@dataclass
+class ActionSpace:
+    low: np.ndarray
+    high: np.ndarray
+
+    @property
+    def n(self):
+        return len(self.low)
+
+
+class ModelAdapter:
+    """Wraps any policy fn(features (E,F)) -> actions (E,A)."""
+
+    def __init__(self, fn: Callable, name: str = "policy"):
+        self.fn = fn
+        self.name = name
+
+    def __call__(self, features):
+        return self.fn(features)
+
+
+def linear_policy(n_features: int, n_actions: int, seed: int = 0,
+                  low=-1.0, high=1.0) -> ModelAdapter:
+    """A small deterministic policy standing in for the deployed RL model."""
+    k = jax.random.PRNGKey(seed)
+    W = jax.random.normal(k, (n_features, n_actions)) / jnp.sqrt(n_features)
+
+    @jax.jit
+    def fn(feats):
+        return jnp.tanh(feats @ W) * (high - low) / 2 + (high + low) / 2
+
+    return ModelAdapter(fn, "linear_policy")
+
+
+class Predictor:
+    def __init__(self, model: ModelAdapter, reward_spec: RewardSpec,
+                 action_space: ActionSpace, n_envs: int, n_features: int,
+                 db=None, replay_capacity: int = 4096):
+        self.model = model
+        self.reward_spec = reward_spec
+        self.action_space = action_space
+        self.db = db
+        self.replay = rp.init(n_envs, replay_capacity, n_features,
+                              action_space.n)
+        self._prev = {
+            "obs": jnp.zeros((n_envs, n_features), jnp.float32),
+            "actions": jnp.zeros((n_envs, action_space.n), jnp.float32),
+            "have": False,
+        }
+        self.stats = {"ticks": 0, "violations": 0}
+        low = jnp.asarray(action_space.low, jnp.float32)
+        high = jnp.asarray(action_space.high, jnp.float32)
+
+        def _step(features, raw, prev_obs, prev_actions, replay, tick_time,
+                  have_prev):
+            actions = self.model(features)
+            actions, violated = validate_actions(actions, low, high)
+            # rewards are computed on engineering units, not z-scores
+            reward, per_term = self.reward_spec.compute(
+                raw, actions, prev_actions)
+            new_replay = jax.lax.cond(
+                have_prev,
+                lambda r: rp.add(r, prev_obs, prev_actions, reward, features,
+                                 tick_time),
+                lambda r: r,
+                replay)
+            return actions, reward, per_term, violated, new_replay
+
+        self._step = jax.jit(_step)
+
+    def on_tick(self, features, tick_time, raw=None):
+        """features: (E, F) device array; returns host actions + rewards."""
+        raw = features if raw is None else raw
+        actions, reward, per_term, violated, self.replay = self._step(
+            features, raw, self._prev["obs"], self._prev["actions"],
+            self.replay, jnp.asarray(tick_time, jnp.float32),
+            jnp.asarray(self._prev["have"]))
+        self._prev = {"obs": features, "actions": actions, "have": True}
+        self.stats["ticks"] += 1
+        self.stats["violations"] += int(np.asarray(violated).sum())
+        return np.asarray(actions), np.asarray(reward), np.asarray(per_term)

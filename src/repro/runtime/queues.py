@@ -1,0 +1,62 @@
+"""Per-environment internal queues (the RabbitMQ stand-in).
+
+One queue per environment keeps environments isolated ("these environments
+operate independently, do not interfere with each other").
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Optional
+
+from repro.runtime.records import Record
+
+
+class EnvQueue:
+    def __init__(self, env_id: str, maxsize: int = 100_000):
+        self.env_id = env_id
+        self._q: "queue.Queue[Record]" = queue.Queue(maxsize=maxsize)
+        self.stats = {"enqueued": 0, "dropped": 0, "dequeued": 0}
+
+    def put(self, rec: Record) -> bool:
+        try:
+            self._q.put_nowait(rec)
+            self.stats["enqueued"] += 1
+            return True
+        except queue.Full:
+            self.stats["dropped"] += 1
+            return False
+
+    def drain(self, max_items: int = 1_000_000):
+        out = []
+        while len(out) < max_items:
+            try:
+                out.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        self.stats["dequeued"] += len(out)
+        return out
+
+    def qsize(self):
+        return self._q.qsize()
+
+
+class QueueBroker:
+    """Routes records to environment queues; creates them on demand."""
+
+    def __init__(self):
+        self._queues: Dict[str, EnvQueue] = {}
+        self._lock = threading.Lock()
+
+    def queue_for(self, env_id: str) -> EnvQueue:
+        with self._lock:
+            if env_id not in self._queues:
+                self._queues[env_id] = EnvQueue(env_id)
+            return self._queues[env_id]
+
+    def publish(self, rec: Record):
+        self.queue_for(rec.env_id).put(rec)
+
+    def stats(self):
+        return {e: q.stats | {"depth": q.qsize()}
+                for e, q in self._queues.items()}

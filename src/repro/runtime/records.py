@@ -1,0 +1,57 @@
+"""Standardized record format + simulated source payload encodings.
+
+Receivers produce raw protocol payloads; Translators parse them into
+:class:`Record`s — the "standardized format" flowing to the env queues.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass
+from typing import List
+
+
+@dataclass(frozen=True)
+class Record:
+    env_id: str
+    stream: str
+    timestamp: float
+    value: float
+
+
+# --- simulated wire formats (one per protocol family) -----------------------
+
+def encode_mqtt_json(stream: str, ts: float, value: float) -> bytes:
+    return json.dumps({"sensor": stream, "t": ts, "v": value}).encode()
+
+
+def decode_mqtt_json(payload: bytes):
+    d = json.loads(payload.decode())
+    return d["sensor"], float(d["t"]), float(d["v"])
+
+
+def encode_http_csv(stream: str, ts: float, value: float) -> bytes:
+    return f"{stream},{ts:.3f},{value:.6f}".encode()
+
+
+def decode_http_csv(payload: bytes):
+    s, t, v = payload.decode().split(",")
+    return s, float(t), float(v)
+
+
+def encode_amqp_binary(stream: str, ts: float, value: float) -> bytes:
+    name = stream.encode()[:32].ljust(32, b"\0")
+    return name + struct.pack("<dd", ts, value)
+
+
+def decode_amqp_binary(payload: bytes):
+    name = payload[:32].rstrip(b"\0").decode()
+    ts, v = struct.unpack("<dd", payload[32:48])
+    return name, ts, v
+
+
+CODECS = {
+    "mqtt": (encode_mqtt_json, decode_mqtt_json),
+    "http": (encode_http_csv, decode_http_csv),
+    "amqp": (encode_amqp_binary, decode_amqp_binary),
+}

@@ -1,0 +1,190 @@
+"""PerceptaSystem — full wiring of Figure 1, multi-environment.
+
+Deployment modes (paper §III.C): the SAME system object serves
+  * edge  — one environment, fully local
+  * fog   — a few nearby environments
+  * cloud — many isolated environments simultaneously
+All environments are rows of the batched device pipeline; isolation is by
+construction (per-env queues, per-env state rows, per-env model slots).
+
+Time is virtual (``speedup``) so benchmarks can run days of stream time in
+seconds. The Manager logic lives in ``run_window``: close each env's window,
+assemble the device batch, run the (fused or modular) Percepta tick, run the
+Predictor, forward the decisions, log everything.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PerceptaPipeline, PipelineConfig
+from repro.core.frame import make_raw_window
+from repro.runtime.accumulator import Accumulator
+from repro.runtime.forwarder import ForwarderHub
+from repro.runtime.predictor import Predictor
+from repro.runtime.queues import QueueBroker
+from repro.runtime.receivers import Receiver, SimulatedDevice
+from repro.runtime.translator import Translator
+
+
+@dataclass
+class SourceSpec:
+    source_id: str
+    protocol: str                 # mqtt | http | amqp
+    device: SimulatedDevice
+    unit_scale: float = 1.0
+
+
+class PerceptaSystem:
+    def __init__(self, env_ids: Sequence[str], sources: Sequence[SourceSpec],
+                 pipeline_cfg: PipelineConfig, predictor: Predictor,
+                 forwarders: Optional[ForwarderHub] = None, db=None,
+                 mode: str = "fused", speedup: float = 60.0,
+                 t0: float = 0.0, manual_time: bool = False):
+        # manual_time: the virtual clock only advances when run_windows
+        # closes a window — deterministic under arbitrary jit-compile stalls
+        # (tests); wall-clock speedup mode is the realistic deployment shape.
+        self.manual_time = manual_time
+        self._manual_t = t0
+        assert pipeline_cfg.n_envs == len(env_ids)
+        assert pipeline_cfg.n_streams == len(sources)
+        self.env_ids = list(env_ids)
+        self.sources = list(sources)
+        self.cfg = pipeline_cfg
+        self.pipeline = PerceptaPipeline(pipeline_cfg, mode=mode)
+        self.state = self.pipeline.init_state()
+        self.predictor = predictor
+        self.forwarders = forwarders
+        self.db = db
+        self.speedup = speedup
+        self._wall0 = time.time()
+        self._t0 = t0
+        self.window_s = pipeline_cfg.n_ticks * pipeline_cfg.tick_s
+        self.window_index = 0
+
+        self.broker = QueueBroker()
+        self.translators = {
+            s.source_id: Translator(s.source_id, s.protocol,
+                                    unit_scale=s.unit_scale)
+            for s in sources
+        }
+        self.receivers: List[Receiver] = []
+        for s in sources:
+            r = Receiver(s.source_id, s.protocol, s.device, self.now,
+                         speedup=speedup)
+            tr = self.translators[s.source_id]
+            for env in env_ids:
+                def on_payload(env_id, payload, _tr=tr):
+                    rec = _tr.translate(env_id, payload)
+                    if rec is not None:
+                        self.broker.publish(rec)
+                r.subscribe(env, on_payload)
+            self.receivers.append(r)
+        stream_names = [s.device.stream for s in sources]
+        self.accumulators = {
+            env: Accumulator(env, stream_names, pipeline_cfg.max_samples)
+            for env in env_ids
+        }
+        self.metrics: Dict[str, list] = {"tick_latency_s": [],
+                                         "ingest_records": []}
+
+    # --- virtual clock -------------------------------------------------------
+    def now(self) -> float:
+        if self.manual_time:
+            return self._manual_t
+        return self._t0 + (time.time() - self._wall0) * self.speedup
+
+    def window_bounds(self):
+        start = self._t0 + self.window_index * self.window_s
+        return start, start + self.window_s
+
+    # --- threaded operation ---------------------------------------------------
+    def start(self):
+        for r in self.receivers:
+            r.start()
+
+    def stop(self):
+        for r in self.receivers:
+            r.stop()
+
+    # --- synchronous operation (benchmarks / tests) ---------------------------
+    def pump_receivers(self):
+        for r in self.receivers:
+            r.poll_once()
+
+    def run_window(self) -> dict:
+        """Process one closed window across all environments."""
+        t_start, t_end = self.window_bounds()
+        E, S, M = self.cfg.n_envs, self.cfg.n_streams, self.cfg.max_samples
+
+        n_new = 0
+        for env in self.env_ids:
+            recs = self.broker.queue_for(env).drain()
+            n_new += len(recs)
+            self.accumulators[env].ingest(recs)
+
+        values = np.zeros((E, S, M), np.float32)
+        ts = np.zeros((E, S, M), np.float32)
+        valid = np.zeros((E, S, M), bool)
+        for i, env in enumerate(self.env_ids):
+            v, t, m = self.accumulators[env].close_window(t_start, t_end)
+            values[i], ts[i], valid[i] = v, t, m
+
+        t_proc0 = time.time()
+        raw = make_raw_window(values, ts, valid)
+        self.state, feats, frame = self.pipeline.run_tick(
+            self.state, raw, jnp.full((E,), t_start, jnp.float32))
+        actions, rewards, per_term = self.predictor.on_tick(
+            feats.features, t_end, raw=feats.raw)
+        latency = time.time() - t_proc0
+
+        if self.forwarders is not None:
+            for i, env in enumerate(self.env_ids):
+                self.forwarders.dispatch(env, t_end, actions[i])
+        if self.db is not None:
+            obs = np.asarray(feats.features)
+            for i, env in enumerate(self.env_ids):
+                self.db.append(env, t_end, obs[i], actions[i],
+                               float(rewards[i]))
+
+        self.window_index += 1
+        self.metrics["tick_latency_s"].append(latency)
+        self.metrics["ingest_records"].append(n_new)
+        return {
+            "window": self.window_index - 1,
+            "records": n_new,
+            "latency_s": latency,
+            "mean_reward": float(np.mean(rewards)),
+            "observed_frac": float(np.asarray(frame.observed).mean()),
+            "filled_frac": float(np.asarray(frame.filled).mean()),
+            "anomalous": int(np.asarray(frame.anomalous).sum()),
+        }
+
+    def run_windows(self, n: int, pump: bool = True) -> List[dict]:
+        out = []
+        for _ in range(n):
+            if pump:
+                # synchronous mode: advance the virtual clock past the window
+                # end, then poll every receiver once
+                t_end = self.window_bounds()[1]
+                if self.manual_time:
+                    self._manual_t = t_end + 1e-3
+                else:
+                    while self.now() < t_end:
+                        time.sleep(0.001)
+                self.pump_receivers()
+            out.append(self.run_window())
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "queues": self.broker.stats(),
+            "receivers": {r.source_id: r.stats for r in self.receivers},
+            "translators": {t.source_id: t.stats
+                            for t in self.translators.values()},
+            "predictor": self.predictor.stats,
+        }

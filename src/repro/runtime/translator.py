@@ -1,0 +1,34 @@
+"""Translators — per-source format adaptation to the standardized Record.
+
+"Each data source also has an associated Translator that adjusts to the
+format of the incoming data, extracting only the relevant information ...
+and submits it to an internal queue associated with the appropriate
+environment."
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.runtime.records import CODECS, Record
+
+
+class Translator:
+    def __init__(self, source_id: str, protocol: str,
+                 stream_rename: Optional[Dict[str, str]] = None,
+                 unit_scale: float = 1.0):
+        self.source_id = source_id
+        self.decode = CODECS[protocol][1]
+        self.stream_rename = stream_rename or {}
+        self.unit_scale = unit_scale
+        self.stats = {"records": 0, "errors": 0}
+
+    def translate(self, env_id: str, payload: bytes) -> Optional[Record]:
+        try:
+            stream, ts, value = self.decode(payload)
+        except Exception:
+            self.stats["errors"] += 1
+            return None
+        self.stats["records"] += 1
+        stream = self.stream_rename.get(stream, stream)
+        return Record(env_id=env_id, stream=stream, timestamp=ts,
+                      value=value * self.unit_scale)

@@ -1,0 +1,163 @@
+"""Serving engine: continuous batching over decode slots.
+
+A fixed pool of B slots (B = the arch's decode batch) runs one fused
+``decode_step`` per engine tick; requests are admitted into free slots at
+prefill time (their prompt is prefilled into the slot's rows of the batched
+KV cache via the per-sample ``lengths``). Finished slots (eos/max-tokens)
+free immediately — admission and retirement never stall the running batch,
+which is the throughput-critical property (vLLM-style, adapted to fixed
+TPU-friendly shapes: no paging, per-slot ring/global caches as the arch
+dictates).
+
+Straggler/timeout mitigation at the request level: requests exceeding their
+deadline are retired with partial output so one stuck request can't hold a
+slot hostage.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (L,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1               # -1 = never
+    deadline_s: float = 60.0
+    submitted_at: float = field(default_factory=time.time)
+    tokens: list = field(default_factory=list)
+    done: bool = False
+    finish_reason: str = ""
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_slots: int, max_seq: int,
+                 *, greedy: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        n_groups = model.cfg.n_groups
+
+        def step(params, inputs, cache, adv):
+            """decode + per-slot advance masking: non-live slots keep their
+            cache rows and lengths (recurrent states must not see pad
+            tokens; KV writes are naturally masked by lengths)."""
+            logits, new_cache = model.decode_step(params, inputs, cache)
+
+            def merge(old, new):
+                if old.ndim >= 1 and old.shape[0] == batch_slots \
+                        and not (old.ndim >= 2 and old.shape[0] == n_groups
+                                 and old.shape[1] == batch_slots):
+                    m = adv.reshape((batch_slots,) + (1,) * (old.ndim - 1))
+                    return jnp.where(m > 0, new, old)
+                if old.ndim >= 2 and old.shape[0] == n_groups \
+                        and old.shape[1] == batch_slots:
+                    m = adv.reshape((1, batch_slots) + (1,) * (old.ndim - 2))
+                    return jnp.where(m > 0, new, old)
+                return new
+            merged = jax.tree.map(merge, cache, new_cache)
+            return logits, merged
+
+        self._decode = jax.jit(step, donate_argnums=(2,))
+        self._last_tokens = np.zeros((batch_slots, 1), np.int32)
+        self.stats = {"ticks": 0, "tokens_out": 0, "admitted": 0,
+                      "retired": 0, "timeouts": 0}
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Prefill queued requests into free slots (token-by-token feed —
+        batched single-slot prefill keeps one jitted shape; a production
+        deployment adds a bucketed prefill step per prompt-length bin)."""
+        for i in range(self.B):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self.stats["admitted"] += 1
+            # reset slot: lengths[i]=0 kills the slot's old cache rows (all
+            # reads are masked by slot_positions validity)
+            self.cache["lengths"] = self.cache["lengths"].at[i].set(0)
+            # feed prompt[:-1] through decode steps for this slot only;
+            # prompt[-1] stays pending so the next engine tick's logits
+            # produce the FIRST generated token (no spurious pad feed)
+            for t in req.prompt[:-1]:
+                toks = self._last_tokens.copy()
+                toks[i, 0] = int(t)
+                mask = np.zeros((self.B,), np.int32)
+                mask[i] = 1
+                self._step_masked(toks, mask)
+            self._last_tokens[i, 0] = int(req.prompt[-1])
+            self.slots[i] = req
+
+    def _step_masked(self, tokens: np.ndarray, advance_mask: np.ndarray):
+        """One decode step where only masked slots advance."""
+        adv = jnp.asarray(advance_mask, jnp.int32)
+        logits, self.cache = self._decode(self.params,
+                                          {"tokens": jnp.asarray(tokens)},
+                                          self.cache, adv)
+        return logits
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> Dict[int, int]:
+        """One engine iteration: admit, decode one token for live slots,
+        retire finished/timed-out requests. Returns {rid: token}."""
+        self._admit()
+        live = np.array([1 if r is not None else 0 for r in self.slots],
+                        np.int32)
+        if live.sum() == 0:
+            return {}
+        logits = self._step_masked(self._last_tokens, live)
+        self.stats["ticks"] += 1
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        else:
+            self.rng, k = jax.random.split(self.rng)
+            nxt = np.asarray(jax.random.categorical(k, logits)).astype(np.int32)
+        out = {}
+        now = time.time()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.tokens.append(tok)
+            self._last_tokens[i, 0] = tok
+            out[req.rid] = tok
+            self.stats["tokens_out"] += 1
+            timeout = (now - req.submitted_at) > req.deadline_s
+            if tok == req.eos_id or len(req.tokens) >= req.max_new_tokens \
+                    or timeout:
+                req.done = True
+                req.finish_reason = ("timeout" if timeout else
+                                     "eos" if tok == req.eos_id else "length")
+                if timeout:
+                    self.stats["timeouts"] += 1
+                self.stats["retired"] += 1
+                self.slots[i] = None
+                self._last_tokens[i, 0] = 0
+                self.cache["lengths"] = self.cache["lengths"].at[i].set(0)
+        return out
+
+    def run_until_drained(self, requests: List[Request],
+                          max_ticks: int = 10_000) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_ticks):
+            self.tick()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return requests

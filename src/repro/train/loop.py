@@ -1,0 +1,114 @@
+"""Training loop: checkpoint/restart, preemption, straggler policy, metrics.
+
+The loop is deliberately boring — all the interesting machinery lives in
+steps.build_train_step (sharded step), Checkpointer (fault tolerance),
+Prefetcher (overlapped input), StragglerPolicy/PreemptionGuard (mitigation).
+Runs for real on CPU with reduced configs (examples/train_retrain.py trains
+a ~small model for hundreds of steps); the same code drives the full archs
+on a pod.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ModelConfig, ShapeConfig, ShardingConfig,
+                                TrainConfig)
+from repro.data.pipeline import Prefetcher, StreamCursor, SyntheticLMStream
+from repro.distribution.elastic import PreemptionGuard, StragglerPolicy
+from repro.launch.steps import build_train_step
+from repro.train import optimizer as opt_lib
+from repro.train.checkpoint import Checkpointer
+
+
+@dataclass
+class TrainResult:
+    steps_run: int
+    final_step: int
+    losses: list
+    step_times: list
+    restored_from: Optional[int]
+    preempted: bool = False
+    straggler_events: int = 0
+
+
+def train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+          perf: ShardingConfig = ShardingConfig(),
+          tcfg: TrainConfig = TrainConfig(),
+          max_steps: Optional[int] = None,
+          stream_seed: int = 0,
+          on_step: Optional[Callable[[int, dict], None]] = None,
+          checkpointer: Optional[Checkpointer] = None) -> TrainResult:
+    fn, (pspecs, opt_specs, in_specs), (param_sh, opt_sh, batch_sh), model = \
+        build_train_step(cfg, shape, mesh, perf, tcfg)
+
+    ckpt = checkpointer or Checkpointer(tcfg.checkpoint_dir,
+                                        keep=tcfg.keep_checkpoints,
+                                        async_mode=tcfg.async_checkpoint)
+    guard = PreemptionGuard().install()
+    straggler = StragglerPolicy()
+
+    cursor = StreamCursor()
+    restored_from = None
+    latest = ckpt.latest_step()
+    state_like = (pspecs, opt_specs)
+    if latest is not None:
+        (params, opt_state), extra = ckpt.restore(
+            latest, state_like, (param_sh, opt_sh))
+        cursor = StreamCursor.from_dict(extra.get("cursor", {}))
+        start_step = latest
+        restored_from = latest
+    else:
+        with jax.set_mesh(mesh):
+            params = jax.jit(model.init, out_shardings=param_sh)(
+                jax.random.PRNGKey(tcfg.seed))
+            opt_state = jax.jit(opt_lib.init, out_shardings=opt_sh)(params)
+        start_step = 0
+
+    stream = SyntheticLMStream(cfg.vocab_size, shape.global_batch,
+                               shape.seq_len, seed=stream_seed,
+                               frontend=cfg.frontend, d_model=cfg.d_model,
+                               n_patches=cfg.n_patches)
+    prefetch = Prefetcher(stream, cursor, shardings=batch_sh)
+
+    total = max_steps if max_steps is not None else tcfg.total_steps
+    losses, times = [], []
+    step = start_step
+    preempted = False
+    with jax.set_mesh(mesh):
+        while step < total:
+            batch = prefetch.next()
+            t0 = time.time()
+            params, opt_state, metrics = fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            step += 1
+            losses.append(loss)
+            times.append(dt)
+            verdict = straggler.observe(dt)
+            if on_step:
+                on_step(step, {**{k: float(v) for k, v in metrics.items()},
+                               "time_s": dt, "straggler": verdict})
+            should_ckpt = (step % tcfg.checkpoint_every == 0) or step == total
+            if guard.triggered or verdict == "fail":
+                should_ckpt = True
+            if should_ckpt:
+                ckpt.save(step, (params, opt_state),
+                          extra={"cursor": cursor.state_dict(),
+                                 "loss": loss})
+            if guard.triggered:
+                preempted = True
+                break
+            if verdict == "fail":
+                # at scale: drop the slow host and re-mesh (elastic). In a
+                # single process we record the event and continue.
+                straggler.strikes = 0
+    ckpt.flush()
+    return TrainResult(steps_run=step - start_step, final_step=step,
+                       losses=losses, step_times=times,
+                       restored_from=restored_from, preempted=preempted,
+                       straggler_events=straggler.slow_events)

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests see the single real CPU device; only launch/dryrun.py (run as its own
+# process) forces the 512-device dry-run platform
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,153 @@
+"""Unit tests for the Percepta core stream operators."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import aggregate as agg
+from repro.core import anomaly as an
+from repro.core import gapfill as gf
+from repro.core import harmonize as hz
+from repro.core import normalize as nz
+from repro.core.frame import make_raw_window
+
+
+def test_harmonize_buckets_exact():
+    # 1 env, 1 stream, hand-placed samples on a 4-tick grid of 10s
+    ts = np.array([[[1.0, 9.0, 11.0, 35.0, 41.0, 99.0]]], np.float32)
+    vals = np.array([[[1.0, 3.0, 5.0, 7.0, 9.0, 11.0]]], np.float32)
+    valid = np.array([[[1, 1, 1, 1, 0, 1]]], bool)  # 9.0 valid, 41 invalid
+    raw = make_raw_window(vals, ts, valid)
+    ticks = hz.tick_grid(jnp.zeros((1,)), 10.0, 4)  # ticks at 10,20,30,40
+    out, obs = hz.harmonize(raw, ticks, 10.0, "mean")
+    out, obs = np.asarray(out)[0, 0], np.asarray(obs)[0, 0]
+    # bucket (0,10]: 1.0, 9.0 -> mean 2.0? (1+3)/2 = 2.0 ; (10,20]: 11.0 -> 5
+    assert obs.tolist() == [True, True, False, True]
+    assert_allclose(out, [2.0, 5.0, 0.0, 7.0])
+
+
+def test_harmonize_aggs():
+    ts = np.array([[[5.0, 6.0, 7.0]]], np.float32)
+    vals = np.array([[[2.0, 4.0, 9.0]]], np.float32)
+    raw = make_raw_window(vals, ts)
+    ticks = hz.tick_grid(jnp.zeros((1,)), 10.0, 1)
+    for a, expect in [("mean", 5.0), ("sum", 15.0), ("min", 2.0),
+                      ("max", 9.0), ("last", 9.0)]:
+        out, obs = hz.harmonize(raw, ticks, 10.0, a)
+        assert_allclose(np.asarray(out)[0, 0, 0], expect, err_msg=a)
+
+
+def test_harmonize_interp_bridges():
+    # samples at t=0 (v=0) and t=100 (v=100): ticks interpolate linearly
+    ts = np.array([[[0.0, 100.0]]], np.float32)
+    vals = np.array([[[0.0, 100.0]]], np.float32)
+    raw = make_raw_window(vals, ts)
+    ticks = jnp.asarray([[25.0, 50.0, 75.0]], jnp.float32)
+    out, obs = hz.harmonize_interp(raw, ticks)
+    assert_allclose(np.asarray(out)[0, 0], [25.0, 50.0, 75.0], rtol=1e-5)
+    assert np.asarray(obs).all()
+
+
+def test_gapfill_locf_and_carry():
+    state = gf.init_state(1, 1)
+    v = jnp.asarray([[[1.0, 0.0, 0.0, 4.0, 0.0]]])
+    obs = jnp.asarray([[[True, False, False, True, False]]])
+    ticks = jnp.arange(5, dtype=jnp.float32)[None] * 60
+    out, filled, new_state = gf.gap_fill(v, obs, state, ticks, "locf")
+    assert_allclose(np.asarray(out)[0, 0], [1, 1, 1, 4, 4])
+    assert np.asarray(filled)[0, 0].tolist() == [False, True, True, False, True]
+    assert float(new_state.last_value[0, 0]) == 4.0
+    # next window: leading gap uses carried last value
+    v2 = jnp.asarray([[[0.0, 7.0, 0.0, 0.0, 0.0]]])
+    obs2 = jnp.asarray([[[False, True, False, False, False]]])
+    out2, filled2, _ = gf.gap_fill(v2, obs2, new_state, ticks + 300, "locf")
+    assert_allclose(np.asarray(out2)[0, 0], [4, 7, 7, 7, 7])
+
+
+def test_gapfill_linear_interior():
+    state = gf.init_state(1, 1)
+    v = jnp.asarray([[[2.0, 0.0, 0.0, 8.0]]])
+    obs = jnp.asarray([[[True, False, False, True]]])
+    ticks = jnp.arange(4, dtype=jnp.float32)[None]
+    out, filled, _ = gf.gap_fill(v, obs, state, ticks, "linear")
+    assert_allclose(np.asarray(out)[0, 0], [2.0, 4.0, 6.0, 8.0], rtol=1e-5)
+
+
+def test_gapfill_seasonal_learns_slots():
+    state = gf.init_state(1, 1, K=4)
+    ticks = jnp.arange(4, dtype=jnp.float32)[None]
+    tod = jnp.arange(4, dtype=jnp.int32)[None]
+    v = jnp.asarray([[[10.0, 20.0, 30.0, 40.0]]])
+    obs = jnp.ones((1, 1, 4), bool)
+    _, _, state = gf.gap_fill(v, obs, state, ticks, "seasonal", tick_of_day=tod)
+    # second window: slot 1 missing -> seasonal mean 20
+    v2 = jnp.asarray([[[11.0, 0.0, 29.0, 41.0]]])
+    obs2 = jnp.asarray([[[True, False, True, True]]])
+    out2, filled2, _ = gf.gap_fill(v2, obs2, state, ticks, "seasonal",
+                                   tick_of_day=tod)
+    assert_allclose(np.asarray(out2)[0, 0, 1], 20.0, rtol=1e-5)
+    assert bool(np.asarray(filled2)[0, 0, 1])
+
+
+def test_anomaly_zscore_detects_and_clips():
+    state = an.AnomalyState(mean=jnp.full((1, 1), 10.0),
+                            var=jnp.full((1, 1), 1.0),
+                            count=jnp.full((1, 1), 100.0))
+    v = jnp.asarray([[[10.0, 10.5, 99.0, 9.5]]])
+    obs = jnp.ones((1, 1, 4), bool)
+    spikes = an.detect_zscore(v, obs, state, k_sigma=6.0)
+    assert np.asarray(spikes)[0, 0].tolist() == [False, False, True, False]
+    out, obs2, _ = an.replace(v, obs, spikes, state, "clip", 6.0)
+    assert_allclose(np.asarray(out)[0, 0, 2], 16.0)  # mean + 6*sigma
+    out3, obs3, _ = an.replace(v, obs, spikes, state, "missing", 6.0)
+    assert not np.asarray(obs3)[0, 0, 2]
+
+
+def test_anomaly_mad_window_local():
+    v = jnp.asarray([[[1.0, 1.1, 0.9, 50.0, 1.05, 0.95, 1.0, 1.02]]])
+    obs = jnp.ones((1, 1, 8), bool)
+    spikes = an.detect_mad(v, obs, k=8.0)
+    assert np.asarray(spikes)[0, 0].tolist() == [False] * 3 + [True] + [False] * 4
+
+
+def test_normalize_welford_matches_numpy(rng):
+    state = nz.init_state(1, 1)
+    chunks = [rng.normal(3, 2, (1, 1, 16)).astype(np.float32) for _ in range(5)]
+    masks = [rng.rand(1, 1, 16) > 0.3 for _ in range(5)]
+    for c, m in zip(chunks, masks):
+        state = nz.update(state, jnp.asarray(c), jnp.asarray(m))
+    all_v = np.concatenate([c[m] for c, m in zip(chunks, masks)])
+    assert_allclose(float(state.mean[0, 0]), all_v.mean(), rtol=1e-4)
+    assert_allclose(float(nz.sigma(state)[0, 0]), all_v.std(ddof=1), rtol=1e-3)
+    assert_allclose(float(state.min[0, 0]), all_v.min(), rtol=1e-5)
+    assert_allclose(float(state.max[0, 0]), all_v.max(), rtol=1e-5)
+
+
+def test_normalize_roundtrip(rng):
+    state = nz.init_state(2, 3)
+    v = rng.normal(5, 3, (2, 3, 8)).astype(np.float32)
+    state = nz.update(state, jnp.asarray(v), jnp.ones((2, 3, 8), bool))
+    z = nz.znorm(state, jnp.asarray(v))
+    back = nz.denorm_z(state, z)
+    assert_allclose(np.asarray(back), v, rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_combine_weighted_average():
+    # the paper's example: weighted average of same-area temperature sensors
+    v = jnp.asarray([[[20.0, 20.0], [22.0, 22.0], [100.0, 100.0]]])  # (1,3,2)
+    w = jnp.asarray([[0.5, 0.5, 0.0]])  # feature 0: avg of sensors 0,1
+    feats = agg.combine(v, w)
+    assert_allclose(np.asarray(feats)[0, 0], [21.0, 21.0])
+
+
+@pytest.mark.parametrize("a", list(agg.AGGS))
+def test_window_agg_all(a, rng):
+    v = rng.normal(0, 1, (2, 3, 10)).astype(np.float32)
+    m = rng.rand(2, 3, 10) > 0.4
+    m[0, 0, :] = True
+    out = np.asarray(agg.window_agg(jnp.asarray(v), jnp.asarray(m), a))
+    row = v[0, 0][m[0, 0]]
+    expect = {"last": row[-1], "mean": row.mean(), "sum": row.sum(),
+              "min": row.min(), "max": row.max(), "std": row.std(),
+              "count": row.size}[a]
+    assert_allclose(out[0, 0], expect, rtol=1e-4, atol=1e-5)

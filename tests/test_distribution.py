@@ -1,0 +1,114 @@
+"""Sharding-rule resolution, HLO analysis, and an 8-fake-device mini dry-run
+(subprocess: device count must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ShardingConfig
+from repro.distribution import sharding as shd
+from repro.launch import hlo_analysis
+
+
+def FakeMesh(shape):
+    """Abstract 16x16 mesh — NamedSharding-compatible without 256 devices."""
+    return jax.sharding.AbstractMesh(
+        tuple(s for _, s in shape), tuple(n for n, _ in shape))
+
+
+def _spec(shape, dims, mesh_shape=(("data", 16), ("model", 16))):
+    mesh = FakeMesh(mesh_shape)
+    return shd.resolve(shape, dims, mesh, shd.param_rules(ShardingConfig()))
+
+
+def test_vocab_not_divisible_falls_back_to_d_model():
+    # internvl2 vocab 92553 % 16 != 0 -> d_model takes 'model'
+    import jax.sharding as js
+    sh = _spec((92553, 6144), ("vocab", "d_model"))
+    assert sh.spec == js.PartitionSpec(None, "model")
+
+
+def test_priority_experts_beat_d_ff():
+    import jax.sharding as js
+    sh = _spec((16, 4096, 6400), ("experts", "d_model", "d_ff"))
+    assert sh.spec == js.PartitionSpec("model", None, None)
+
+
+def test_d_model_never_steals_from_heads_flat():
+    import jax.sharding as js
+    sh = _spec((4096, 2048), ("d_model", "heads_flat"))
+    assert sh.spec == js.PartitionSpec(None, "model")
+
+
+def test_zero1_never_shards_layers():
+    import jax.sharding as js
+    from repro.models import param as Pm
+    mesh = FakeMesh((("data", 16), ("model", 16)))
+    spec_tree = {"w": jax.ShapeDtypeStruct((32, 4096, 6400), jnp_dtype())}
+    dims_tree = {"w": ("layers", "d_model", "d_ff")}
+    out = shd.zero1_shardings(spec_tree, dims_tree, mesh, ShardingConfig())
+    # layers (32, divisible by 16) must NOT get 'data'; d_model does
+    assert out["w"].spec == js.PartitionSpec(None, "data", "model")
+
+
+def jnp_dtype():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+def test_hlo_trip_count_multiplication():
+    text = open(os.path.join(os.path.dirname(__file__),
+                             "data_hlo_sample.txt")).read()
+    res = hlo_analysis.analyze_hlo(text, 8)
+    # dot: 2*32*128*512 per trip * 7 trips ~ 2.94e7 (+ elementwise noise)
+    assert 2.9e7 < res["flops"] < 3.2e7
+    assert res["collectives"]["all-gather"] > 0
+
+
+DRYRUN_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np, jax, json
+    from jax.sharding import AxisType
+    from repro.configs.base import SHAPES, ShapeConfig, ShardingConfig
+    from repro.configs.registry import get_config
+    from repro.launch.steps import build_step
+    from repro.launch import roofline
+
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4),
+                             ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    cfg = get_config({arch!r} + ":smoke")
+    shape = ShapeConfig("t", 64, 8, {kind!r})
+    fn, specs, shardings, model = build_step(shape.kind, cfg, shape, mesh)
+    with jax.set_mesh(mesh):
+        compiled = fn.lower(*specs).compile()
+    cell = roofline.terms_from_compiled(compiled, 8)
+    print(json.dumps({{"flops": cell["hlo_flops_per_dev"],
+                       "coll": cell["coll_link_bytes_per_dev"],
+                       "fits": cell["fits_hbm"]}}))
+""")
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("qwen3-0.6b", "train"),
+    ("phi3.5-moe-42b-a6.6b", "train"),   # shard_map MoE under 8 devices
+    ("recurrentgemma-2b", "decode"),     # ring cache + shard_map writes
+])
+def test_mini_dryrun_8_devices(arch, kind):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = DRYRUN_SNIPPET.format(src=os.path.abspath(src), arch=arch,
+                                 kind=kind)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["flops"] > 0
+    assert out["fits"]

@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core import anomaly as an
+from repro.core import codec as cd
+from repro.core import gapfill as gf
+from repro.core import harmonize as hz
+from repro.core import normalize as nz
+from repro.core.frame import make_raw_window
+from repro.core.reward import RewardSpec, RewardTerm
+from repro.distribution import compression as comp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def raw_windows(draw, max_e=3, max_s=3, max_m=12):
+    E = draw(st.integers(1, max_e))
+    S = draw(st.integers(1, max_s))
+    M = draw(st.integers(1, max_m))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.RandomState(seed)
+    vals = rng.normal(0, 5, (E, S, M)).astype(np.float32)
+    ts = rng.uniform(0, 600, (E, S, M)).astype(np.float32)
+    valid = rng.rand(E, S, M) > rng.uniform(0, 0.8)
+    return make_raw_window(vals, ts, valid)
+
+
+@given(raw_windows())
+@settings(**SETTINGS)
+def test_harmonize_sum_conserves_mass(raw):
+    """'sum' aggregation conserves the total of in-window valid samples."""
+    ticks = hz.tick_grid(jnp.zeros((raw.n_envs,)), 60.0, 10)
+    out, obs = hz.harmonize(raw, ticks, 60.0, "sum")
+    in_window = np.asarray(raw.valid) & (np.asarray(raw.timestamps) > 0) \
+        & (np.asarray(raw.timestamps) <= 600.0)
+    total_in = (np.asarray(raw.values) * in_window).sum()
+    assert_allclose(np.asarray(out).sum(), total_in, rtol=1e-3, atol=1e-3)
+
+
+@given(raw_windows())
+@settings(**SETTINGS)
+def test_harmonize_mean_bounded_by_extremes(raw):
+    ticks = hz.tick_grid(jnp.zeros((raw.n_envs,)), 60.0, 10)
+    out, obs = hz.harmonize(raw, ticks, 60.0, "mean")
+    o = np.asarray(out)[np.asarray(obs)]
+    if o.size:
+        v = np.asarray(raw.values)[np.asarray(raw.valid)]
+        assert o.min() >= v.min() - 1e-4 and o.max() <= v.max() + 1e-4
+
+
+@given(st.integers(0, 2**16), st.integers(1, 4), st.integers(2, 16))
+@settings(**SETTINGS)
+def test_locf_fills_everything_after_first_obs(seed, S, T):
+    rng = np.random.RandomState(seed)
+    v = rng.normal(0, 1, (1, S, T)).astype(np.float32)
+    obs = rng.rand(1, S, T) > 0.5
+    state = gf.init_state(1, S)
+    ticks = (np.arange(T, dtype=np.float32) * 60)[None]
+    out, filled, _ = gf.gap_fill(jnp.asarray(v), jnp.asarray(obs), state,
+                                 jnp.asarray(ticks), "locf")
+    filled = np.asarray(filled)
+    for s in range(S):
+        row_obs = obs[0, s]
+        if row_obs.any():
+            first = row_obs.argmax()
+            # every tick after the first observation is observed or filled
+            assert (row_obs | filled[0, s])[first:].all()
+
+
+@given(st.integers(0, 2**16), st.integers(2, 20))
+@settings(**SETTINGS)
+def test_welford_merge_equals_two_pass(seed, n_windows):
+    rng = np.random.RandomState(seed)
+    state = nz.init_state(1, 1)
+    rows = []
+    for _ in range(n_windows):
+        v = rng.normal(rng.uniform(-5, 5), rng.uniform(0.5, 3),
+                       (1, 1, 8)).astype(np.float32)
+        m = rng.rand(1, 1, 8) > 0.4
+        rows.append(v[m])
+        state = nz.update(state, jnp.asarray(v), jnp.asarray(m))
+    allv = np.concatenate(rows) if rows else np.zeros((0,))
+    if allv.size > 2:
+        assert_allclose(float(state.mean[0, 0]), allv.mean(),
+                        rtol=1e-3, atol=1e-3)
+        assert_allclose(float(nz.sigma(state)[0, 0]), allv.std(ddof=1),
+                        rtol=1e-2, atol=1e-3)
+
+
+@given(st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_token_codec_roundtrip_within_bin(seed):
+    rng = np.random.RandomState(seed)
+    state = nz.init_state(4, 6)
+    v = rng.normal(10, 4, (4, 6, 32)).astype(np.float32)
+    state = nz.update(state, jnp.asarray(v), jnp.ones(v.shape, bool))
+    codec = cd.TokenCodec(n_features=6, bins=128, clip=4.0)
+    feats = jnp.asarray(v[..., -1])
+    toks = codec.encode(state, feats)
+    assert (np.asarray(toks) >= codec.offset).all()
+    assert (np.asarray(toks) < codec.vocab_needed).all()
+    back = codec.decode(state, toks, -1e9, 1e9)
+    # max roundtrip error = half a bin in z-space
+    half_bin_z = (2 * codec.clip / codec.bins) / 2
+    sig = np.asarray(nz.sigma(state))
+    z_err = np.abs(np.asarray(back) - np.asarray(feats)) / np.maximum(sig, 1e-6)
+    clipped = np.abs(np.asarray(nz.znorm(state, feats[..., None])[..., 0])) > codec.clip
+    assert (z_err[~clipped] <= half_bin_z + 1e-3).all()
+
+
+@given(st.integers(0, 2**16), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_reward_terms_are_additive_and_scale(seed, E):
+    rng = np.random.RandomState(seed)
+    f = jnp.asarray(rng.normal(0, 1, (E, 4)).astype(np.float32))
+    a = jnp.asarray(rng.normal(0, 1, (E, 2)).astype(np.float32))
+    t1 = RewardTerm("linear", weight=2.0, feature=1)
+    t2 = RewardTerm("quadratic_error", weight=0.5, feature=2, target=1.0)
+    total, per = RewardSpec((t1, t2)).compute(f, a)
+    assert_allclose(np.asarray(total), np.asarray(per).sum(-1), rtol=1e-5)
+    total2, _ = RewardSpec((t1,)).compute(f, a)
+    assert_allclose(np.asarray(total2),
+                    2.0 * np.asarray(f)[:, 1], rtol=1e-5)
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_compression_error_feedback_converges(seed):
+    """EF quantization: the mean of reconstructions over steps approaches the
+    true (constant) gradient — the defining EF-SGD property."""
+    rng = np.random.RandomState(seed)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (32, 16)).astype(np.float32))}
+    ef = comp.init_ef(g)
+    recon_sum = np.zeros((32, 16), np.float32)
+    steps = 24
+    for _ in range(steps):
+        recon, ef = comp.roundtrip(g, ef)
+        recon_sum += np.asarray(recon["w"])
+    err = np.abs(recon_sum / steps - np.asarray(g["w"])).max()
+    one_step_err = np.abs(
+        np.asarray(comp.roundtrip(g, comp.init_ef(g))[0]["w"])
+        - np.asarray(g["w"])).max()
+    assert err <= one_step_err + 1e-6
+    assert err < 0.02  # time-averaged EF error shrinks ~1/steps
+
+
+@given(st.integers(0, 2**16), st.integers(1, 3), st.integers(4, 16))
+@settings(**SETTINGS)
+def test_anomaly_replacement_never_widens_range(seed, S, T):
+    rng = np.random.RandomState(seed)
+    state = an.AnomalyState(mean=jnp.zeros((1, S)), var=jnp.ones((1, S)),
+                            count=jnp.full((1, S), 100.0))
+    v = rng.normal(0, 3, (1, S, T)).astype(np.float32)
+    obs = jnp.ones((1, S, T), bool)
+    spikes = an.detect_zscore(jnp.asarray(v), obs, state, 3.0)
+    out, _, _ = an.replace(jnp.asarray(v), obs, spikes, state, "clip", 3.0)
+    assert np.abs(np.asarray(out)).max() <= max(np.abs(v).max(), 3.0) + 1e-5

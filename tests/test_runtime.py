@@ -1,0 +1,135 @@
+"""Host runtime: protocol codecs, queues, accumulator, DB, full system."""
+import numpy as np
+import pytest
+
+from repro.core import PipelineConfig
+from repro.core.reward import energy_reward_spec
+from repro.runtime.accumulator import Accumulator
+from repro.runtime.db import LogDB
+from repro.runtime.forwarder import Forwarder, ForwarderHub
+from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+from repro.runtime.queues import QueueBroker
+from repro.runtime.receivers import SimulatedDevice
+from repro.runtime.records import CODECS, Record
+from repro.runtime.system import PerceptaSystem, SourceSpec
+from repro.runtime.translator import Translator
+
+
+@pytest.mark.parametrize("proto", ["mqtt", "http", "amqp"])
+def test_protocol_roundtrip(proto):
+    enc, dec = CODECS[proto]
+    stream, ts, v = dec(enc("temp_c", 1234.5, -3.25))
+    assert stream == "temp_c"
+    assert abs(ts - 1234.5) < 1e-3 and abs(v + 3.25) < 1e-5
+
+
+def test_translator_handles_garbage():
+    tr = Translator("src", "mqtt")
+    assert tr.translate("e", b"not json") is None
+    assert tr.stats["errors"] == 1
+    rec = tr.translate("e", CODECS["mqtt"][0]("s", 1.0, 2.0))
+    assert rec == Record("e", "s", 1.0, 2.0)
+
+
+def test_queue_isolation_between_envs():
+    broker = QueueBroker()
+    broker.publish(Record("env-A", "s", 1.0, 1.0))
+    broker.publish(Record("env-B", "s", 1.0, 2.0))
+    a = broker.queue_for("env-A").drain()
+    b = broker.queue_for("env-B").drain()
+    assert len(a) == 1 and len(b) == 1 and a[0].value == 1.0
+
+
+def test_accumulator_window_close_keeps_future_records():
+    acc = Accumulator("e", ["s1", "s2"], max_samples=8)
+    acc.ingest([Record("e", "s1", t, float(t)) for t in (1.0, 5.0, 12.0)])
+    v, ts, valid = acc.close_window(0.0, 10.0)
+    assert valid[0].sum() == 2          # 1.0 and 5.0
+    v2, ts2, valid2 = acc.close_window(10.0, 20.0)
+    assert valid2[0].sum() == 1         # 12.0 was retained
+    assert acc.stats["records"] == 3
+
+
+def test_device_reporting_interval():
+    dev = SimulatedDevice("s", interval_s=60.0, dropout_p=0.0, jitter_s=0.0)
+    rs = dev.readings(0.0, 600.0)
+    assert len(rs) == 10
+
+
+def test_logdb_cursor_and_anonymization(tmp_path):
+    db = LogDB(str(tmp_path), salt="x", rotate_bytes=200)
+    for i in range(5):
+        db.append("bldg-1", float(i), [1.0, 2.0], [0.5], 0.1 * i)
+    db.close()
+    rows = list(db.read_from())
+    assert len(rows) == 5
+    assert all(r["env"].startswith("env-") and "bldg" not in r["env"]
+               for _, r in rows)
+    # resume from a cursor: exactly the remaining rows
+    cursor = rows[2][0]
+    rest = list(db.read_from(*cursor))
+    assert len(rest) == 2
+
+
+def _small_system(mode="fused", n_envs=2):
+    srcs = [
+        SourceSpec("meter", "mqtt", SimulatedDevice("grid_kw", 60.0, base=3.0,
+                                                    seed=1)),
+        SourceSpec("price", "http", SimulatedDevice("price", 300.0, base=0.2,
+                                                    amplitude=0.05, seed=2)),
+        SourceSpec("thermo", "amqp", SimulatedDevice("temp_c", 30.0, base=21.0,
+                                                     amplitude=1.0, seed=3)),
+    ]
+    cfg = PipelineConfig(n_envs=n_envs, n_streams=3, n_ticks=8, tick_s=60.0,
+                         max_samples=32)
+    pred = Predictor(linear_policy(3, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=2),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     n_envs, cfg.n_features, replay_capacity=64)
+    envs = [f"bldg-{i}" for i in range(n_envs)]
+    return PerceptaSystem(envs, srcs, cfg, pred, speedup=5000.0, manual_time=True, mode=mode)
+
+
+def test_system_end_to_end_fused():
+    sys_ = _small_system("fused")
+    res = sys_.run_windows(3)
+    assert len(res) == 3
+    assert all(np.isfinite(r["mean_reward"]) for r in res)
+    assert res[-1]["observed_frac"] > 0.3
+    assert int(sys_.predictor.replay.size()) == 2  # ticks - 1 transitions
+
+
+def test_system_fused_equals_modular():
+    """Same streams through both execution modes -> identical features."""
+    a = _small_system("fused")
+    b = _small_system("modular")
+    ra = a.run_windows(3)
+    rb = b.run_windows(3)
+    for x, y in zip(ra, rb):
+        assert abs(x["mean_reward"] - y["mean_reward"]) < 1e-3
+        assert abs(x["observed_frac"] - y["observed_frac"]) < 1e-9
+
+
+def test_system_forwarders_and_db(tmp_path):
+    db = LogDB(str(tmp_path))
+    hub = ForwarderHub([Forwarder("hvac", "mqtt", [0]),
+                        Forwarder("lights", "http", [1])])
+    sys_ = _small_system()
+    sys_.forwarders = hub
+    sys_.db = db
+    sys_.run_windows(2)
+    assert hub.forwarders[0].stats["sent"] == 4   # 2 envs x 2 windows
+    assert db.stats["rows"] == 4
+    db.close()
+
+
+def test_multi_env_isolation():
+    """An env with wildly different data must not perturb its neighbour."""
+    base = _small_system(n_envs=2)
+    res = base.run_windows(2)
+    # env rows are independent pipeline rows by construction; verify the
+    # accumulators never mixed records across envs
+    for env, acc in base.accumulators.items():
+        assert acc.stats["unknown_stream"] == 0
+    q = base.stats()["queues"]
+    assert set(q) == {"bldg-0", "bldg-1"}

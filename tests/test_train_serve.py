@@ -1,0 +1,159 @@
+"""Training-loop fault tolerance + serving-engine behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.configs.base import ShapeConfig, ShardingConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import LM
+from repro.train.checkpoint import Checkpointer
+from repro.train.loop import train
+
+SHAPE = ShapeConfig("test", 32, 4, "train")
+
+
+def _tcfg(tmp, **kw):
+    base = dict(learning_rate=1e-3, warmup_steps=2, total_steps=20,
+                checkpoint_every=10, checkpoint_dir=str(tmp),
+                keep_checkpoints=2, async_checkpoint=False)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_loss_decreases(tmp_path):
+    cfg = get_config("qwen3-0.6b:smoke")
+    mesh = make_smoke_mesh()
+    res = train(cfg, SHAPE, mesh, tcfg=_tcfg(tmp_path, total_steps=60,
+                                             learning_rate=3e-3))
+    first = np.mean(res.losses[:5])
+    last = np.mean(res.losses[-5:])
+    assert last < first - 0.05, (first, last)
+
+
+def test_crash_resume_is_deterministic(tmp_path):
+    """train 20 straight == train 10, 'crash', restore, train 10 more."""
+    cfg = get_config("qwen3-0.6b:smoke")
+    mesh = make_smoke_mesh()
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    tc = dict(total_steps=20, checkpoint_every=10)  # same LR schedule in all
+    res_straight = train(cfg, SHAPE, mesh, tcfg=_tcfg(a, **tc))
+    res1 = train(cfg, SHAPE, mesh, tcfg=_tcfg(b, **tc), max_steps=10)
+    res2 = train(cfg, SHAPE, mesh, tcfg=_tcfg(b, **tc))
+    assert res2.restored_from == 10
+    # the resumed run replays the same batches: loss traces must match
+    assert_allclose(res_straight.losses[10:], res2.losses, rtol=1e-4)
+
+
+def test_checkpointer_atomic_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_mode=False)
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    for step in (1, 2, 3):
+        ck.save(step, tree, extra={"cursor": {"batch_index": step}})
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000002", "step_00000003"]  # keep=2
+    like = {"w": jax.ShapeDtypeStruct((2, 3), jnp.float32)}
+    restored, extra = ck.restore(3, like)
+    assert_allclose(np.asarray(restored["w"]), np.arange(6).reshape(2, 3))
+    assert extra["cursor"]["batch_index"] == 3
+    # a stale .tmp dir must never be picked up
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert ck.latest_step() == 3
+
+
+def test_straggler_policy_detects_slow_steps():
+    from repro.distribution.elastic import StragglerPolicy
+    p = StragglerPolicy(k=3.0, consecutive_to_fail=3, min_steps=3)
+    for _ in range(10):
+        assert p.observe(0.1) == "ok"
+    assert p.observe(1.0) == "slow"      # simulated slow worker
+    assert p.observe(1.0) == "slow"
+    assert p.observe(1.0) == "fail"      # third strike -> elastic restart
+    assert p.slow_events == 3
+
+
+def test_elastic_mesh_shapes():
+    from repro.distribution.elastic import best_mesh_shape, rescale_microbatches
+    assert best_mesh_shape(512, 16) == (2, 16, 16)
+    assert best_mesh_shape(256, 16) == (16, 16)
+    # losing one host of 8 devices: 248 devices -> data axis shrinks
+    assert best_mesh_shape(248, 16) == (15, 16)
+    with pytest.raises(ValueError):
+        best_mesh_shape(8, 16)
+    # keep global batch: fewer data rows -> more microbatches
+    assert rescale_microbatches(256, old_data=16, new_data=8, old_micro=1) == 2
+
+
+def test_grad_compression_reduces_bytes_and_converges(rng):
+    from repro.distribution import compression as comp
+    g = {"w": jnp.asarray(rng.normal(0, 0.1, (64, 64)).astype(np.float32))}
+    ef = comp.init_ef(g)
+    q, s, ef2 = comp.compress_grads(g, ef)
+    assert q["w"].dtype == jnp.int8  # 4x smaller payload than f32
+    recon = comp.decompress_grads(q, s)
+    rel = float(jnp.linalg.norm(recon["w"] - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.02
+
+
+def test_serve_engine_continuous_batching(rng):
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_config("qwen3-0.6b:smoke")
+    model = LM(cfg, remat_policy="none")
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=3, max_seq=64)
+    reqs = [Request(rid=i, prompt=rng.randint(1, cfg.vocab_size, (5,))
+                    .astype(np.int32), max_new_tokens=6) for i in range(7)]
+    engine.run_until_drained(reqs)
+    assert all(r.done for r in reqs)
+    assert all(len(r.tokens) == 6 for r in reqs)
+    assert engine.stats["admitted"] == 7
+    # continuous batching actually overlapped: 7 reqs on 3 slots must take
+    # fewer ticks than sequential (7 * 6) yet at least ceil(7/3)*6
+    assert 12 <= engine.stats["ticks"] < 42
+
+
+def test_serve_engine_matches_model_decode(rng):
+    """Engine greedy output == hand-rolled prefill+greedy loop."""
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_config("qwen3-0.6b:smoke")
+    model = LM(cfg, remat_policy="none")
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = rng.randint(1, cfg.vocab_size, (4,)).astype(np.int32)
+
+    # reference: decode-fed prompt (numerically the same path the engine
+    # takes: prefill-vs-blockwise summation order would flip argmaxes)
+    cache = model.init_cache(1, 64)
+    dec = jax.jit(model.decode_step)
+    logits = None
+    for t in prompt:
+        logits, cache = dec(params, {"tokens": jnp.asarray([[int(t)]])}, cache)
+    want = []
+    tok = int(jnp.argmax(logits[0]))
+    want.append(tok)
+    for _ in range(4):
+        logits, cache = dec(params, {"tokens": jnp.asarray([[tok]])}, cache)
+        tok = int(jnp.argmax(logits[0]))
+        want.append(tok)
+
+    engine = ServeEngine(model, params, batch_slots=2, max_seq=64)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=5)
+    engine.run_until_drained([req])
+    assert req.tokens == want
+
+
+def test_serve_timeout_mitigation(rng):
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_config("qwen3-0.6b:smoke")
+    model = LM(cfg, remat_policy="none")
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=2, max_seq=64)
+    stuck = Request(rid=0, prompt=rng.randint(1, cfg.vocab_size, (3,))
+                    .astype(np.int32), max_new_tokens=10_000, deadline_s=0.0)
+    engine.run_until_drained([stuck], max_ticks=5)
+    assert stuck.done and stuck.finish_reason == "timeout"
+    assert engine.stats["timeouts"] == 1
