@@ -1,0 +1,15 @@
+# Developer / CI entrypoints. `make test` is the tier-1 verify command from
+# ROADMAP.md; `make bench-smoke` is a ~1-minute benchmark pass covering the
+# three pipeline execution axes (modular / fused / scan) plus the scan-engine
+# acceptance cell.
+PY ?= python
+
+.PHONY: test bench-smoke ci
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
+
+ci: test bench-smoke

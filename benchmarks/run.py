@@ -23,9 +23,22 @@ def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def _time(fn, n=5, warmup=2):
+def _time(fn, n=5, warmup=2, best=False):
+    """Mean (default) or best-of-n microseconds per call.
+
+    ``best=True`` reports the fastest rep — the robust estimator when the
+    measured quantity is a dispatch-overhead ratio and the box is shared
+    (one preempted rep poisons a mean but not a min).
+    """
     for _ in range(warmup):
         fn()
+    if best:
+        out = float("inf")
+        for _ in range(n):
+            t0 = time.time()
+            fn()
+            out = min(out, time.time() - t0)
+        return out * 1e6
     t0 = time.time()
     for _ in range(n):
         fn()
@@ -60,10 +73,10 @@ def bench_ingest(quick=False):
 
 
 # --------------------------------------------------------------------------
-# Table 2 — per-tick pipeline latency: paper-faithful modular vs fused
+# Table 2 — per-tick pipeline latency: modular vs fused vs scan (3 axes)
 # --------------------------------------------------------------------------
 
-def _pipeline(E, S=8, T=16, M=64, mode="fused"):
+def _pipeline(E, S=8, T=16, M=64, mode="fused", K=1):
     import jax.numpy as jnp
 
     from repro.core import PerceptaPipeline, PipelineConfig
@@ -71,9 +84,23 @@ def _pipeline(E, S=8, T=16, M=64, mode="fused"):
 
     cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
                          max_samples=M)
-    pipe = PerceptaPipeline(cfg, mode=mode)
+    pipe = PerceptaPipeline(cfg, mode=mode, donate=(mode == "scan"))
     state = pipe.init_state()
     rng = np.random.RandomState(0)
+    if mode == "scan":
+        raws = make_raw_window(
+            rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
+            rng.uniform(0, T * 60, (K, E, S, M)).astype(np.float32),
+            rng.rand(K, E, S, M) > 0.3)
+        ws = jnp.zeros((K, E), jnp.float32)
+
+        def run():
+            nonlocal state
+            state, feats, frames = pipe.run_many(state, raws, ws)
+            feats.features.block_until_ready()
+
+        return run
+
     raw = make_raw_window(rng.normal(5, 2, (E, S, M)).astype(np.float32),
                           rng.uniform(0, T * 60, (E, S, M)).astype(np.float32),
                           rng.rand(E, S, M) > 0.3)
@@ -89,12 +116,79 @@ def _pipeline(E, S=8, T=16, M=64, mode="fused"):
 
 def bench_tick_latency(quick=False):
     envs = (16, 256) if quick else (16, 256, 1024)
+    K = 8 if quick else 16
     for E in envs:
         t_mod = _time(_pipeline(E, mode="modular"), n=3 if quick else 8)
         t_fus = _time(_pipeline(E, mode="fused"), n=3 if quick else 8)
+        t_scan = _time(_pipeline(E, mode="scan", K=K),
+                       n=3 if quick else 8) / K  # per-tick, one dispatch per K
         _row(f"tick_modular_E{E}", t_mod, "paper-faithful per-module jits")
         _row(f"tick_fused_E{E}", t_fus,
              f"speedup {t_mod / t_fus:.2f}x over modular")
+        _row(f"tick_scan_E{E}", t_scan,
+             f"K={K} windows/dispatch | speedup {t_fus / t_scan:.2f}x over "
+             f"fused | {1e6 / t_scan:.0f} windows/s")
+
+
+# --------------------------------------------------------------------------
+# Table 2b — scan engine acceptance cell: K=32 windows, E=8 envs, S=8 streams
+# --------------------------------------------------------------------------
+
+def bench_scan_engine(quick=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import PerceptaPipeline, PipelineConfig
+    from repro.core.frame import RawWindow, make_raw_window
+
+    K, E, S, T, M = 32, 8, 8, 16, 64
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    rng = np.random.RandomState(0)
+    raws = make_raw_window(
+        rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
+        (rng.uniform(0, T * 60, (K, E, S, M))
+         + np.arange(K)[:, None, None, None] * T * 60).astype(np.float32),
+        rng.rand(K, E, S, M) > 0.3)
+    starts = jnp.asarray(np.arange(K, dtype=np.float32)[:, None] * (T * 60.0)
+                         * np.ones((1, E), np.float32))
+    per_window = [RawWindow(raws.values[k], raws.timestamps[k], raws.valid[k])
+                  for k in range(K)]
+
+    fused = PerceptaPipeline(cfg, mode="fused")
+    scan = PerceptaPipeline(cfg, mode="scan")
+    state0 = fused.init_state()
+
+    # correctness: scan must match K sequential fused ticks bit-for-bit
+    s = state0
+    seq_feats = []
+    for k in range(K):
+        s, f, _ = fused.run_tick(s, per_window[k], starts[k])
+        seq_feats.append(np.asarray(f.features))
+    _, feats, _ = scan.run_many(state0, raws, starts)
+    err = float(np.max(np.abs(np.asarray(feats.features)
+                              - np.stack(seq_feats))))
+
+    def run_seq():
+        st = state0
+        for k in range(K):
+            st, f, _ = fused.run_tick(st, per_window[k], starts[k])
+        f.features.block_until_ready()
+
+    def run_scan():
+        st, f, _ = scan.run_many(state0, raws, starts)
+        f.features.block_until_ready()
+
+    n = 6 if quick else 12
+    t_seq = _time(run_seq, n=n, best=True)
+    t_scan = _time(run_scan, n=n, best=True)
+    wps_seq = K / (t_seq / 1e6)
+    wps_scan = K / (t_scan / 1e6)
+    _row(f"scan_fused_seq_K{K}_E{E}_S{S}", t_seq / K,
+         f"{wps_seq:.0f} windows/s ({K} dispatches)")
+    _row(f"scan_engine_K{K}_E{E}_S{S}", t_scan / K,
+         f"{wps_scan:.0f} windows/s (1 dispatch) | "
+         f"speedup {wps_scan / wps_seq:.2f}x | max_abs_err {err:.2e}")
 
 
 # --------------------------------------------------------------------------
@@ -265,17 +359,27 @@ def bench_roofline(quick=False):
              f"dom={d['dominant']} frac={d['roofline_fraction']:.3f}")
 
 
-ALL = [bench_ingest, bench_tick_latency, bench_stage_breakdown,
-       bench_deployment, bench_serving, bench_kernels, bench_roofline]
+ALL = [bench_ingest, bench_tick_latency, bench_scan_engine,
+       bench_stage_breakdown, bench_deployment, bench_serving,
+       bench_kernels, bench_roofline]
+
+# --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings,
+# tick-latency axes + the scan-engine acceptance cell only
+SMOKE = [bench_tick_latency, bench_scan_engine]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI pass: tick latency + scan engine, quick")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+    benches = SMOKE if args.smoke else ALL
+    if args.smoke:
+        args.quick = True
     print("name,us_per_call,derived")
-    for bench in ALL:
+    for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue
         try:

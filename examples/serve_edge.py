@@ -7,8 +7,15 @@ normalize) -> TokenCodec -> qwen3-family LM (reduced config) -> decisions ->
 reward -> replay + LogDB -> Forwarders. Also serves ad-hoc batched text
 requests through the continuous-batching engine between ticks.
 
-Run: PYTHONPATH=src python examples/serve_edge.py
+The Percepta tick runs in ``scan`` mode: the Manager batches ``SCAN_K``
+windows per device dispatch (``PerceptaPipeline.run_many`` — one
+``lax.scan`` with the state carried on device) instead of dispatching one
+jitted tick per window; pass ``--mode fused`` for the one-dispatch-per-
+window behaviour.
+
+Run: PYTHONPATH=src python examples/serve_edge.py [--mode scan|fused]
 """
+import argparse
 import time
 
 import jax
@@ -45,6 +52,10 @@ def lm_policy(feats):
 
 
 # --- Percepta wiring ---------------------------------------------------------
+ap = argparse.ArgumentParser()
+ap.add_argument("--mode", default="scan", choices=["scan", "fused"])
+args = ap.parse_args()
+SCAN_K = 2  # windows per scan-fused dispatch
 E = 4
 sources = [
     SourceSpec("meter", "mqtt", SimulatedDevice("grid_kw", 60.0, base=3.0,
@@ -64,28 +75,42 @@ db = LogDB("/tmp/percepta_serve_db", salt="opeva")
 hub = ForwarderHub([Forwarder("hvac", "mqtt", [0]),
                     Forwarder("ev-charger", "amqp", [1])])
 system = PerceptaSystem([f"bldg-{i}" for i in range(E)], sources, pcfg, pred,
-                        forwarders=hub, db=db, speedup=4000.0)
+                        forwarders=hub, db=db, speedup=4000.0,
+                        mode=args.mode, scan_k=SCAN_K)
 
 # --- ad-hoc batched request serving between ticks ---------------------------
 engine = ServeEngine(model, params, batch_slots=4, max_seq=64)
 rng = np.random.RandomState(0)
 
-print("=== Percepta edge serving: 6 windows, 12 ad-hoc requests ===")
-norm_state["s"] = system.state.norm
+def _snapshot_norm():
+    # scan mode donates the state pytree into each run_many dispatch, so a
+    # host-side reference must be a copy, not an alias
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), system.state.norm)
+
+
+batch = SCAN_K if args.mode == "scan" else 1
+print(f"=== Percepta edge serving: 6 windows ({args.mode} mode, "
+      f"{batch} windows/dispatch), 12 ad-hoc requests ===")
+norm_state["s"] = _snapshot_norm()
 t_start = time.time()
 tok_count = 0
-for w in range(6):
-    norm_state["s"] = system.state.norm
-    r = system.run_windows(1)[0]
-    # serve a couple of batched ad-hoc requests while streams accumulate
+for w in range(0, 6, batch):
+    norm_state["s"] = _snapshot_norm()
+    results = system.run_windows(batch)
+    # serve batched ad-hoc requests while streams accumulate (2 per window
+    # regardless of dispatch batching, so both modes serve 12 total)
     reqs = [Request(rid=w * 10 + j,
                     prompt=rng.randint(1, cfg_lm.vocab_size, (6,))
-                    .astype(np.int32), max_new_tokens=8) for j in range(2)]
+                    .astype(np.int32), max_new_tokens=8)
+            for j in range(2 * batch)]
     engine.run_until_drained(reqs)
     tok_count += sum(len(q.tokens) for q in reqs)
-    print(f"window {w}: {r['records']:4d} records  "
-          f"tick {r['latency_s']*1e3:6.1f} ms  reward {r['mean_reward']:+.3f}  "
-          f"observed {r['observed_frac']:.0%}  filled {r['filled_frac']:.0%}")
+    for r in results:
+        print(f"window {r['window']}: {r['records']:4d} records  "
+              f"tick {r['latency_s']*1e3:6.1f} ms  "
+              f"reward {r['mean_reward']:+.3f}  "
+              f"observed {r['observed_frac']:.0%}  "
+              f"filled {r['filled_frac']:.0%}")
 
 dt = time.time() - t_start
 print(f"\nforwarded decisions: "

@@ -1,0 +1,179 @@
+"""JAX cross-version compatibility shims.
+
+The repo targets the JAX that ships on the edge image (0.4.x today) while
+staying runnable on newer releases. Three API seams moved between 0.4.x and
+0.5+/0.6+, and every call site routes through here instead of branching
+locally:
+
+  * ``AxisType`` / ``Mesh(..., axis_types=...)`` — ``jax.sharding.AxisType``
+    does not exist in 0.4.x and ``Mesh`` only grew the ``axis_types``
+    keyword later. ``make_mesh`` builds a Mesh with explicit-Auto axis
+    types when the installed JAX understands them and plain axes otherwise
+    (0.4.x treats every axis as Auto already, so the semantics match).
+  * ``AbstractMesh`` — 0.4.x takes one ``((name, size), ...)`` shape tuple;
+    newer JAX takes ``(axis_sizes, axis_names)``. ``abstract_mesh`` accepts
+    the new-style arguments and adapts.
+  * ``jax.set_mesh`` — newer JAX's context setter. 0.4.x spells it
+    ``jax.sharding.use_mesh`` (briefly) or just the Mesh's own context
+    manager. ``set_mesh`` returns whichever works.
+
+Donation quirk: some backend/version combinations warn ("Some donated
+buffers were not usable") instead of donating. ``jit_donated`` applies
+``donate_argnums`` and silences that warning so benchmark CSVs stay clean;
+donation is an optimization, never a semantic requirement, in this repo.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import warnings
+
+import jax
+
+
+def _version_tuple() -> tuple:
+    parts = []
+    for p in jax.__version__.split(".")[:3]:
+        m = re.match(r"\d+", p)
+        parts.append(int(m.group(0)) if m else 0)
+    return tuple(parts)
+
+
+JAX_VERSION = _version_tuple()
+
+try:  # JAX >= 0.5-ish
+    from jax.sharding import AxisType  # type: ignore
+except ImportError:  # 0.4.x: no explicit/auto axis-type distinction
+    AxisType = None
+
+
+def mesh_supports_axis_types() -> bool:
+    return AxisType is not None
+
+
+def make_mesh(devices, axis_names):
+    """``jax.sharding.Mesh`` with Auto axis types when supported."""
+    if AxisType is not None:
+        return jax.sharding.Mesh(
+            devices, axis_names,
+            axis_types=(AxisType.Auto,) * len(axis_names))
+    return jax.sharding.Mesh(devices, axis_names)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``AbstractMesh`` from (sizes, names) across both signatures."""
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    axis_names = tuple(axis_names)
+    try:  # new signature: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(axis_sizes, axis_names)
+    except TypeError:  # 0.4.x signature: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Newer JAX: ``jax.set_mesh``. 0.4.x: ``jax.sharding.use_mesh`` when
+    present, else the concrete Mesh's own context manager (which is what
+    pjit-era code used); AbstractMesh falls back to a no-op — shardings in
+    this repo are always passed explicitly, the ambient mesh is only a
+    convenience for ``jax.jit`` sharding propagation.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if isinstance(mesh, jax.sharding.Mesh):
+        return mesh  # Mesh is itself a context manager in 0.4.x
+    return contextlib.nullcontext()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x).
+
+    The 0.4.x spelling of the replication-check kwarg is ``check_rep``;
+    newer JAX renamed it ``check_vma``. Callers here always want it off —
+    the MoE/cache bodies do collective-free per-rank work.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_rep)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_rep)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to one flat dict.
+
+    JAX 0.4.x returns a list with one properties-dict per partition (often
+    length 1 post-SPMD); newer JAX returns the dict directly. Callers always
+    want the single per-device dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def _dealias_donated(args, donate_argnums):
+    """Copy duplicate buffers among donated arguments.
+
+    XLA rejects donating the same underlying buffer twice, and zero-
+    initialized pytrees (``init_state``) routinely alias their zero pages
+    across leaves. Donation is an optimization, so the cheap fix is a copy
+    of the duplicates, not an error surfaced to the caller.
+    """
+    import jax.numpy as jnp
+    out = list(args)
+    seen = set()
+    for i in donate_argnums:
+        if i >= len(out):
+            continue
+        leaves, treedef = jax.tree.flatten(out[i])
+        fresh = []
+        for x in leaves:
+            if isinstance(x, jax.Array):
+                try:
+                    key = x.unsafe_buffer_pointer()
+                except Exception:
+                    key = id(x)
+                if key in seen:
+                    x = jnp.array(x, copy=True)
+                else:
+                    seen.add(key)
+            fresh.append(x)
+        out[i] = jax.tree.unflatten(treedef, fresh)
+    return tuple(out)
+
+
+def jit_donated(fn, donate_argnums=(), **jit_kwargs):
+    """``jax.jit`` with ``donate_argnums``, absorbing donation quirks.
+
+    Two backend/version quirks are handled here so call sites stay clean:
+    duplicate-buffer donation (aliased zero pages in freshly initialized
+    state pytrees) is de-aliased per call, and the "donated buffers were
+    not usable" warning some backends emit instead of donating is
+    silenced. When ``donate_argnums`` is empty this is exactly
+    ``jax.jit(fn, **jit_kwargs)``.
+    """
+    if not donate_argnums:
+        return jax.jit(fn, **jit_kwargs)
+    donate_argnums = tuple(donate_argnums)
+    jitted = jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+
+    def call(*args, **kwargs):
+        args = _dealias_donated(args, donate_argnums)
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*[Dd]onated buffers.*")
+            return jitted(*args, **kwargs)
+
+    # keep lower/compile reachable for dry-run tooling
+    call.lower = jitted.lower
+    call._jitted = jitted
+    return call

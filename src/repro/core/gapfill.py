@@ -38,10 +38,32 @@ def init_state(E, S, K=24) -> GapFillState:
                         jnp.zeros((E, S, K), jnp.float32))
 
 
+# Below this tick count the O(T^2) masked-argmax propagation replaces the
+# associative scan: XLA:CPU lowers associative_scan to log2(T) rounds of
+# small strided slice/concat ops whose per-op overhead dominates at edge
+# window sizes, while the dense form is two vectorized ops and a dot.
+_DENSE_T_MAX = 64
+
+
 def _locf_scan(values, observed, init_value, init_has):
-    """Carry (value, has) of the latest observation along the tick axis."""
-    v = jnp.concatenate([init_value[..., None], values], axis=-1)
+    """Carry (value, has) of the latest observation along the tick axis.
+
+    Positions with no observation at or before them return (0, False) on
+    the dense path and (init_value, False) on the scan path — callers mask
+    by the ``has`` flag, so the carried value is only meaningful when True.
+    """
+    v = jnp.concatenate([init_value[..., None].astype(jnp.float32), values],
+                        axis=-1)
     o = jnp.concatenate([init_has[..., None], observed], axis=-1)
+    T1 = v.shape[-1]
+    if T1 <= _DENSE_T_MAX:
+        j = jnp.arange(T1)
+        tril = j[:, None] >= j[None, :]                      # (T1, T1)
+        key = jnp.where(o[..., None, :] & tril, j, -1)       # (..., T1, T1)
+        li = key.max(-1)                                     # latest obs <= t
+        oh = (li[..., None] == j).astype(jnp.float32)
+        cv = jnp.einsum("...j,...tj->...t", v, oh)
+        return cv[..., 1:], (li >= 0)[..., 1:]
 
     def combine(a, b):
         av, ao = a
@@ -90,29 +112,45 @@ def gap_fill(values, observed, state: GapFillState, tick_ts,
     """Fill unobserved ticks. strategy: (S,) int32 index into STRATEGIES or a
     single string. Returns (filled_values, filled_mask, new_state)."""
     E, S, T = values.shape
-    locf_v, locf_has = locf(values, observed, state)
-    lin_v, lin_has = linear_bridge(values, observed)
-    lin_v = jnp.where(observed | lin_has, lin_v, locf_v)
-    lin_has = lin_has | locf_has
-    ew = state.ewma[..., None]
-    ew_v = jnp.where(observed, values, jnp.broadcast_to(ew, values.shape))
-    ew_has = jnp.broadcast_to(state.last_ts[..., None] > -1e29, values.shape)
     if tick_of_day is None:
         tick_of_day = jnp.zeros((E, T), jnp.int32)
-    K = state.seasonal.shape[-1]
-    sea = jnp.take_along_axis(
-        state.seasonal, tick_of_day[:, None, :] % K, axis=-1)
-    sea_n = jnp.take_along_axis(
-        state.seasonal_n, tick_of_day[:, None, :] % K, axis=-1)
-    sea_v = jnp.where(observed, values, sea)
-    sea_has = sea_n > 0
 
-    stack_v = jnp.stack([locf_v, lin_v, ew_v, sea_v])        # (4,E,S,T)
-    stack_h = jnp.stack([locf_has, lin_has, ew_has, sea_has])
+    # Strategy branches, computed lazily: a static (string) strategy only
+    # pays for the branch it selects — the linear bridge alone costs four
+    # extra associative scans, which matters inside the scan-fused engine
+    # where gap-fill runs once per window on-device.
+    def _locf():
+        return locf(values, observed, state)
+
+    def _linear():
+        locf_v, locf_has = _locf()
+        lin_v, lin_has = linear_bridge(values, observed)
+        lin_v = jnp.where(observed | lin_has, lin_v, locf_v)
+        return lin_v, lin_has | locf_has
+
+    def _ewma():
+        ew = state.ewma[..., None]
+        ew_v = jnp.where(observed, values,
+                         jnp.broadcast_to(ew, values.shape))
+        ew_has = jnp.broadcast_to(state.last_ts[..., None] > -1e29,
+                                  values.shape)
+        return ew_v, ew_has
+
+    def _seasonal():
+        K = state.seasonal.shape[-1]
+        sea = jnp.take_along_axis(
+            state.seasonal, tick_of_day[:, None, :] % K, axis=-1)
+        sea_n = jnp.take_along_axis(
+            state.seasonal_n, tick_of_day[:, None, :] % K, axis=-1)
+        return jnp.where(observed, values, sea), sea_n > 0
+
+    branches = {"locf": _locf, "linear": _linear, "ewma": _ewma,
+                "seasonal": _seasonal}
     if isinstance(strategy, str):
-        out_v = stack_v[STRATEGIES.index(strategy)]
-        out_h = stack_h[STRATEGIES.index(strategy)]
+        out_v, out_h = branches[strategy]()
     else:
+        stack_v, stack_h = map(jnp.stack, zip(*(branches[s]()
+                                                for s in STRATEGIES)))
         sel = strategy[None, None, :, None]
         out_v = jnp.take_along_axis(stack_v, sel, axis=0)[0]
         out_h = jnp.take_along_axis(stack_h, sel, axis=0)[0]
@@ -132,14 +170,15 @@ def gap_fill(values, observed, state: GapFillState, tick_ts,
     new_last_ts = jnp.max(jnp.where(observed, ts_b, -1e30), axis=-1)
     obs_mean = jnp.einsum("est,est->es", values, observed.astype(jnp.float32)) \
         / jnp.maximum(observed.sum(-1), 1)
+    sea_mean, sea_n = _seasonal_update(state, values, observed, tick_of_day)
     new_state = GapFillState(
         last_value=jnp.where(any_obs, new_last, state.last_value),
         last_ts=jnp.maximum(state.last_ts, new_last_ts),
         ewma=jnp.where(any_obs,
                        (1 - ewma_alpha) * state.ewma + ewma_alpha * obs_mean,
                        state.ewma),
-        seasonal=_seasonal_update(state, values, observed, tick_of_day)[0],
-        seasonal_n=_seasonal_update(state, values, observed, tick_of_day)[1],
+        seasonal=sea_mean,
+        seasonal_n=sea_n,
     )
     return out, filled, new_state
 
@@ -149,7 +188,9 @@ def _seasonal_update(state, values, observed, tick_of_day):
     oh = (jax.nn.one_hot(tick_of_day % K, K, dtype=jnp.float32)[:, None])  # (E,1,T,K)
     w = oh * observed[..., None]
     s = jnp.einsum("est,estk->esk", values, w)
-    n = w.sum(axis=2)
+    # phrased as a dot: XLA:CPU's strided reduce of (E,S,T,K) over T is
+    # ~6x slower than the equivalent contraction (see harmonize._harmonize_dense)
+    n = jnp.einsum("est,estk->esk", jnp.ones_like(values), w)
     total_n = state.seasonal_n + n
     mean = jnp.where(total_n > 0,
                      (state.seasonal * state.seasonal_n + s) / jnp.maximum(total_n, 1),

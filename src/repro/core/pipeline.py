@@ -1,12 +1,17 @@
 """PerceptaPipeline — the per-tick program: Figure 1 as one tensor program.
 
-Two execution modes (the measured §Perf axis on CPU, same math):
+Three execution modes (the measured §Perf axis on CPU, same math):
   * ``modular`` — paper-faithful: each module (harmonize, anomaly, gap-fill,
     normalize, aggregate, encode) is its own jitted call with host hops in
     between, exactly the RabbitMQ-separated component chain the paper draws.
   * ``fused``   — the whole tick is ONE jit (and batched across all
     environments), which is the TPU-native re-think: no host hops, XLA fuses
     across module boundaries, one dispatch per tick.
+  * ``scan``    — ``run_many``: K pre-batched windows execute as a single
+    ``jax.lax.scan`` over the tick function. The state pytree never leaves
+    the device between windows (and is donated into the call), so the
+    Manager pays ONE Python dispatch per K windows instead of one per
+    window — the amortization that makes small-E edge deployments fast.
 
 State is a single pytree carried tick-to-tick (gap-fill memory, anomaly
 stats, normalizer stats) — checkpointable alongside model params.
@@ -20,6 +25,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import aggregate as agg
 from repro.core import anomaly as an
 from repro.core import gapfill as gf
@@ -154,17 +160,49 @@ def tick(cfg: PipelineConfig, state: PipelineState, raw: RawWindow,
     return new_state, features, frame
 
 
+def run_many(cfg: PipelineConfig, state: PipelineState, raws: RawWindow,
+             window_starts):
+    """K windows as ONE ``lax.scan`` over :func:`tick`.
+
+    ``raws`` is a RawWindow whose leaves carry a leading K axis
+    (K, E, S, M); ``window_starts`` is (K, E). Returns
+    ``(final_state, FeatureFrame, TickFrame)`` with the frame leaves stacked
+    along a leading K axis — window k's outputs are exactly what K
+    sequential ``tick`` calls would have produced (same math, same order).
+    """
+    def body(carry, xs):
+        raw, ws = xs
+        new_state, feats, frame = tick(cfg, carry, raw, ws)
+        return new_state, (feats, frame)
+
+    final_state, (feats, frames) = jax.lax.scan(body, state,
+                                                (raws, window_starts))
+    return final_state, feats, frames
+
+
 class PerceptaPipeline:
-    """User-facing handle; ``mode`` selects fused vs paper-faithful modular."""
+    """User-facing handle; ``mode`` selects scan / fused / modular.
+
+    ``run_tick`` treats ``scan`` as ``fused`` (single windows still take one
+    dispatch); the scan engine is reached through :meth:`run_many`.
+    """
 
     def __init__(self, cfg: PipelineConfig, mode: str = "fused",
                  donate: bool = False):
-        # donate=True requires the caller's state pytree to have distinct
-        # buffers per leaf (fresh init_state shares zero pages)
+        # donate=True requires the caller to treat the passed-in state as
+        # consumed (the engine hands back the new state); it is how the
+        # scan engine keeps exactly one live state pytree on device.
         self.cfg = cfg
         self.mode = mode
+        self.donate = donate
         tickf = functools.partial(tick, cfg)
-        self._fused = jax.jit(tickf, donate_argnums=(0,) if donate else ())
+        # both paths go through compat.jit_donated: fresh init_state leaves
+        # alias their zero buffers, which raw donate_argnums rejects
+        self._fused = compat.jit_donated(
+            tickf, donate_argnums=(0,) if donate else ())
+        self._scan = compat.jit_donated(
+            functools.partial(run_many, cfg),
+            donate_argnums=(0,) if donate else ())
         # modular: one jit per module, host transitions in between — the
         # architecture exactly as drawn (baseline for §Perf)
         self._m_harm = jax.jit(functools.partial(stage_harmonize, cfg))
@@ -176,8 +214,12 @@ class PerceptaPipeline:
     def init_state(self):
         return init_state(self.cfg)
 
+    def run_many(self, state, raws: RawWindow, window_starts):
+        """Scan-fused execution of K pre-batched windows (one dispatch)."""
+        return self._scan(state, raws, window_starts)
+
     def run_tick(self, state, raw: RawWindow, window_start):
-        if self.mode == "fused":
+        if self.mode in ("fused", "scan"):
             return self._fused(state, raw, window_start)
         # modular: each stage returns to host before the next is dispatched
         v, obs, ticks = jax.block_until_ready(

@@ -21,7 +21,21 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ShardingConfig
+
+
+def make_abstract_mesh(mesh_shape) -> "jax.sharding.AbstractMesh":
+    """Planner-only mesh from ``((name, size), ...)`` — no devices needed.
+
+    Routes through ``repro.compat`` because ``AbstractMesh``'s constructor
+    signature differs between JAX 0.4.x and newer releases; every
+    NamedSharding the planner emits is mesh-shape-only, so an abstract mesh
+    is enough to unit-test resolution against a 256-chip topology.
+    """
+    names = tuple(n for n, _ in mesh_shape)
+    sizes = tuple(s for _, s in mesh_shape)
+    return compat.abstract_mesh(sizes, names)
 
 # Data-parallel submesh: prefer pod+data, fall back to data alone.
 DP = [("pod", "data"), ("data",)]

@@ -61,7 +61,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     fn, specs, shardings, model = build_step(shape.kind, cfg, shape, mesh,
                                              perf, tcfg)
-    with jax.set_mesh(mesh):
+    from repro import compat
+    with compat.set_mesh(mesh):
         lowered = fn.lower(*specs)
         t_lower = time.time() - t0
         t1 = time.time()

@@ -412,6 +412,23 @@ def analyze_hlo(text: str, n_devices: int) -> dict:
     return Analyzer(text, n_devices).analyze()
 
 
+def analyze_hlo_file(path, n_devices: int) -> dict:
+    """``analyze_hlo`` over an HLO text dump on disk.
+
+    Raises FileNotFoundError with an actionable message instead of the bare
+    ``open`` error — missing dump paths are the most common operator mistake
+    when pointing the roofline tooling at ``--xla_dump_to`` output.
+    """
+    import os
+    if not os.path.isfile(path):
+        raise FileNotFoundError(
+            f"HLO dump not found: {path!r}. Pass a path to a scheduled HLO "
+            "text file (e.g. an --xla_dump_to '*after_optimizations*.txt' "
+            "artifact, or tests/data_hlo_sample.txt for the test fixture).")
+    with open(path) as f:
+        return analyze_hlo(f.read(), n_devices)
+
+
 def cpu_bf16_upcast_bytes(text: str, min_bytes: int = 32 * 2**20) -> int:
     """Bytes of f32 temp copies that exist ONLY because the CPU backend
     legalizes bf16 compute to f32.

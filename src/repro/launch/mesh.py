@@ -12,7 +12,8 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,12 +28,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             "before any jax import")
     import numpy as np
     dev = np.asarray(devices[:n]).reshape(shape)
-    return jax.sharding.Mesh(dev, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(dev, axes)
 
 
 def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
     """A 1x1 mesh over the single real CPU device (smoke tests)."""
     import numpy as np
     dev = np.asarray(jax.devices()[:1]).reshape(shape)
-    return jax.sharding.Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(dev, axes)

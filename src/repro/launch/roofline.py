@@ -110,7 +110,8 @@ def terms_from_compiled(compiled, n_devices: int) -> dict:
     bytes_acc = float(hlo["bytes"])
     colls = hlo["collectives"]
     # XLA's own (loop-body-counted-once) numbers, kept for cross-checking
-    xla_cost = compiled.cost_analysis()
+    from repro import compat
+    xla_cost = compat.cost_analysis(compiled)
     mem = compiled.memory_analysis()
     mem_d = {
         "argument_bytes": int(mem.argument_size_in_bytes),

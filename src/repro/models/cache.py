@@ -14,6 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models.param import ParamDef
 
 
@@ -110,12 +112,12 @@ def write_token(buf, new, lengths, window: int = 0, shard=None):
 
         return jax.vmap(upd_local)(buf_l, new_l, idx_l)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, "model", None, None), P(bspec, None, None, None),
                   P(bspec)),
         out_specs=P(bspec, "model", None, None),
-        check_vma=False)
+        check_rep=False)
     return fn(buf, new, idx)
 
 

@@ -20,6 +20,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models.layers import rms_norm_defs
 from repro.models.param import ParamDef
 
@@ -117,13 +119,13 @@ def moe_apply_sharded(p, x, cfg, mesh, dp_axes):
         out = jax.lax.psum(out, "model")
         return out.reshape(Bl, Sl, dl), aux
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp_spec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(dp_spec, None, None), P()),
-        check_vma=False)
+        check_rep=False)
     return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 

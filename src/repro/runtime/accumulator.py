@@ -57,3 +57,21 @@ class Accumulator:
                 ts[s, j] = r.timestamp
                 valid[s, j] = r.timestamp >= t_start
         return values, ts, valid
+
+    def close_windows(self, bounds):
+        """Close K consecutive windows into stacked (K, S, M) arrays.
+
+        ``bounds`` is a chronologically ordered sequence of (t_start, t_end)
+        pairs; records newer than the last window end stay pending. This is
+        the per-env half of the scan-engine batch assembly — stacking K
+        single-window closes keeps the exact per-window record routing of
+        ``close_window`` (and therefore per-env isolation: this object only
+        ever sees its own env's queue drain).
+        """
+        K, S, M = len(bounds), len(self.streams), self.max_samples
+        values = np.zeros((K, S, M), np.float32)
+        ts = np.zeros((K, S, M), np.float32)
+        valid = np.zeros((K, S, M), bool)
+        for k, (t0, t1) in enumerate(bounds):
+            values[k], ts[k], valid[k] = self.close_window(t0, t1)
+        return values, ts, valid

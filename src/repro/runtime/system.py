@@ -11,6 +11,13 @@ Time is virtual (``speedup``) so benchmarks can run days of stream time in
 seconds. The Manager logic lives in ``run_window``: close each env's window,
 assemble the device batch, run the (fused or modular) Percepta tick, run the
 Predictor, forward the decisions, log everything.
+
+``mode="scan"`` switches the Manager loop to the scan-fused engine: queues
+are drained once per batch, each env's Accumulator closes K consecutive
+windows into a stacked (K, E, S, M) RawWindow, and ONE device dispatch
+(``PerceptaPipeline.run_many``) processes all K windows with the state
+carried on device. Host-side consumers (Predictor, Forwarders, DB) still
+see one result row per window, in window order.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -44,7 +52,8 @@ class PerceptaSystem:
                  pipeline_cfg: PipelineConfig, predictor: Predictor,
                  forwarders: Optional[ForwarderHub] = None, db=None,
                  mode: str = "fused", speedup: float = 60.0,
-                 t0: float = 0.0, manual_time: bool = False):
+                 t0: float = 0.0, manual_time: bool = False,
+                 scan_k: int = 8):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -55,7 +64,10 @@ class PerceptaSystem:
         self.env_ids = list(env_ids)
         self.sources = list(sources)
         self.cfg = pipeline_cfg
-        self.pipeline = PerceptaPipeline(pipeline_cfg, mode=mode)
+        self.mode = mode
+        self.scan_k = max(1, int(scan_k))
+        self.pipeline = PerceptaPipeline(pipeline_cfg, mode=mode,
+                                         donate=(mode == "scan"))
         self.state = self.pipeline.init_state()
         self.predictor = predictor
         self.forwarders = forwarders
@@ -98,8 +110,9 @@ class PerceptaSystem:
             return self._manual_t
         return self._t0 + (time.time() - self._wall0) * self.speedup
 
-    def window_bounds(self):
-        start = self._t0 + self.window_index * self.window_s
+    def window_bounds(self, index: Optional[int] = None):
+        idx = self.window_index if index is None else index
+        start = self._t0 + idx * self.window_s
         return start, start + self.window_s
 
     # --- threaded operation ---------------------------------------------------
@@ -164,18 +177,110 @@ class PerceptaSystem:
             "anomalous": int(np.asarray(frame.anomalous).sum()),
         }
 
+    # --- scan-fused operation --------------------------------------------------
+    def assemble_windows(self, bounds) -> tuple:
+        """Drain queues once and stack K closed windows per env.
+
+        Returns ``(RawWindow with leading K axis, per_window_counts)`` where
+        the counts attribute each drained record to the window whose bounds
+        contain its timestamp (clipped to the batch, so the counts sum to
+        the drain total — mirroring fused mode's per-window ingest numbers
+        for consumers like dead-source detection). Per-env isolation is
+        structural: each env's records flow queue -> its own Accumulator ->
+        row i of every window in the stack; no cross-env array is ever
+        indexed by more than one env.
+        """
+        E, S, M = self.cfg.n_envs, self.cfg.n_streams, self.cfg.max_samples
+        K = len(bounds)
+        counts = [0] * K
+        starts = [b[0] for b in bounds]
+        for env in self.env_ids:
+            recs = self.broker.queue_for(env).drain()
+            for r in recs:
+                j = int(np.searchsorted(starts, r.timestamp, side="right")) - 1
+                counts[min(max(j, 0), K - 1)] += 1
+            self.accumulators[env].ingest(recs)
+        values = np.zeros((K, E, S, M), np.float32)
+        ts = np.zeros((K, E, S, M), np.float32)
+        valid = np.zeros((K, E, S, M), bool)
+        for i, env in enumerate(self.env_ids):
+            v, t, m = self.accumulators[env].close_windows(bounds)
+            values[:, i], ts[:, i], valid[:, i] = v, t, m
+        return make_raw_window(values, ts, valid), counts
+
+    def run_windows_scan(self, k: int) -> List[dict]:
+        """Process the next ``k`` windows with ONE device dispatch."""
+        E = self.cfg.n_envs
+        bounds = [self.window_bounds(self.window_index + j) for j in range(k)]
+        raw, counts = self.assemble_windows(bounds)
+
+        t_proc0 = time.time()
+        starts = jnp.asarray(np.repeat([[b[0]] for b in bounds], E, axis=1),
+                             jnp.float32)
+        self.state, feats, frames = self.pipeline.run_many(
+            self.state, raw, starts)
+        jax.block_until_ready(feats.features)
+        batch_latency = time.time() - t_proc0
+
+        out = []
+        feat_np = np.asarray(feats.features)
+        obs_np = np.asarray(frames.observed)
+        fill_np = np.asarray(frames.filled)
+        anom_np = np.asarray(frames.anomalous)
+        for j, (t_start, t_end) in enumerate(bounds):
+            t_host0 = time.time()
+            actions, rewards, per_term = self.predictor.on_tick(
+                feats.features[j], t_end, raw=feats.raw[j])
+            if self.forwarders is not None:
+                for i, env in enumerate(self.env_ids):
+                    self.forwarders.dispatch(env, t_end, actions[i])
+            if self.db is not None:
+                for i, env in enumerate(self.env_ids):
+                    self.db.append(env, t_end, feat_np[j, i], actions[i],
+                                   float(rewards[i]))
+            self.window_index += 1
+            # comparable to run_window's latency_s: amortized device share
+            # of the batch dispatch plus this window's host-side work
+            latency = batch_latency / k + (time.time() - t_host0)
+            self.metrics["tick_latency_s"].append(latency)
+            self.metrics["ingest_records"].append(counts[j])
+            out.append({
+                "window": self.window_index - 1,
+                "records": counts[j],
+                "latency_s": latency,
+                "mean_reward": float(np.mean(rewards)),
+                "observed_frac": float(obs_np[j].mean()),
+                "filled_frac": float(fill_np[j].mean()),
+                "anomalous": int(anom_np[j].sum()),
+            })
+        return out
+
+    def _advance_clock(self, t_end: float):
+        if self.manual_time:
+            self._manual_t = t_end + 1e-3
+        else:
+            while self.now() < t_end:
+                time.sleep(0.001)
+
     def run_windows(self, n: int, pump: bool = True) -> List[dict]:
+        if self.mode == "scan":
+            out: List[dict] = []
+            while len(out) < n:
+                k = min(self.scan_k, n - len(out))
+                if pump:
+                    # advance past the LAST window of the batch so every
+                    # window's samples exist before the single drain
+                    t_end = self.window_bounds(self.window_index + k - 1)[1]
+                    self._advance_clock(t_end)
+                    self.pump_receivers()
+                out.extend(self.run_windows_scan(k))
+            return out
         out = []
         for _ in range(n):
             if pump:
                 # synchronous mode: advance the virtual clock past the window
                 # end, then poll every receiver once
-                t_end = self.window_bounds()[1]
-                if self.manual_time:
-                    self._manual_t = t_end + 1e-3
-                else:
-                    while self.now() < t_end:
-                        time.sleep(0.001)
+                self._advance_clock(self.window_bounds()[1])
                 self.pump_receivers()
             out.append(self.run_window())
         return out

@@ -16,6 +16,8 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro import compat
+
 from repro.configs.base import (ModelConfig, ShapeConfig, ShardingConfig,
                                 TrainConfig)
 from repro.data.pipeline import Prefetcher, StreamCursor, SyntheticLMStream
@@ -63,7 +65,7 @@ def train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
         start_step = latest
         restored_from = latest
     else:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params = jax.jit(model.init, out_shardings=param_sh)(
                 jax.random.PRNGKey(tcfg.seed))
             opt_state = jax.jit(opt_lib.init, out_shardings=opt_sh)(params)
@@ -79,7 +81,7 @@ def train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     losses, times = [], []
     step = start_step
     preempted = False
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         while step < total:
             batch = prefetch.next()
             t0 = time.time()

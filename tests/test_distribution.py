@@ -17,8 +17,7 @@ from repro.launch import hlo_analysis
 
 def FakeMesh(shape):
     """Abstract 16x16 mesh — NamedSharding-compatible without 256 devices."""
-    return jax.sharding.AbstractMesh(
-        tuple(s for _, s in shape), tuple(n for n, _ in shape))
+    return shd.make_abstract_mesh(shape)
 
 
 def _spec(shape, dims, mesh_shape=(("data", 16), ("model", 16))):
@@ -62,12 +61,16 @@ def jnp_dtype():
 
 
 def test_hlo_trip_count_multiplication():
-    text = open(os.path.join(os.path.dirname(__file__),
-                             "data_hlo_sample.txt")).read()
-    res = hlo_analysis.analyze_hlo(text, 8)
+    res = hlo_analysis.analyze_hlo_file(
+        os.path.join(os.path.dirname(__file__), "data_hlo_sample.txt"), 8)
     # dot: 2*32*128*512 per trip * 7 trips ~ 2.94e7 (+ elementwise noise)
     assert 2.9e7 < res["flops"] < 3.2e7
     assert res["collectives"]["all-gather"] > 0
+
+
+def test_hlo_missing_file_clear_error():
+    with pytest.raises(FileNotFoundError, match="HLO dump not found"):
+        hlo_analysis.analyze_hlo_file("/no/such/dump.txt", 8)
 
 
 DRYRUN_SNIPPET = textwrap.dedent("""
@@ -76,19 +79,18 @@ DRYRUN_SNIPPET = textwrap.dedent("""
     import sys
     sys.path.insert(0, {src!r})
     import numpy as np, jax, json
-    from jax.sharding import AxisType
+    from repro import compat
     from repro.configs.base import SHAPES, ShapeConfig, ShardingConfig
     from repro.configs.registry import get_config
     from repro.launch.steps import build_step
     from repro.launch import roofline
 
-    mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4),
-                             ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh(np.asarray(jax.devices()).reshape(2, 4),
+                            ("data", "model"))
     cfg = get_config({arch!r} + ":smoke")
     shape = ShapeConfig("t", 64, 8, {kind!r})
     fn, specs, shardings, model = build_step(shape.kind, cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = fn.lower(*specs).compile()
     cell = roofline.terms_from_compiled(compiled, 8)
     print(json.dumps({{"flops": cell["hlo_flops_per_dev"],

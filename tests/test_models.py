@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose
 
+from repro import compat
 from repro.configs.base import SHAPES, shapes_for, skipped_shapes_for
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.models import LM
@@ -153,7 +154,7 @@ def test_moe_sharded_matches_dense(rng):
     x = jnp.asarray(rng.normal(0, 1, (2, 8, cfg.d_model)), jnp.float32)
     out_dense, aux_dense = moe_apply(p, x, cfg, shard=None)
     mesh = make_smoke_mesh()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out_sh, aux_sh = jax.jit(
             lambda p, x: moe_apply(p, x, cfg, shard=(mesh, ("data",))))(p, x)
     # msize == 1 -> falls back to dense path; equality is exact
