@@ -1,15 +1,26 @@
 # Developer / CI entrypoints. `make test` is the tier-1 verify command from
 # ROADMAP.md; `make bench-smoke` is a ~1-minute benchmark pass covering the
-# three pipeline execution axes (modular / fused / scan) plus the scan-engine
-# acceptance cell.
+# four pipeline execution axes (modular / fused / scan / scan_sharded) plus
+# the scan-engine + columnar-ingest acceptance cells. The sharded mode runs
+# on a forced 8-host-device CPU mesh (--host-devices) so the shard_map path
+# is exercised in CI, not just on real multi-chip hardware; results are also
+# written to BENCH_pr2.json (windows/s + records/s per mode).
 PY ?= python
 
-.PHONY: test bench-smoke ci
+.PHONY: test bench-smoke bench-pr2 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
+# CI pass: writes BENCH_smoke.json (untracked scratch) so repeated CI runs
+# never clobber the committed BENCH_pr2.json trajectory record
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
+		--json BENCH_smoke.json
+
+# regenerate the committed perf-trajectory artifact (run manually per PR)
+bench-pr2:
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
+		--json BENCH_pr2.json
 
 ci: test bench-smoke

@@ -6,21 +6,37 @@ across deployment strategies. Each bench below implements one of those
 tables (plus serving, kernels, and the dry-run roofline summary).
 
 Prints ``name,us_per_call,derived`` CSV rows (CPU wall time; the TPU-target
-numbers live in the roofline table from the dry-run artifacts).
+numbers live in the roofline table from the dry-run artifacts). ``--json
+PATH`` additionally writes every row plus the windows/s / records/s
+summary (per execution mode and ingest path) as machine-readable JSON so
+the perf trajectory is tracked across PRs (``BENCH_pr2.json``).
 
-Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+``--host-devices N`` forces an N-device CPU mesh
+(``--xla_force_host_platform_device_count``) so the ``scan_sharded``
+shard_map path is exercised without real multi-chip hardware; it must run
+before JAX initializes, which is why every bench imports jax lazily.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]
+[--host-devices 8] [--json BENCH_pr2.json]``
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 import numpy as np
 
+RESULTS: list = []                    # every _row, for --json
+SUMMARY: dict = {"windows_per_s": {}, "records_per_s": {}}
+
 
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": derived})
 
 
 def _time(fn, n=5, warmup=2, best=False):
@@ -84,10 +100,11 @@ def _pipeline(E, S=8, T=16, M=64, mode="fused", K=1):
 
     cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
                          max_samples=M)
-    pipe = PerceptaPipeline(cfg, mode=mode, donate=(mode == "scan"))
+    pipe = PerceptaPipeline(cfg, mode=mode,
+                            donate=mode in ("scan", "scan_sharded"))
     state = pipe.init_state()
     rng = np.random.RandomState(0)
-    if mode == "scan":
+    if mode in ("scan", "scan_sharded"):
         raws = make_raw_window(
             rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
             rng.uniform(0, T * 60, (K, E, S, M)).astype(np.float32),
@@ -115,8 +132,10 @@ def _pipeline(E, S=8, T=16, M=64, mode="fused", K=1):
 
 
 def bench_tick_latency(quick=False):
+    import jax
     envs = (16, 256) if quick else (16, 256, 1024)
     K = 8 if quick else 16
+    ndev = len(jax.devices())
     for E in envs:
         t_mod = _time(_pipeline(E, mode="modular"), n=3 if quick else 8)
         t_fus = _time(_pipeline(E, mode="fused"), n=3 if quick else 8)
@@ -128,6 +147,13 @@ def bench_tick_latency(quick=False):
         _row(f"tick_scan_E{E}", t_scan,
              f"K={K} windows/dispatch | speedup {t_fus / t_scan:.2f}x over "
              f"fused | {1e6 / t_scan:.0f} windows/s")
+        # fourth measured axis: the same scan under shard_map, envs sharded
+        t_shard = _time(_pipeline(E, mode="scan_sharded", K=K),
+                        n=3 if quick else 8) / K
+        _row(f"tick_scan_sharded_E{E}", t_shard,
+             f"K={K} | {ndev}-device mesh | "
+             f"{t_scan / t_shard:.2f}x vs scan | "
+             f"{1e6 / t_shard:.0f} windows/s")
 
 
 # --------------------------------------------------------------------------
@@ -184,11 +210,180 @@ def bench_scan_engine(quick=False):
     t_scan = _time(run_scan, n=n, best=True)
     wps_seq = K / (t_seq / 1e6)
     wps_scan = K / (t_scan / 1e6)
+    SUMMARY["windows_per_s"]["fused_seq"] = round(wps_seq, 1)
+    SUMMARY["windows_per_s"]["scan"] = round(wps_scan, 1)
     _row(f"scan_fused_seq_K{K}_E{E}_S{S}", t_seq / K,
          f"{wps_seq:.0f} windows/s ({K} dispatches)")
     _row(f"scan_engine_K{K}_E{E}_S{S}", t_scan / K,
          f"{wps_scan:.0f} windows/s (1 dispatch) | "
          f"speedup {wps_scan / wps_seq:.2f}x | max_abs_err {err:.2e}")
+
+
+# --------------------------------------------------------------------------
+# Table 2c — env-sharded scan engine: same cell under shard_map on the mesh
+# --------------------------------------------------------------------------
+
+def bench_scan_sharded(quick=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import PerceptaPipeline, PipelineConfig
+    from repro.core.frame import make_raw_window
+
+    K, E, S, T, M = 32, 8, 8, 16, 64
+    ndev = len(jax.devices())
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    rng = np.random.RandomState(0)
+    raws = make_raw_window(
+        rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
+        (rng.uniform(0, T * 60, (K, E, S, M))
+         + np.arange(K)[:, None, None, None] * T * 60).astype(np.float32),
+        rng.rand(K, E, S, M) > 0.3)
+    starts = jnp.asarray(np.arange(K, dtype=np.float32)[:, None] * (T * 60.0)
+                         * np.ones((1, E), np.float32))
+    scan = PerceptaPipeline(cfg, mode="scan")
+    shard = PerceptaPipeline(cfg, mode="scan_sharded")
+    state0 = scan.init_state()
+
+    # acceptance: sharded outputs bit-identical to the single-device scan
+    _, f_ref, _ = scan.run_many(state0, raws, starts)
+    _, f_sh, _ = shard.run_many(state0, raws, starts)
+    err = float(np.max(np.abs(np.asarray(f_ref.features)
+                              - np.asarray(f_sh.features))))
+
+    def run_scan():
+        st, f, _ = scan.run_many(state0, raws, starts)
+        f.features.block_until_ready()
+
+    def run_shard():
+        st, f, _ = shard.run_many(state0, raws, starts)
+        f.features.block_until_ready()
+
+    n = 6 if quick else 12
+    t_scan = _time(run_scan, n=n, best=True)
+    t_shard = _time(run_shard, n=n, best=True)
+    wps = K / (t_shard / 1e6)
+    mesh_n = int(np.prod(list(shard.mesh.shape.values())))
+    SUMMARY["windows_per_s"]["scan_sharded"] = round(wps, 1)
+    SUMMARY["scan_sharded_max_abs_err"] = err
+    SUMMARY["mesh_devices"] = mesh_n
+    _row(f"scan_sharded_K{K}_E{E}_S{S}", t_shard / K,
+         f"{wps:.0f} windows/s | {mesh_n}-device env mesh ({ndev} visible) | "
+         f"{t_scan / t_shard:.2f}x vs scan | max_abs_err {err:.2e}")
+
+
+# --------------------------------------------------------------------------
+# Table 1b — columnar (RecordBatch) vs per-record host ingest + assembly
+# --------------------------------------------------------------------------
+
+class _LegacyAccumulator:
+    """The seed's per-record ingest/close loop, kept verbatim as the
+    benchmark baseline the columnar Accumulator is measured against."""
+
+    def __init__(self, env_id, streams, max_samples):
+        from collections import defaultdict
+        self.env_id = env_id
+        self.streams = list(streams)
+        self.stream_index = {s: i for i, s in enumerate(self.streams)}
+        self.max_samples = max_samples
+        self._pending = defaultdict(list)
+        self.stats = {"records": 0, "unknown_stream": 0, "overflow": 0}
+
+    def ingest(self, records):
+        for r in records:
+            idx = self.stream_index.get(r.stream)
+            if idx is None:
+                self.stats["unknown_stream"] += 1
+                continue
+            self.stats["records"] += 1
+            self._pending[idx].append(r)
+
+    def close_window(self, t_start, t_end):
+        S, M = len(self.streams), self.max_samples
+        values = np.zeros((S, M), np.float32)
+        ts = np.zeros((S, M), np.float32)
+        valid = np.zeros((S, M), bool)
+        for s in range(S):
+            recs = self._pending.get(s, [])
+            take, keep = [], []
+            for r in recs:
+                (take if r.timestamp < t_end else keep).append(r)
+            self._pending[s] = keep
+            take.sort(key=lambda r: r.timestamp)
+            if len(take) > M:
+                self.stats["overflow"] += len(take) - M
+                take = take[-M:]
+            for j, r in enumerate(take):
+                values[s, j] = r.value
+                ts[s, j] = r.timestamp
+                valid[s, j] = r.timestamp >= t_start
+        return values, ts, valid
+
+    def close_windows(self, bounds):
+        K, S, M = len(bounds), len(self.streams), self.max_samples
+        values = np.zeros((K, S, M), np.float32)
+        ts = np.zeros((K, S, M), np.float32)
+        valid = np.zeros((K, S, M), bool)
+        for k, (t0, t1) in enumerate(bounds):
+            values[k], ts[k], valid[k] = self.close_window(t0, t1)
+        return values, ts, valid
+
+
+def bench_columnar_ingest(quick=False):
+    from repro.runtime.accumulator import Accumulator
+    from repro.runtime.records import Record, RecordBatch
+
+    K, E, S, M = 32, 8, 8, 64
+    per_sw = 16 if quick else 48        # records per (stream, window)
+    window_s = 16 * 60.0
+    bounds = [(k * window_s, (k + 1) * window_s) for k in range(K)]
+    streams = [f"s{i}" for i in range(S)]
+    rng = np.random.RandomState(0)
+
+    # one out-of-order record stream per env (same data to both paths)
+    n = K * S * per_sw
+    sid = np.tile(np.arange(S, dtype=np.int32), n // S)
+    ts = rng.uniform(0, K * window_s, n)
+    vs = rng.normal(5, 2, n)
+    recs = [Record("env", streams[int(s)], float(t), float(v))
+            for s, t, v in zip(sid, ts, vs)]
+    batch = RecordBatch("env", tuple(streams), sid, ts, vs)
+
+    def run_legacy():
+        for _ in range(E):
+            acc = _LegacyAccumulator("env", streams, M)
+            acc.ingest(recs)
+            acc.close_windows(bounds)
+
+    def run_columnar():
+        for _ in range(E):
+            acc = Accumulator("env", streams, M)
+            acc.ingest_batch(batch)
+            acc.close_windows(bounds)
+
+    # bit-for-bit parity of the measured paths
+    a, b = _LegacyAccumulator("env", streams, M), Accumulator("env", streams, M)
+    a.ingest(recs)
+    b.ingest_batch(batch)
+    ok = all((x == y).all() for x, y in zip(a.close_windows(bounds),
+                                            b.close_windows(bounds)))
+
+    reps = 2 if quick else 4
+    t_leg = _time(run_legacy, n=reps, warmup=1, best=True)
+    t_col = _time(run_columnar, n=reps, warmup=1, best=True)
+    total = n * E
+    rps_leg = total / (t_leg / 1e6)
+    rps_col = total / (t_col / 1e6)
+    SUMMARY["records_per_s"]["legacy"] = round(rps_leg, 0)
+    SUMMARY["records_per_s"]["columnar"] = round(rps_col, 0)
+    SUMMARY["records_per_s"]["speedup"] = round(rps_col / rps_leg, 2)
+    SUMMARY["columnar_bit_identical"] = bool(ok)
+    _row(f"ingest_legacy_K{K}_E{E}_S{S}", t_leg / total,
+         f"{rps_leg:.0f} records/s (per-record loop)")
+    _row(f"ingest_columnar_K{K}_E{E}_S{S}", t_col / total,
+         f"{rps_col:.0f} records/s | speedup {rps_col / rps_leg:.2f}x | "
+         f"bit_identical {ok}")
 
 
 # --------------------------------------------------------------------------
@@ -359,22 +554,39 @@ def bench_roofline(quick=False):
              f"dom={d['dominant']} frac={d['roofline_fraction']:.3f}")
 
 
-ALL = [bench_ingest, bench_tick_latency, bench_scan_engine,
-       bench_stage_breakdown, bench_deployment, bench_serving,
-       bench_kernels, bench_roofline]
+ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
+       bench_scan_engine, bench_scan_sharded, bench_stage_breakdown,
+       bench_deployment, bench_serving, bench_kernels, bench_roofline]
 
-# --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings,
-# tick-latency axes + the scan-engine acceptance cell only
-SMOKE = [bench_tick_latency, bench_scan_engine]
+# --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
+# tick-latency axes, both scan-engine acceptance cells (incl. the sharded
+# mode on the forced host-device mesh), and the columnar-ingest cell
+SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
+         bench_columnar_ingest]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI pass: tick latency + scan engine, quick")
+                    help="tiny CI pass: tick latency + scan engines + "
+                         "columnar ingest, quick")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="also write rows + windows/s + records/s summary "
+                         "to this path (e.g. BENCH_pr2.json)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force an N-device CPU platform "
+                         "(--xla_force_host_platform_device_count) so "
+                         "scan_sharded runs on a real mesh; must be set "
+                         "before JAX initializes")
     args = ap.parse_args()
+    if args.host_devices > 0:
+        assert "jax" not in sys.modules, \
+            "--host-devices must be applied before JAX initializes"
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.host_devices}")
     benches = SMOKE if args.smoke else ALL
     if args.smoke:
         args.quick = True
@@ -386,6 +598,19 @@ def main() -> None:
             bench(quick=args.quick)
         except Exception as e:  # a failing table must not hide the others
             _row(bench.__name__, -1.0, f"ERROR {type(e).__name__}: {e}")
+    if args.json:
+        import jax
+        out = {
+            "bench": "percepta",
+            "jax": jax.__version__,
+            "devices": len(jax.devices()),
+            "quick": bool(args.quick),
+            **SUMMARY,
+            "rows": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

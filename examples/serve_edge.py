@@ -11,9 +11,14 @@ The Percepta tick runs in ``scan`` mode: the Manager batches ``SCAN_K``
 windows per device dispatch (``PerceptaPipeline.run_many`` — one
 ``lax.scan`` with the state carried on device) instead of dispatching one
 jitted tick per window; pass ``--mode fused`` for the one-dispatch-per-
-window behaviour.
+window behaviour, or ``--mode scan_sharded`` to run the same scan under
+``shard_map`` with envs sharded over the local device mesh (on one CPU
+device it degenerates to ``scan``; force a multi-device CPU mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before launch).
+Ingest is columnar (RecordBatch) throughout.
 
-Run: PYTHONPATH=src python examples/serve_edge.py [--mode scan|fused]
+Run: PYTHONPATH=src python examples/serve_edge.py \
+         [--mode scan|scan_sharded|fused]
 """
 import argparse
 import time
@@ -53,7 +58,8 @@ def lm_policy(feats):
 
 # --- Percepta wiring ---------------------------------------------------------
 ap = argparse.ArgumentParser()
-ap.add_argument("--mode", default="scan", choices=["scan", "fused"])
+ap.add_argument("--mode", default="scan",
+                choices=["scan", "scan_sharded", "fused"])
 args = ap.parse_args()
 SCAN_K = 2  # windows per scan-fused dispatch
 E = 4
@@ -82,20 +88,13 @@ system = PerceptaSystem([f"bldg-{i}" for i in range(E)], sources, pcfg, pred,
 engine = ServeEngine(model, params, batch_slots=4, max_seq=64)
 rng = np.random.RandomState(0)
 
-def _snapshot_norm():
-    # scan mode donates the state pytree into each run_many dispatch, so a
-    # host-side reference must be a copy, not an alias
-    return jax.tree.map(lambda x: jnp.array(x, copy=True), system.state.norm)
-
-
-batch = SCAN_K if args.mode == "scan" else 1
+batch = SCAN_K if args.mode in ("scan", "scan_sharded") else 1
 print(f"=== Percepta edge serving: 6 windows ({args.mode} mode, "
       f"{batch} windows/dispatch), 12 ad-hoc requests ===")
-norm_state["s"] = _snapshot_norm()
 t_start = time.time()
 tok_count = 0
 for w in range(0, 6, batch):
-    norm_state["s"] = _snapshot_norm()
+    norm_state["s"] = system.snapshot_norm()
     results = system.run_windows(batch)
     # serve batched ad-hoc requests while streams accumulate (2 per window
     # regardless of dispatch batching, so both modes serve 12 total)

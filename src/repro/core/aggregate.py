@@ -17,12 +17,39 @@ import jax.numpy as jnp
 
 AGGS = ("last", "mean", "sum", "min", "max", "std", "count")
 
+# repro.kernels.window_agg stats-column layout:
+# [mean, var, min, max, last, count, sum, n_spikes]
+_KERNEL_COLS = {"mean": 0, "min": 2, "max": 3, "last": 4, "count": 5,
+                "sum": 6}
 
-def window_agg(values, mask, agg: str):
-    """Aggregate the tick dim away. values/mask: (E, S, T) -> (E, S)."""
+
+def window_agg(values, mask, agg: str, *, use_pallas: bool = False):
+    """Aggregate the tick dim away. values/mask: (E, S, T) -> (E, S).
+
+    ``use_pallas=True`` computes every aggregate from one pass of the fused
+    ``repro.kernels.window_agg`` kernel (all eight window stats in a single
+    VMEM tile walk; interpret mode off-TPU) instead of a per-agg XLA
+    reduction; empty windows are fixed up to this module's conventions
+    (min/max saturate, the rest are 0).
+    """
     w = mask.astype(jnp.float32)
     n = w.sum(-1)
     big = jnp.float32(3.4e38)
+    if use_pallas and (agg == "std" or agg in _KERNEL_COLS):
+        from repro.kernels.window_agg.ops import window_agg as agg_kernel
+        E, S = values.shape[:2]
+        zeros = jnp.zeros((E, S), jnp.float32)
+        stats, _ = agg_kernel(values, mask, zeros, zeros + 1.0,
+                              use_pallas=True)
+        if agg == "std":
+            return jnp.sqrt(stats[..., 1])
+        out = stats[..., _KERNEL_COLS[agg]]
+        # the kernel zeroes empty-window min/max; this module saturates
+        if agg == "min":
+            return jnp.where(n > 0, out, big)
+        if agg == "max":
+            return jnp.where(n > 0, out, -big)
+        return out
     if agg == "last":
         idx = jnp.where(mask, jnp.arange(values.shape[-1]), -1).max(-1)
         take = jnp.take_along_axis(values, jnp.maximum(idx, 0)[..., None], -1)[..., 0]
@@ -54,15 +81,25 @@ def combine(values, weights):
     return jnp.einsum("est,fs->eft", values, weights)
 
 
-def feature_vector(values, mask, weights, *, per_tick: bool = False):
+def feature_vector(values, mask, weights, *, per_tick: bool = False,
+                   feature_agg: str = "last", use_pallas: bool = False):
     """Full Manager output: derived features flattened for the Encoder.
 
     values/mask (E,S,T), weights (F,S) ->
-      per_tick=False: (E, F) last-tick features
+      per_tick=False: (E, F) per-window features — the value at the final
+        tick position when ``feature_agg="last"`` (the original shape of
+        the pipeline output), else each stream's window aggregate
+        (:func:`window_agg`, e.g. "mean"/"sum") combined through
+        ``weights``; ``use_pallas`` routes that aggregate through the
+        fused kernel
       per_tick=True : (E, F*T) the whole harmonized window
     """
-    feats = combine(values, weights)                     # (E, F, T)
     if per_tick:
+        feats = combine(values, weights)                 # (E, F, T)
         E = feats.shape[0]
         return feats.reshape(E, -1)
-    return feats[..., -1]
+    if feature_agg != "last":
+        per_stream = window_agg(values, mask, feature_agg,
+                                use_pallas=use_pallas)   # (E, S)
+        return jnp.einsum("es,fs->ef", per_stream, weights)
+    return combine(values, weights)[..., -1]

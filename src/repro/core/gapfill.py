@@ -13,6 +13,12 @@ Strategies (selectable per stream):
 
 The LOCF scan is a prefix "latest-observation" propagation — associative, so
 it runs as ``jax.lax.associative_scan`` over the tick dim (O(log T) depth).
+
+``use_pallas=True`` routes the ``locf`` strategy through the Pallas kernel
+in ``repro.kernels.locf`` (one VMEM pass with the carry in VREGs on TPU;
+interpret mode elsewhere). The kernel is pure selection — no arithmetic —
+so its fill values are bit-identical to the XLA paths wherever the ``has``
+mask is True, which is the only place ``gap_fill`` consumes them.
 """
 from __future__ import annotations
 
@@ -108,9 +114,13 @@ def linear_bridge(values, observed):
 
 
 def gap_fill(values, observed, state: GapFillState, tick_ts,
-             strategy, *, tick_of_day=None, ewma_alpha: float = 0.2):
+             strategy, *, tick_of_day=None, ewma_alpha: float = 0.2,
+             use_pallas: bool = False):
     """Fill unobserved ticks. strategy: (S,) int32 index into STRATEGIES or a
-    single string. Returns (filled_values, filled_mask, new_state)."""
+    single string. Returns (filled_values, filled_mask, new_state).
+
+    ``use_pallas`` only affects the string ``"locf"`` strategy (the other
+    strategies and the per-stream int-vector form keep the XLA paths)."""
     E, S, T = values.shape
     if tick_of_day is None:
         tick_of_day = jnp.zeros((E, T), jnp.int32)
@@ -120,6 +130,10 @@ def gap_fill(values, observed, state: GapFillState, tick_ts,
     # extra associative scans, which matters inside the scan-fused engine
     # where gap-fill runs once per window on-device.
     def _locf():
+        if use_pallas and isinstance(strategy, str) and strategy == "locf":
+            from repro.kernels.locf.ops import locf as locf_kernel
+            return locf_kernel(values, observed, state.last_value,
+                               state.last_ts > -1e29)
         return locf(values, observed, state)
 
     def _linear():

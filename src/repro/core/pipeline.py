@@ -12,6 +12,19 @@ Three execution modes (the measured §Perf axis on CPU, same math):
     the device between windows (and is donated into the call), so the
     Manager pays ONE Python dispatch per K windows instead of one per
     window — the amortization that makes small-E edge deployments fast.
+  * ``scan_sharded`` — the same K-window scan executed under ``shard_map``
+    on a one-axis device mesh with the env dimension sharded (envs -> the
+    ``data`` axis; see ``distribution.sharding.env_mesh``). Every per-env
+    row of the batch, the state pytree, and the stacked outputs lives on
+    exactly one device; the math is collective-free, so outputs are
+    bit-identical to ``scan``. On a single device the mesh degenerates and
+    the mode equals ``scan``; on an N-device pod it runs K windows x E envs
+    with E/N env rows per chip. CPU testing recipe:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (must be set
+    before JAX initializes; ``benchmarks/run.py --host-devices 8``).
+
+All mesh/shard_map spellings route through ``repro.compat`` (JAX 0.4.x ..
+0.7 support matrix in ROADMAP.md).
 
 State is a single pytree carried tick-to-tick (gap-fill memory, anomaly
 stats, normalizer stats) — checkpointable alongside model params.
@@ -60,6 +73,14 @@ class PipelineConfig:
     # cross-stream relationships: rows of (F, S) — defaults to identity
     combine_weights: Optional[tuple] = None
     per_tick_features: bool = False
+    # how features summarize the tick dim: "last" keeps the final tick
+    # (the original behaviour, exact); any other AGGS name routes through
+    # aggregate.window_agg — the paper's Manager "sums, averages" logic
+    feature_agg: str = "last"
+    # route the locf gap-fill stage and the feature_agg window stats
+    # through the Pallas kernels in repro.kernels.{locf,window_agg}
+    # (interpret mode off-TPU); False keeps the pure-XLA paths
+    use_pallas: bool = False
 
     def weights(self):
         if self.combine_weights is None:
@@ -112,7 +133,7 @@ def stage_anomaly(cfg: PipelineConfig, state, v, obs):
 def stage_gapfill(cfg: PipelineConfig, state, v, obs, ticks):
     tod = jnp.mod((ticks / cfg.tick_s).astype(jnp.int32), cfg.seasonal_slots)
     return gf.gap_fill(v, obs, state.gapfill, ticks, cfg.gap_strategy,
-                       tick_of_day=tod)
+                       tick_of_day=tod, use_pallas=cfg.use_pallas)
 
 
 def stage_normalize(cfg: PipelineConfig, state, v, obs):
@@ -123,9 +144,13 @@ def stage_normalize(cfg: PipelineConfig, state, v, obs):
 def stage_features(cfg: PipelineConfig, v_norm, v_raw, obs, filled, ticks):
     mask = obs | filled
     feats = agg.feature_vector(v_norm, mask, cfg.weights(),
-                               per_tick=cfg.per_tick_features)
+                               per_tick=cfg.per_tick_features,
+                               feature_agg=cfg.feature_agg,
+                               use_pallas=cfg.use_pallas)
     raw = agg.feature_vector(v_raw, mask, cfg.weights(),
-                             per_tick=cfg.per_tick_features)
+                             per_tick=cfg.per_tick_features,
+                             feature_agg=cfg.feature_agg,
+                             use_pallas=cfg.use_pallas)
     quality = obs.astype(jnp.float32).mean(axis=(1, 2))
     return FeatureFrame(feats, raw, quality, ticks[:, -1])
 
@@ -180,15 +205,58 @@ def run_many(cfg: PipelineConfig, state: PipelineState, raws: RawWindow,
     return final_state, feats, frames
 
 
-class PerceptaPipeline:
-    """User-facing handle; ``mode`` selects scan / fused / modular.
+def make_run_many_sharded(cfg: PipelineConfig, mesh=None):
+    """Env-sharded scan engine: :func:`run_many` under ``shard_map``.
 
-    ``run_tick`` treats ``scan`` as ``fused`` (single windows still take one
-    dispatch); the scan engine is reached through :meth:`run_many`.
+    Returns ``(fn, mesh)`` where ``fn(state, raws, window_starts)`` has the
+    same signature/outputs as :func:`run_many` but executes with the env
+    dimension sharded over ``mesh``'s single ``data`` axis: state leaves are
+    split on dim 0, the (K, E, S, M) batch / (K, E) starts / stacked outputs
+    on dim 1, and the scalar ``tick_index`` is replicated. The tick math is
+    per-env (no cross-env reductions anywhere in the stage functions), so
+    the body needs no collectives and outputs are bit-identical to
+    :func:`run_many`. ``mesh`` defaults to ``sharding.env_mesh(cfg.n_envs)``
+    (largest device count dividing E; 1-device meshes degenerate cleanly).
+    """
+    from repro.distribution import sharding as shard_lib
+
+    if mesh is None:
+        mesh = shard_lib.env_mesh(cfg.n_envs)
+    fn = functools.partial(run_many, cfg)
+    # PartitionSpecs depend only on leaf ranks, so probe them with a K=1
+    # abstract batch; the jitted wrapper retraces per concrete K as usual.
+    E, S, M = cfg.n_envs, cfg.n_streams, cfg.max_samples
+    state_s = jax.eval_shape(lambda: init_state(cfg))
+    raw_s = RawWindow(jax.ShapeDtypeStruct((1, E, S, M), jnp.float32),
+                      jax.ShapeDtypeStruct((1, E, S, M), jnp.float32),
+                      jax.ShapeDtypeStruct((1, E, S, M), jnp.bool_))
+    starts_s = jax.ShapeDtypeStruct((1, E), jnp.float32)
+    out_state_s, out_feats_s, out_frames_s = jax.eval_shape(
+        fn, state_s, raw_s, starts_s)
+    axis = mesh.axis_names[0]
+    in_specs = (shard_lib.env_specs(state_s, 0, axis),
+                shard_lib.env_specs(raw_s, 1, axis),
+                shard_lib.env_specs(starts_s, 1, axis))
+    out_specs = (shard_lib.env_specs(out_state_s, 0, axis),
+                 shard_lib.env_specs(out_feats_s, 1, axis),
+                 shard_lib.env_specs(out_frames_s, 1, axis))
+    sharded = compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
+    return sharded, mesh
+
+
+class PerceptaPipeline:
+    """User-facing handle; ``mode`` selects scan_sharded/scan/fused/modular.
+
+    ``run_tick`` treats ``scan``/``scan_sharded`` as ``fused`` (single
+    windows still take one dispatch); the scan engine is reached through
+    :meth:`run_many`, which dispatches to the env-sharded ``shard_map``
+    build when ``mode="scan_sharded"`` (``mesh`` overrides the default
+    ``distribution.sharding.env_mesh``).
     """
 
     def __init__(self, cfg: PipelineConfig, mode: str = "fused",
-                 donate: bool = False):
+                 donate: bool = False, mesh=None):
         # donate=True requires the caller to treat the passed-in state as
         # consumed (the engine hands back the new state); it is how the
         # scan engine keeps exactly one live state pytree on device.
@@ -200,9 +268,12 @@ class PerceptaPipeline:
         # alias their zero buffers, which raw donate_argnums rejects
         self._fused = compat.jit_donated(
             tickf, donate_argnums=(0,) if donate else ())
+        if mode == "scan_sharded":
+            scan_fn, self.mesh = make_run_many_sharded(cfg, mesh)
+        else:
+            scan_fn, self.mesh = functools.partial(run_many, cfg), None
         self._scan = compat.jit_donated(
-            functools.partial(run_many, cfg),
-            donate_argnums=(0,) if donate else ())
+            scan_fn, donate_argnums=(0,) if donate else ())
         # modular: one jit per module, host transitions in between — the
         # architecture exactly as drawn (baseline for §Perf)
         self._m_harm = jax.jit(functools.partial(stage_harmonize, cfg))
@@ -219,7 +290,7 @@ class PerceptaPipeline:
         return self._scan(state, raws, window_starts)
 
     def run_tick(self, state, raw: RawWindow, window_start):
-        if self.mode in ("fused", "scan"):
+        if self.mode in ("fused", "scan", "scan_sharded"):
             return self._fused(state, raw, window_start)
         # modular: each stage returns to host before the next is dispatched
         v, obs, ticks = jax.block_until_ready(

@@ -25,6 +25,47 @@ from repro import compat
 from repro.configs.base import ShardingConfig
 
 
+ENV_AXIS = "data"  # scan-engine mesh axis name: envs -> data parallelism
+
+
+def env_mesh(n_envs: int, devices=None, axis_name: str = ENV_AXIS) -> Mesh:
+    """One-axis device mesh for the env-sharded scan engine.
+
+    The (K, E, S, M) scan batch is data-parallel over E (per-env state rows
+    never interact), so the mesh is a single ``data`` axis over the host's
+    devices. Uses the largest device count that divides ``n_envs`` — on a
+    lone CPU device this degenerates to a 1-device mesh and ``shard_map``
+    becomes a no-op partitioning, which is what lets the sharded mode run
+    (and be tested) everywhere. Multi-device CPU recipe:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set before JAX
+    initializes (``benchmarks/run.py --host-devices 8`` does this).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    while n > 1 and n_envs % n:
+        n -= 1
+    return compat.make_mesh(np.asarray(devices[:n]), (axis_name,))
+
+
+def env_specs(shape_tree, env_axis: int, axis_name: str = ENV_AXIS):
+    """PartitionSpec pytree sharding dim ``env_axis`` of every array leaf.
+
+    Leaves with too few dims to carry an env axis (the scalar ``tick_index``
+    counter) are replicated. Used by ``core.pipeline.run_many_sharded`` for
+    both the state pytree (env_axis=0) and the K-leading scan batch /
+    stacked outputs (env_axis=1).
+    """
+    def one(s):
+        if s.ndim <= env_axis:
+            return P()
+        spec = [None] * s.ndim
+        spec[env_axis] = axis_name
+        return P(*spec)
+
+    return jax.tree.map(one, shape_tree,
+                        is_leaf=lambda x: hasattr(x, "ndim"))
+
+
 def make_abstract_mesh(mesh_shape) -> "jax.sharding.AbstractMesh":
     """Planner-only mesh from ``((name, size), ...)`` — no devices needed.
 

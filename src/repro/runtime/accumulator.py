@@ -5,16 +5,29 @@ to the corresponding queue. Upon receiving a message, it forwards the data
 to the environment-specific Manager." Here the Accumulator also performs the
 device-batch assembly: records -> padded (streams, max_samples) arrays with
 validity masks for the window that just closed.
+
+Storage is columnar: pending records live as (stream_idx, timestamp, value)
+NumPy column chunks in arrival order, fed either by legacy ``Record``
+objects or by whole :class:`RecordBatch`es (the zero-Python-loop path).
+``close_windows`` buckets ALL pending records into the K requested windows
+with one stable lexsort + searchsorted + bincount pass — O(records)
+vectorized work — while reproducing the per-record reference semantics
+bit-for-bit: window k takes the not-yet-taken records with ts < t_end_k in
+timestamp order (arrival order breaking ties), overflow beyond
+``max_samples`` drops the OLDEST and is counted, records older than
+t_start_k still occupy slots but are masked invalid, and records newer than
+the last window end stay pending.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Dict, List, Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.runtime.queues import EnvQueue
-from repro.runtime.records import Record
+from repro.runtime.records import Record, RecordBatch
+
+# one pending chunk = (stream_idx int32, ts float64, value float64) columns
+Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray]
 
 
 class Accumulator:
@@ -23,55 +36,122 @@ class Accumulator:
         self.streams = list(streams)
         self.stream_index = {s: i for i, s in enumerate(self.streams)}
         self.max_samples = max_samples
-        self._pending: Dict[int, List[Record]] = defaultdict(list)
+        self._chunks: List[Chunk] = []
         self.stats = {"records": 0, "unknown_stream": 0, "overflow": 0}
 
-    def ingest(self, records: Sequence[Record]):
-        for r in records:
-            idx = self.stream_index.get(r.stream)
+    # --- ingest ---------------------------------------------------------------
+    def ingest(self, items: Sequence):
+        """Accept a drained queue mix of ``Record``s and ``RecordBatch``es."""
+        sid, ts, vs = [], [], []
+        for it in items:
+            if isinstance(it, RecordBatch):
+                # flush interleaved singles first to preserve arrival order
+                if sid:
+                    self._push_chunk(np.asarray(sid, np.int32),
+                                     np.asarray(ts, np.float64),
+                                     np.asarray(vs, np.float64))
+                    sid, ts, vs = [], [], []
+                self.ingest_batch(it)
+                continue
+            idx = self.stream_index.get(it.stream)
             if idx is None:
                 self.stats["unknown_stream"] += 1
                 continue
-            self.stats["records"] += 1
-            self._pending[idx].append(r)
+            sid.append(idx)
+            ts.append(it.timestamp)
+            vs.append(it.value)
+        if sid:
+            self._push_chunk(np.asarray(sid, np.int32),
+                             np.asarray(ts, np.float64),
+                             np.asarray(vs, np.float64))
 
+    def ingest_batch(self, batch: RecordBatch):
+        """Columnar ingest: resolve the batch's stream table, drop unknowns."""
+        table = np.asarray([self.stream_index.get(s, -1)
+                            for s in batch.streams], np.int32)
+        sid = table[batch.stream_ids] if len(batch) else \
+            np.empty(0, np.int32)
+        # float64 columns regardless of how the batch was built, so window
+        # bucketing always compares like Record's Python floats
+        ts = np.asarray(batch.timestamps, np.float64)
+        vs = np.asarray(batch.values, np.float64)
+        known = sid >= 0
+        n_unknown = int((~known).sum())
+        if n_unknown:
+            self.stats["unknown_stream"] += n_unknown
+            sid, ts, vs = sid[known], ts[known], vs[known]
+        self._push_chunk(sid, ts, vs)
+
+    def _push_chunk(self, sid: np.ndarray, ts: np.ndarray, vs: np.ndarray):
+        if sid.shape[0]:
+            self.stats["records"] += int(sid.shape[0])
+            self._chunks.append((sid, ts, vs))
+
+    def _pending(self) -> Chunk:
+        if not self._chunks:
+            z = np.empty(0)
+            return np.empty(0, np.int32), z, z
+        if len(self._chunks) > 1:
+            self._chunks = [tuple(np.concatenate(cols)
+                                  for cols in zip(*self._chunks))]
+        return self._chunks[0]
+
+    # --- window close ---------------------------------------------------------
     def close_window(self, t_start: float, t_end: float):
         """Build the padded raw-window arrays for [t_start, t_end) and retain
         newer records for later windows."""
-        S, M = len(self.streams), self.max_samples
-        values = np.zeros((S, M), np.float32)
-        ts = np.zeros((S, M), np.float32)
-        valid = np.zeros((S, M), bool)
-        for s in range(S):
-            recs = self._pending.get(s, [])
-            take, keep = [], []
-            for r in recs:
-                (take if r.timestamp < t_end else keep).append(r)
-            self._pending[s] = keep
-            take.sort(key=lambda r: r.timestamp)
-            if len(take) > M:
-                self.stats["overflow"] += len(take) - M
-                take = take[-M:]
-            for j, r in enumerate(take):
-                values[s, j] = r.value
-                ts[s, j] = r.timestamp
-                valid[s, j] = r.timestamp >= t_start
-        return values, ts, valid
+        v, ts, m = self.close_windows([(t_start, t_end)])
+        return v[0], ts[0], m[0]
 
     def close_windows(self, bounds):
         """Close K consecutive windows into stacked (K, S, M) arrays.
 
         ``bounds`` is a chronologically ordered sequence of (t_start, t_end)
-        pairs; records newer than the last window end stay pending. This is
-        the per-env half of the scan-engine batch assembly — stacking K
-        single-window closes keeps the exact per-window record routing of
-        ``close_window`` (and therefore per-env isolation: this object only
-        ever sees its own env's queue drain).
+        pairs; records newer than the last window end stay pending. One
+        vectorized pass buckets every pending record into its window
+        (``searchsorted`` over the window ends — the first window whose end
+        exceeds the record's timestamp, i.e. exactly the per-window
+        "take everything with ts < t_end" of the reference loop), orders
+        each (window, stream) group by timestamp with a stable lexsort
+        (arrival order on ties), trims overflow from the oldest side, and
+        scatters values/timestamps/validity in one shot.
         """
         K, S, M = len(bounds), len(self.streams), self.max_samples
         values = np.zeros((K, S, M), np.float32)
-        ts = np.zeros((K, S, M), np.float32)
+        ts_out = np.zeros((K, S, M), np.float32)
         valid = np.zeros((K, S, M), bool)
-        for k, (t0, t1) in enumerate(bounds):
-            values[k], ts[k], valid[k] = self.close_window(t0, t1)
-        return values, ts, valid
+
+        sid, ts, vs = self._pending()
+        if not sid.shape[0]:
+            return values, ts_out, valid
+        starts = np.asarray([b[0] for b in bounds], np.float64)
+        ends = np.asarray([b[1] for b in bounds], np.float64)
+
+        # window index: first k with ts < ends[k]; >= K stays pending
+        bucket = np.searchsorted(ends, ts, side="right")
+        taken = bucket < K
+        self._chunks = [] if taken.all() else \
+            [(sid[~taken], ts[~taken], vs[~taken])]
+        sid, ts, vs, bucket = sid[taken], ts[taken], vs[taken], bucket[taken]
+        if not sid.shape[0]:
+            return values, ts_out, valid
+
+        # stable sort by (window, stream, ts) — ties keep arrival order,
+        # matching the reference's stable per-stream list sort
+        group = bucket.astype(np.int64) * S + sid
+        order = np.lexsort((ts, group))
+        group = group[order]
+        sid, ts, vs, bucket = sid[order], ts[order], vs[order], bucket[order]
+
+        cnt = np.bincount(group, minlength=K * S)
+        first = cnt.cumsum() - cnt                     # group start offsets
+        pos = np.arange(group.shape[0]) - first[group]
+        drop = np.maximum(cnt - M, 0)                  # overflow: drop oldest
+        self.stats["overflow"] += int(drop.sum())
+        keep = pos >= drop[group]
+        slot = (pos - drop[group])[keep]
+        kb, sb, tk, vk = bucket[keep], sid[keep], ts[keep], vs[keep]
+        values[kb, sb, slot] = vk.astype(np.float32)
+        ts_out[kb, sb, slot] = tk.astype(np.float32)
+        valid[kb, sb, slot] = tk >= starts[kb]
+        return values, ts_out, valid

@@ -2,29 +2,39 @@
 
 One queue per environment keeps environments isolated ("these environments
 operate independently, do not interfere with each other").
+
+Queue items are :class:`Record`s or columnar :class:`RecordBatch`es — the
+stats count *records* either way, so one enqueued 500-row batch reads as
+500 in ``enqueued``/``dequeued``, exactly like 500 individual puts.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
-from repro.runtime.records import Record
+from repro.runtime.records import Record, RecordBatch
+
+Item = Union[Record, RecordBatch]
+
+
+def _n(item: Item) -> int:
+    return len(item) if isinstance(item, RecordBatch) else 1
 
 
 class EnvQueue:
     def __init__(self, env_id: str, maxsize: int = 100_000):
         self.env_id = env_id
-        self._q: "queue.Queue[Record]" = queue.Queue(maxsize=maxsize)
+        self._q: "queue.Queue[Item]" = queue.Queue(maxsize=maxsize)
         self.stats = {"enqueued": 0, "dropped": 0, "dequeued": 0}
 
-    def put(self, rec: Record) -> bool:
+    def put(self, item: Item) -> bool:
         try:
-            self._q.put_nowait(rec)
-            self.stats["enqueued"] += 1
+            self._q.put_nowait(item)
+            self.stats["enqueued"] += _n(item)
             return True
         except queue.Full:
-            self.stats["dropped"] += 1
+            self.stats["dropped"] += _n(item)
             return False
 
     def drain(self, max_items: int = 1_000_000):
@@ -34,7 +44,7 @@ class EnvQueue:
                 out.append(self._q.get_nowait())
             except queue.Empty:
                 break
-        self.stats["dequeued"] += len(out)
+        self.stats["dequeued"] += sum(_n(it) for it in out)
         return out
 
     def qsize(self):
@@ -54,9 +64,14 @@ class QueueBroker:
                 self._queues[env_id] = EnvQueue(env_id)
             return self._queues[env_id]
 
-    def publish(self, rec: Record):
-        self.queue_for(rec.env_id).put(rec)
+    def publish(self, item: Item):
+        self.queue_for(item.env_id).put(item)
 
     def stats(self):
-        return {e: q.stats | {"depth": q.qsize()}
+        # depth stays in records (enqueued - dequeued holds because both
+        # count records); depth_items is the raw queue length, which is
+        # smaller whenever multi-row RecordBatches are in flight
+        return {e: q.stats | {"depth": q.stats["enqueued"]
+                              - q.stats["dequeued"],
+                              "depth_items": q.qsize()}
                 for e, q in self._queues.items()}

@@ -20,6 +20,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.runtime.records import CODECS
 
 
@@ -65,7 +67,18 @@ class SimulatedDevice:
 
 class Receiver(threading.Thread):
     """Polls/receives from one source and hands raw payloads to the
-    Translator callback per subscribed environment."""
+    Translator callback per subscribed environment.
+
+    Two delivery shapes per subscription:
+      * ``on_payload`` — one encoded wire payload per reading (the
+        protocol-faithful path; exercises the codecs end to end).
+      * ``on_batch``   — one ``(env_id, stream, ts_column, value_column)``
+        call per poll (the columnar fast path: a poll's readings cross the
+        receiver boundary as two NumPy columns, no per-reading Python).
+    When both are given the batch path wins; stats count logical readings
+    either way (bytes on the batch path are the 16-byte binary-equivalent
+    per reading, so load accounting stays comparable across paths).
+    """
 
     def __init__(self, source_id: str, protocol: str, device: SimulatedDevice,
                  clock: Callable[[], float], speedup: float = 1.0,
@@ -80,13 +93,21 @@ class Receiver(threading.Thread):
         # older than the backlog horizon is dropped, not replayed
         self.max_backlog_s = max_backlog_s
         self.encode = CODECS[protocol][0]
-        self._subs: Dict[str, Callable[[str, bytes], None]] = {}
+        self._subs: Dict[str, Optional[Callable[[str, bytes], None]]] = {}
+        self._batch_subs: Dict[str, Callable] = {}
         self._stop = threading.Event()
         self._last_t: Dict[str, float] = {}
         self.stats = {"payloads": 0, "bytes": 0}
 
-    def subscribe(self, env_id: str, on_payload: Callable[[str, bytes], None]):
+    def subscribe(self, env_id: str,
+                  on_payload: Optional[Callable[[str, bytes], None]] = None,
+                  on_batch: Optional[Callable] = None):
+        assert on_payload is not None or on_batch is not None
         self._subs[env_id] = on_payload
+        if on_batch is not None:
+            self._batch_subs[env_id] = on_batch
+        else:  # re-subscribing payload-only must drop a stale batch route
+            self._batch_subs.pop(env_id, None)
         self._last_t[env_id] = self.clock()
 
     def poll_once(self):
@@ -97,11 +118,23 @@ class Receiver(threading.Thread):
             if now <= t0:
                 continue
             env_seed = abs(hash(env_id)) % 100000
-            for ts, v in self.device.readings(t0, now, env_seed):
-                payload = self.encode(self.device.stream, ts, v)
-                self.stats["payloads"] += 1
-                self.stats["bytes"] += len(payload)
-                cb(env_id, payload)
+            readings = self.device.readings(t0, now, env_seed)
+            cb_batch = self._batch_subs.get(env_id)
+            if cb_batch is not None:
+                if readings:
+                    ts = np.fromiter((r[0] for r in readings), np.float64,
+                                     len(readings))
+                    vs = np.fromiter((r[1] for r in readings), np.float64,
+                                     len(readings))
+                    self.stats["payloads"] += len(readings)
+                    self.stats["bytes"] += 16 * len(readings)
+                    cb_batch(env_id, self.device.stream, ts, vs)
+            else:
+                for ts, v in readings:
+                    payload = self.encode(self.device.stream, ts, v)
+                    self.stats["payloads"] += 1
+                    self.stats["bytes"] += len(payload)
+                    cb(env_id, payload)
             self._last_t[env_id] = now
 
     def run(self):

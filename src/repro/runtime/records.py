@@ -2,13 +2,23 @@
 
 Receivers produce raw protocol payloads; Translators parse them into
 :class:`Record`s — the "standardized format" flowing to the env queues.
+
+:class:`RecordBatch` is the columnar (structure-of-arrays) form of the same
+standardized data: NumPy value/timestamp/stream-index columns plus a
+stream-name table. It is what the fast ingest path moves through receivers,
+queues, and the Accumulator — one Python object per poll instead of one per
+reading, so batch assembly is O(records) vectorized NumPy with no
+Python-level inner loop. A batch is exactly equivalent to the Record list
+``to_records()`` returns (and the Accumulator treats them identically).
 """
 from __future__ import annotations
 
 import json
 import struct
 from dataclasses import dataclass
-from typing import List
+from typing import Iterable, List, Sequence
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -17,6 +27,63 @@ class Record:
     stream: str
     timestamp: float
     value: float
+
+
+@dataclass(frozen=True)
+class RecordBatch:
+    """Columnar records for ONE environment (SoA mirror of ``List[Record]``).
+
+    ``stream_ids`` indexes into the ``streams`` name table; ``timestamps``
+    and ``values`` stay float64 so bucketing/sorting compares exactly like
+    ``Record``'s Python floats (the float32 cast happens once, at window
+    close, same as the per-record path). Row order is arrival order — the
+    Accumulator's stable sorts rely on it for tie-breaking parity with the
+    Record-list path.
+    """
+    env_id: str
+    streams: tuple                # stream-name table, indexed by stream_ids
+    stream_ids: np.ndarray        # (N,) int32
+    timestamps: np.ndarray        # (N,) float64
+    values: np.ndarray            # (N,) float64
+
+    def __len__(self) -> int:
+        return int(self.values.shape[0])
+
+    @staticmethod
+    def from_columns(env_id: str, stream: str, timestamps,
+                     values) -> "RecordBatch":
+        """Single-stream batch (one Receiver poll of one device)."""
+        ts = np.asarray(timestamps, np.float64).ravel()
+        vs = np.asarray(values, np.float64).ravel()
+        assert ts.shape == vs.shape
+        return RecordBatch(env_id, (stream,),
+                           np.zeros(ts.shape[0], np.int32), ts, vs)
+
+    @staticmethod
+    def from_records(records: Sequence[Record]) -> "RecordBatch":
+        """Pack a homogeneous-env Record list (arrival order preserved)."""
+        assert records, "empty record list"
+        env_id = records[0].env_id
+        table: dict = {}
+        ids = np.empty(len(records), np.int32)
+        ts = np.empty(len(records), np.float64)
+        vs = np.empty(len(records), np.float64)
+        for i, r in enumerate(records):
+            assert r.env_id == env_id, "RecordBatch rows share one env"
+            ids[i] = table.setdefault(r.stream, len(table))
+            ts[i] = r.timestamp
+            vs[i] = r.value
+        return RecordBatch(env_id, tuple(table), ids, ts, vs)
+
+    def to_records(self) -> List[Record]:
+        return [Record(self.env_id, self.streams[int(s)], float(t), float(v))
+                for s, t, v in zip(self.stream_ids, self.timestamps,
+                                   self.values)]
+
+
+def count_records(items: Iterable) -> int:
+    """Number of records in a drained mix of Records and RecordBatches."""
+    return sum(len(it) if isinstance(it, RecordBatch) else 1 for it in items)
 
 
 # --- simulated wire formats (one per protocol family) -----------------------

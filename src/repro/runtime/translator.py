@@ -4,12 +4,19 @@
 format of the incoming data, extracting only the relevant information ...
 and submits it to an internal queue associated with the appropriate
 environment."
+
+``translate`` is the per-payload path (decode one wire message -> one
+Record). ``translate_batch`` is the columnar path: a whole receiver poll
+(two NumPy columns) becomes one :class:`RecordBatch` with rename and unit
+scaling applied vectorized.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional
 
-from repro.runtime.records import CODECS, Record
+import numpy as np
+
+from repro.runtime.records import CODECS, Record, RecordBatch
 
 
 class Translator:
@@ -32,3 +39,21 @@ class Translator:
         stream = self.stream_rename.get(stream, stream)
         return Record(env_id=env_id, stream=stream, timestamp=ts,
                       value=value * self.unit_scale)
+
+    def translate_batch(self, env_id: str, stream: str, timestamps,
+                        values) -> Optional[RecordBatch]:
+        """Columnar poll -> one RecordBatch (rename + unit scale, no loop).
+
+        The receiver already decoded/simulated the columns, so there is no
+        per-row parse step to fail — malformed data is a per-payload-path
+        concern, which is why ``errors`` only moves on ``translate``.
+        """
+        ts = np.asarray(timestamps, np.float64)
+        vs = np.asarray(values, np.float64)
+        if ts.shape[0] == 0:
+            return None
+        if self.unit_scale != 1.0:
+            vs = vs * self.unit_scale
+        self.stats["records"] += int(ts.shape[0])
+        stream = self.stream_rename.get(stream, stream)
+        return RecordBatch.from_columns(env_id, stream, ts, vs)

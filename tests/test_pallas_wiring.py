@@ -1,0 +1,107 @@
+"""use_pallas wiring: the kernels in repro.kernels reached through
+core/gapfill.py and core/aggregate.py must match the pure-XLA paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import PerceptaPipeline, PipelineConfig
+from repro.core import aggregate as agg
+from repro.core import gapfill as gf
+from repro.core.frame import RawWindow, make_raw_window
+from repro.core.pipeline import init_state
+
+E, S, T, M = 3, 4, 16, 24
+
+
+def _window(rng, obs_p=0.6):
+    v = jnp.asarray(rng.normal(5, 2, (E, S, T)).astype(np.float32))
+    o = jnp.asarray(rng.rand(E, S, T) < obs_p)
+    return v, o
+
+
+def test_gap_fill_locf_pallas_parity(rng):
+    v, o = _window(rng)
+    state = gf.init_state(E, S)
+    # warm the carry so cross-window locf is exercised too
+    ticks = jnp.broadcast_to(jnp.arange(T, dtype=jnp.float32) * 60.0, (E, T))
+    _, _, state = gf.gap_fill(v, o, state, ticks, "locf")
+    out_x, fill_x, st_x = gf.gap_fill(v, o, state, ticks, "locf",
+                                      use_pallas=False)
+    out_p, fill_p, st_p = gf.gap_fill(v, o, state, ticks, "locf",
+                                      use_pallas=True)
+    assert (np.asarray(fill_x) == np.asarray(fill_p)).all()
+    assert (np.asarray(out_x) == np.asarray(out_p)).all()
+    for a, b in zip(st_x, st_p):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_gap_fill_other_strategies_ignore_flag(rng):
+    v, o = _window(rng)
+    state = gf.init_state(E, S)
+    ticks = jnp.broadcast_to(jnp.arange(T, dtype=jnp.float32) * 60.0, (E, T))
+    for strat in ("linear", "ewma", "seasonal"):
+        a = gf.gap_fill(v, o, state, ticks, strat, use_pallas=False)
+        b = gf.gap_fill(v, o, state, ticks, strat, use_pallas=True)
+        assert (np.asarray(a[0]) == np.asarray(b[0])).all()
+
+
+@pytest.mark.parametrize("a", list(agg.AGGS))
+def test_window_agg_pallas_parity(a, rng):
+    v, o = _window(rng)
+    ref = np.asarray(agg.window_agg(v, o, a, use_pallas=False))
+    out = np.asarray(agg.window_agg(v, o, a, use_pallas=True))
+    assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("a", ["min", "max", "mean", "count"])
+def test_window_agg_pallas_empty_window(a, rng):
+    """Rows with no observations keep this module's conventions
+    (saturated min/max, zeros elsewhere) on the kernel path too."""
+    v = jnp.asarray(rng.normal(5, 2, (E, S, T)).astype(np.float32))
+    o = jnp.zeros((E, S, T), bool)
+    ref = np.asarray(agg.window_agg(v, o, a, use_pallas=False))
+    out = np.asarray(agg.window_agg(v, o, a, use_pallas=True))
+    assert (out == ref).all()
+
+
+@pytest.mark.parametrize("feature_agg", ["mean", "sum"])
+def test_pipeline_feature_agg_pallas_parity(feature_agg, rng):
+    """The production window_agg call site (PipelineConfig.feature_agg)
+    honours use_pallas and matches the XLA path."""
+    kw = dict(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0, max_samples=M,
+              feature_agg=feature_agg)
+    cfg_x = PipelineConfig(**kw)
+    cfg_p = PipelineConfig(use_pallas=True, **kw)
+    raw = make_raw_window(
+        rng.normal(5, 2, (E, S, M)).astype(np.float32),
+        rng.uniform(0, T * 60, (E, S, M)).astype(np.float32),
+        rng.rand(E, S, M) > 0.3)
+    ws = jnp.zeros((E,), jnp.float32)
+    sx, fx, _ = PerceptaPipeline(cfg_x).run_tick(init_state(cfg_x), raw, ws)
+    sp, fp, _ = PerceptaPipeline(cfg_p).run_tick(init_state(cfg_p), raw, ws)
+    assert_allclose(np.asarray(fx.features), np.asarray(fp.features),
+                    rtol=1e-5, atol=1e-5)
+    # and the aggregated features differ from the default last-tick ones
+    cfg_l = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                           max_samples=M)
+    _, fl, _ = PerceptaPipeline(cfg_l).run_tick(init_state(cfg_l), raw, ws)
+    assert np.abs(np.asarray(fl.features) - np.asarray(fx.features)).max() > 0
+
+
+def test_pipeline_use_pallas_tick_parity(rng):
+    kw = dict(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0, max_samples=M)
+    cfg_x = PipelineConfig(**kw)
+    cfg_p = PipelineConfig(use_pallas=True, **kw)
+    raw = make_raw_window(
+        rng.normal(5, 2, (E, S, M)).astype(np.float32),
+        rng.uniform(0, T * 60, (E, S, M)).astype(np.float32),
+        rng.rand(E, S, M) > 0.3)
+    ws = jnp.zeros((E,), jnp.float32)
+    px, pp = PerceptaPipeline(cfg_x), PerceptaPipeline(cfg_p)
+    sx, sp = init_state(cfg_x), init_state(cfg_p)
+    for _ in range(2):
+        sx, fx, frx = px.run_tick(sx, raw, ws)
+        sp, fp, frp = pp.run_tick(sp, raw, ws)
+    assert (np.asarray(fx.features) == np.asarray(fp.features)).all()
+    assert (np.asarray(frx.filled) == np.asarray(frp.filled)).all()

@@ -1,6 +1,11 @@
-"""Scan-fused engine: run_many == K sequential run_tick calls, batch
+"""Scan-fused engine: run_many == K sequential run_tick calls, the
+env-sharded shard_map build is bit-identical to the plain scan, batch
 assembly preserves per-env isolation, and the dense harmonize fast path
 matches the scatter path it replaces on small windows."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -88,6 +93,76 @@ def test_scan_donation_reuses_state_safely(rng):
     assert_allclose(np.asarray(f1b.features), np.asarray(f2b.features),
                     rtol=1e-6, atol=1e-6)
     assert int(s2.tick_index) == 2 * K
+
+
+# --------------------------------------------------------------------------
+# Env-sharded scan: shard_map build == plain scan, bit for bit
+# --------------------------------------------------------------------------
+
+def test_scan_sharded_matches_scan_single_device(rng):
+    """On one device the env mesh degenerates but the whole shard_map path
+    (spec resolution, compat shims, donation) still executes."""
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    raws = _raws(rng)
+    starts = _starts()
+    scan = PerceptaPipeline(cfg, mode="scan")
+    shard = PerceptaPipeline(cfg, mode="scan_sharded", donate=True)
+    s1, f1, fr1 = scan.run_many(init_state(cfg), raws, starts)
+    s2, f2, fr2 = shard.run_many(init_state(cfg), raws, starts)
+    s2, f2b, _ = shard.run_many(s2, raws, starts)  # chained donated dispatch
+    s1, f1b, _ = scan.run_many(s1, raws, starts)
+    assert (np.asarray(f1.features) == np.asarray(f2.features)).all()
+    assert (np.asarray(f1b.features) == np.asarray(f2b.features)).all()
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    for a, b in zip(jax.tree.leaves(fr1), jax.tree.leaves(fr2)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+_SHARDED_SCRIPT = """
+import numpy as np, jax, jax.numpy as jnp
+assert len(jax.devices()) == 4, jax.devices()
+from repro.core import PerceptaPipeline, PipelineConfig
+from repro.core.frame import make_raw_window
+from repro.core.pipeline import init_state
+K, E, S, T, M = 3, 8, 2, 4, 8
+cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                     max_samples=M)
+rng = np.random.RandomState(0)
+w = T * 60.0
+ts = (rng.uniform(0, w, (K, E, S, M))
+      + np.arange(K)[:, None, None, None] * w).astype(np.float32)
+raws = make_raw_window(rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
+                       ts, rng.rand(K, E, S, M) > 0.3)
+starts = jnp.asarray(np.arange(K, dtype=np.float32)[:, None] * w
+                     * np.ones((1, E), np.float32))
+scan = PerceptaPipeline(cfg, mode="scan")
+shard = PerceptaPipeline(cfg, mode="scan_sharded", donate=True)
+assert dict(shard.mesh.shape) == {"data": 4}, shard.mesh
+s1, f1, fr1 = scan.run_many(init_state(cfg), raws, starts)
+s2, f2, fr2 = shard.run_many(init_state(cfg), raws, starts)
+assert (np.asarray(f1.features) == np.asarray(f2.features)).all()
+for a, b in zip(jax.tree.leaves(s1) + jax.tree.leaves(fr1),
+                jax.tree.leaves(s2) + jax.tree.leaves(fr2)):
+    assert (np.asarray(a) == np.asarray(b)).all()
+print("SHARDED_OK")
+"""
+
+
+def test_scan_sharded_multi_device_bit_identical():
+    """Real >=2-device mesh: force a 4-device CPU platform in a subprocess
+    (the flag must precede JAX init, so it can't run in this process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
 
 
 # --------------------------------------------------------------------------
