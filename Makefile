@@ -1,26 +1,34 @@
 # Developer / CI entrypoints. `make test` is the tier-1 verify command from
-# ROADMAP.md; `make bench-smoke` is a ~1-minute benchmark pass covering the
-# four pipeline execution axes (modular / fused / scan / scan_sharded) plus
-# the scan-engine + columnar-ingest acceptance cells. The sharded mode runs
-# on a forced 8-host-device CPU mesh (--host-devices) so the shard_map path
-# is exercised in CI, not just on real multi-chip hardware; results are also
-# written to BENCH_pr2.json (windows/s + records/s per mode).
+# ROADMAP.md; `make bench-smoke` is a ~2-minute benchmark pass covering the
+# five pipeline execution axes (modular / fused / scan / scan_sharded /
+# scan_async) plus the scan-engine, async-overlap, autotuner and
+# columnar-ingest acceptance cells. The sharded mode runs on a forced
+# 8-host-device CPU mesh (--host-devices) so the shard_map path is
+# exercised in CI, not just on real multi-chip hardware; the async overlap
+# cell runs in its own subprocess (accelerator-emulating XLA flags, see
+# benchmarks/run.py). Results are also written as JSON (windows/s +
+# records/s per mode).
 PY ?= python
 
-.PHONY: test bench-smoke bench-pr2 ci
+.PHONY: test bench-smoke bench-pr2 bench-pr3 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # CI pass: writes BENCH_smoke.json (untracked scratch) so repeated CI runs
-# never clobber the committed BENCH_pr2.json trajectory record
+# never clobber the committed BENCH_prN.json trajectory records
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
 		--json BENCH_smoke.json
 
-# regenerate the committed perf-trajectory artifact (run manually per PR)
+# regenerate the committed perf-trajectory artifacts (run manually per PR)
 bench-pr2:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
 		--json BENCH_pr2.json
+
+bench-pr3:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|autotune|columnar" \
+		--json BENCH_pr3.json
 
 ci: test bench-smoke

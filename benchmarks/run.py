@@ -274,6 +274,253 @@ def bench_scan_sharded(quick=False):
 
 
 # --------------------------------------------------------------------------
+# Table 2d — pipelined (async double-buffered) scan engine + K/E autotuner
+# --------------------------------------------------------------------------
+
+# The overlap cell runs in a SUBPROCESS with
+# ``--xla_cpu_multi_thread_eigen=false``: on a small CI box, XLA:CPU's
+# contraction threadpool otherwise saturates every core during the device
+# phase, so there is no spare capacity for host/device overlap to reclaim —
+# the flag emulates the deployment this engine targets (an accelerator that
+# does not consume host CPU) without perturbing any other cell's flags.
+# The measurement itself is drift-immune: scan and scan_async reps are
+# interleaved in PAIRS and the reported speedup is the MEDIAN of per-pair
+# ratios, because shared-box throughput drifts ~2x on minute timescales,
+# which corrupts best-of comparisons taken seconds apart.
+_ASYNC_CELL_SCRIPT = """
+import json, time
+import numpy as np
+from repro.core import PipelineConfig
+from repro.core.reward import energy_reward_spec
+from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+from repro.runtime.receivers import SimulatedDevice
+from repro.runtime.records import RecordBatch
+from repro.runtime.system import PerceptaSystem, SourceSpec
+import jax
+
+E, S, K, M = 8, 8, 32, 64
+T, TICK_S, PER = 64, 15.0, 160   # device-heavy tick math + dense ingest
+
+def mk(mode):
+    srcs = [SourceSpec(f"s{i}", "mqtt",
+                       SimulatedDevice(f"st{i}", 60.0, base=3.0, seed=i))
+            for i in range(S)]
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=TICK_S,
+                         max_samples=M, harmonize_method="onehot",
+                         gap_strategy="linear")
+    pred = Predictor(linear_policy(S, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     E, cfg.n_features, replay_capacity=64)
+    return PerceptaSystem([f"b{i}" for i in range(E)], srcs, cfg, pred,
+                          speedup=1e9, manual_time=True, mode=mode,
+                          scan_k=K)
+
+def publish(s, n_windows, rng):
+    # a loaded broker: per-poll RecordBatch columns already queued, the
+    # shape a real RabbitMQ consumer sees under sustained inbound load.
+    # Anchored at the system's CURRENT window so repeated reps keep every
+    # window fully populated (records behind the clock would be stale).
+    w = s.window_s
+    n = n_windows * PER
+    t0 = s.window_bounds(s.window_index)[0]
+    for env in s.env_ids:
+        for src in s.sources:
+            ts = np.sort(rng.uniform(t0, t0 + n_windows * w, n))
+            s.broker.publish(RecordBatch.from_columns(
+                env, src.device.stream, ts, rng.normal(5, 2, n)))
+
+QUICK = __QUICK__
+N = 96
+PAIRS = 8 if QUICK else 12  # first pair is jit/cache warmup, discarded
+
+
+def parallel_factor():
+    # self-calibration: how much extra CPU a second worker actually buys on
+    # this host (2.0 = two real cores; ~1.3 = one core + SMT sibling). The
+    # overlap speedup is physically bounded by this number, so record it
+    # next to the measurement.
+    import multiprocessing as mp
+
+    def burn(dur, q):
+        t0 = time.time()
+        n = 0
+        while time.time() - t0 < dur:
+            for _ in range(10000):
+                n += 1
+        q.put(n)
+
+    q = mp.Queue()
+    p = mp.Process(target=burn, args=(1.5, q))
+    t0 = time.time(); p.start(); p.join()
+    r1 = q.get() / (time.time() - t0)
+    q = mp.Queue()
+    ps = [mp.Process(target=burn, args=(1.5, q)) for _ in range(2)]
+    t0 = time.time()
+    for p in ps:
+        p.start()
+    for p in ps:
+        p.join()
+    r2 = sum(q.get() for _ in ps) / (time.time() - t0)
+    return r2 / r1
+
+
+ss, sa = mk("scan"), mk("scan_async")
+ss.run_windows(K, pump=False)
+sa.run_windows(K, pump=False)
+
+# host-assembly share of scan wall time (phase decomposition on the twin)
+publish(ss, N, np.random.RandomState(0))
+A = D = C = 0.0
+for b in range(N // K):
+    bounds = [ss.window_bounds(ss.window_index + j) for j in range(K)]
+    t0 = time.time(); raw, counts = ss.assemble_windows(bounds)
+    A += time.time() - t0
+    t0 = time.time()
+    feats, frames, td = ss._dispatch_scan(raw, K)
+    jax.block_until_ready(feats.features)
+    D += time.time() - t0
+    t0 = time.time(); ss._consume_scan(bounds, counts, feats, frames, td)
+    C += time.time() - t0
+
+ratios, tot_s, tot_a, best_s, best_a = [], 0.0, 0.0, 0.0, 0.0
+for pair in range(PAIRS):
+    publish(ss, N, np.random.RandomState(0))
+    t0 = time.time(); ss.run_windows(N, pump=False); dt_s = time.time() - t0
+    publish(sa, N, np.random.RandomState(0))
+    t0 = time.time(); sa.run_windows(N, pump=False); dt_a = time.time() - t0
+    if pair == 0:
+        continue    # warmup pair: first-touch caches, thread spin-up
+    ratios.append(dt_s / dt_a)
+    tot_s += dt_s
+    tot_a += dt_a
+    best_s = max(best_s, N / dt_s)
+    best_a = max(best_a, N / dt_a)
+sa.stop(); ss.stop()
+print(json.dumps({
+    "windows_per_s_scan": round(best_s, 1),
+    "windows_per_s_scan_async": round(best_a, 1),
+    # ratio of interleaved totals: per-leg box noise (shared-host bursts)
+    # cancels in expectation across many alternated short legs
+    "speedup": round(tot_s / tot_a, 2),
+    "speedup_median_of_pairs": round(float(np.median(ratios)), 2),
+    "pair_ratios": [round(r, 2) for r in ratios],
+    # what perfect overlap of these phases would yield...
+    "ideal_speedup": round((A + D + C) / (max(A, D) + C), 2),
+    # ...and the host's real concurrency budget bounding it (2.0 = two
+    # full cores; ~1.3 = one physical core + SMT sibling)
+    "host_parallel_factor": round(parallel_factor(), 2),
+    "host_assembly_frac": round(A / (A + D + C), 2),
+    "scan_phase_ms": {"assemble": round(A / (N // K) * 1e3, 1),
+                      "device": round(D / (N // K) * 1e3, 1),
+                      "consume": round(C / (N // K) * 1e3, 1)},
+    "cell": {"K": K, "E": E, "S": S, "T": T, "M": M,
+             "records_per_stream_window": PER},
+}))
+"""
+
+
+def bench_scan_async(quick=False):
+    import subprocess
+
+    from repro.core import PipelineConfig
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.predictor import (ActionSpace, Predictor,
+                                         linear_policy)
+    from repro.runtime.receivers import SimulatedDevice
+    from repro.runtime.system import PerceptaSystem, SourceSpec
+
+    # --- acceptance: bit-identical to scan on the K=32/E=8/S=8 cell -------
+    def mk(mode):
+        srcs = [SourceSpec(f"s{i}", "mqtt",
+                           SimulatedDevice(f"st{i}", 60.0, base=3.0, seed=i))
+                for i in range(8)]
+        cfg = PipelineConfig(n_envs=8, n_streams=8, n_ticks=16, tick_s=60.0,
+                             max_samples=64)
+        pred = Predictor(
+            linear_policy(8, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            8, cfg.n_features, replay_capacity=64)
+        return PerceptaSystem([f"b{i}" for i in range(8)], srcs, cfg, pred,
+                              speedup=1e9, manual_time=True, mode=mode,
+                              scan_k=32)
+
+    n = 32 if quick else 64
+    strip = lambda rs: [{k: v for k, v in r.items() if k != "latency_s"}
+                        for r in rs]
+    sa = mk("scan_async")
+    ident = strip(mk("scan").run_windows(n)) == strip(sa.run_windows(n))
+    sa.stop()
+    SUMMARY["scan_async_bit_identical"] = bool(ident)
+    _row("scan_async_identity_K32_E8_S8", 0.0,
+         f"bit_identical {ident} over {n} windows")
+
+    # --- overlap cell (subprocess; see _ASYNC_CELL_SCRIPT header) ---------
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_cpu_multi_thread_eigen=false"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    script = _ASYNC_CELL_SCRIPT.replace("__QUICK__", str(bool(quick)))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-2000:]
+    cell = json.loads(out.stdout.strip().splitlines()[-1])
+    SUMMARY["scan_async"] = cell
+    SUMMARY["windows_per_s"]["scan_async_cell_scan"] = \
+        cell["windows_per_s_scan"]
+    SUMMARY["windows_per_s"]["scan_async_cell_async"] = \
+        cell["windows_per_s_scan_async"]
+    ph = cell["scan_phase_ms"]
+    _row("scan_async_overlap_K32_E8_S8_T64",
+         1e6 / cell["windows_per_s_scan_async"],
+         f"{cell['windows_per_s_scan_async']:.0f} windows/s | "
+         f"{cell['speedup']:.2f}x vs scan "
+         f"({len(cell['pair_ratios'])} interleaved pairs, ratio of totals; "
+         f"median {cell['speedup_median_of_pairs']:.2f}x, ideal "
+         f"{cell['ideal_speedup']:.2f}x, host parallel factor "
+         f"{cell['host_parallel_factor']:.2f}) | "
+         f"host assembly {cell['host_assembly_frac']:.0%} of scan wall "
+         f"(A {ph['assemble']:.0f} / D {ph['device']:.0f} / "
+         f"C {ph['consume']:.0f} ms/batch)")
+
+
+def bench_autotune(quick=False):
+    import jax
+
+    from repro.core import PipelineConfig
+    from repro.core.autotune import tune_scan_params
+
+    cfg = PipelineConfig(n_envs=8, n_streams=8, n_ticks=16, tick_s=60.0,
+                         max_samples=64)
+    ndev = len(jax.devices())
+    # short grid: windows-per-dispatch x env-mesh split (1 = plain scan,
+    # ndev = the full forced mesh when bench-smoke runs --host-devices 8)
+    counts = [1] if ndev == 1 else [1, min(8, ndev)]
+    res = tune_scan_params(cfg, k_grid=(8, 32) if quick else (8, 16, 32),
+                           device_counts=counts, reps=2 if quick else 3)
+    optimum = max(w for _, _, w in res.grid)
+    # acceptance is a fresh INDEPENDENT re-measurement of the chosen cell
+    # (selection is the grid argmax by construction, so comparing it to its
+    # own grid would be tautological): the chosen config re-measured on new
+    # timings must still be within 10% of the calibration-grid optimum
+    recheck = tune_scan_params(cfg, k_grid=(res.scan_k,),
+                               device_counts=[res.mesh_devices],
+                               reps=2 if quick else 3)
+    within = recheck.best_windows_per_s >= 0.9 * optimum
+    SUMMARY["autotune"] = res.as_dict() | {
+        "remeasured_windows_per_s": round(recheck.best_windows_per_s, 1),
+        "within_10pct_of_optimum": within}
+    _row("autotune_scan_params", 1e6 / res.best_windows_per_s,
+         f"chose scan_k={res.scan_k} mesh_devices={res.mesh_devices} "
+         f"({res.best_windows_per_s:.0f} windows/s) over "
+         f"{len(res.grid)}-cell grid | re-measured "
+         f"{recheck.best_windows_per_s:.0f} windows/s, within 10% of grid "
+         f"optimum: {within}")
+
+
+# --------------------------------------------------------------------------
 # Table 1b — columnar (RecordBatch) vs per-record host ingest + assembly
 # --------------------------------------------------------------------------
 
@@ -555,14 +802,16 @@ def bench_roofline(quick=False):
 
 
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
-       bench_scan_engine, bench_scan_sharded, bench_stage_breakdown,
-       bench_deployment, bench_serving, bench_kernels, bench_roofline]
+       bench_scan_engine, bench_scan_sharded, bench_scan_async,
+       bench_autotune, bench_stage_breakdown, bench_deployment,
+       bench_serving, bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
-# tick-latency axes, both scan-engine acceptance cells (incl. the sharded
-# mode on the forced host-device mesh), and the columnar-ingest cell
+# tick-latency axes, the scan-engine acceptance cells (incl. the sharded
+# mode on the forced host-device mesh and the async overlap cell), the
+# autotuner grid, and the columnar-ingest cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
-         bench_columnar_ingest]
+         bench_scan_async, bench_autotune, bench_columnar_ingest]
 
 
 def main() -> None:
@@ -590,9 +839,11 @@ def main() -> None:
     benches = SMOKE if args.smoke else ALL
     if args.smoke:
         args.quick = True
+    # --only accepts "|"- or ","-separated name fragments
+    wanted = [w for w in args.only.replace(",", "|").split("|") if w]
     print("name,us_per_call,derived")
     for bench in benches:
-        if args.only and args.only not in bench.__name__:
+        if wanted and not any(w in bench.__name__ for w in wanted):
             continue
         try:
             bench(quick=args.quick)

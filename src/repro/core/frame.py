@@ -21,7 +21,12 @@ import jax.numpy as jnp
 class RawWindow(NamedTuple):
     """Raw samples collected in one window. Shapes (E, S, M)."""
     values: jax.Array      # float32
-    timestamps: jax.Array  # float32 seconds (absolute)
+    # float32 seconds in the WINDOW's frame: the system stages offsets from
+    # the window start (rebased in float64 before the cast, so sub-second
+    # deltas stay exact on long horizons) and passes window_start=0; any
+    # frame works as long as window_start shares it, since all in-window
+    # tick math is shift-invariant
+    timestamps: jax.Array
     valid: jax.Array       # bool — padding / lost samples are False
 
     @property

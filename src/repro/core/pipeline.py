@@ -28,6 +28,28 @@ All mesh/shard_map spellings route through ``repro.compat`` (JAX 0.4.x ..
 
 State is a single pytree carried tick-to-tick (gap-fill memory, anomaly
 stats, normalizer stats) — checkpointable alongside model params.
+
+Time convention (long-horizon float32 safety): device-visible timestamps
+are WINDOW-RELATIVE offsets. The host (``Accumulator.close_windows(...,
+rebase=True)``) subtracts each window's start from the raw sample
+timestamps in float64 *before* the float32 cast, and the system passes
+``window_start = 0`` for every window — so sub-second deltas stay exact no
+matter how far the absolute stream clock has advanced (absolute float32
+seconds quantize to >=1s past t~2^24). Two pieces of absolute time survive:
+
+  * the seasonal tick-of-day slot is computed with exact integer arithmetic
+    from ``state.tick_index`` and the static ``PipelineConfig.tick0``
+    offset (windows are consecutive by construction, so the absolute tick
+    position is ``tick0 + tick_index * n_ticks``);
+  * the ``prev_value``/``prev_ts`` carry is stored in the frame of the
+    window that produced it, and each tick re-expresses it in the current
+    window's frame by subtracting one window length (again: consecutive
+    windows by construction).
+
+Callers that drive ``tick``/``run_many`` directly may still pass absolute
+starts with absolute raw timestamps — every in-window comparison is
+shift-invariant — but the ``interp_streams`` cross-window bridge and the
+seasonal slots assume the consecutive-window convention above.
 """
 from __future__ import annotations
 
@@ -81,6 +103,11 @@ class PipelineConfig:
     # through the Pallas kernels in repro.kernels.{locf,window_agg}
     # (interpret mode off-TPU); False keeps the pure-XLA paths
     use_pallas: bool = False
+    # absolute tick position of the stream origin (round(t0 / tick_s)):
+    # seasonal tick-of-day slots are computed exactly as
+    # (tick0 + tick_index * n_ticks + tick) mod seasonal_slots, so they
+    # survive window-relative timestamps and arbitrarily long horizons
+    tick0: int = 0
 
     def weights(self):
         if self.combine_weights is None:
@@ -113,8 +140,11 @@ def init_state(cfg: PipelineConfig) -> PipelineState:
 def stage_harmonize(cfg: PipelineConfig, state, raw: RawWindow, window_start):
     ticks = hz.tick_grid(window_start, cfg.tick_s, cfg.n_ticks)
     if cfg.interp_streams:
-        v, obs = hz.harmonize_interp(raw, ticks, prev_value=state.prev_value,
-                                     prev_ts=state.prev_ts)
+        # the carry is stored in the PREVIOUS window's time frame; windows
+        # are consecutive, so one window length re-expresses it here
+        v, obs = hz.harmonize_interp(
+            raw, ticks, prev_value=state.prev_value,
+            prev_ts=state.prev_ts - cfg.n_ticks * cfg.tick_s)
     elif cfg.harmonize_method == "segment":
         v, obs = hz.harmonize_segment(raw, ticks, cfg.tick_s, cfg.agg)
     else:
@@ -131,7 +161,19 @@ def stage_anomaly(cfg: PipelineConfig, state, v, obs):
 
 
 def stage_gapfill(cfg: PipelineConfig, state, v, obs, ticks):
-    tod = jnp.mod((ticks / cfg.tick_s).astype(jnp.int32), cfg.seasonal_slots)
+    # Exact integer tick-of-day. The float form mod((ticks/tick_s), slots)
+    # quantizes once absolute float32 ticks pass ~2^24 s and loses the
+    # absolute phase entirely under window-relative timestamps. Windows are
+    # consecutive, so tick t of the current window sits at absolute tick
+    # position tick0 + tick_index*n_ticks + 1 + t; every term is reduced
+    # mod seasonal_slots before the multiply so int32 stays exact on any
+    # horizon.
+    E, T = v.shape[0], v.shape[-1]
+    slots = cfg.seasonal_slots
+    base = (cfg.tick0 % slots
+            + (state.tick_index % slots) * (cfg.n_ticks % slots))
+    tod = jnp.mod(base + 1 + jnp.arange(T, dtype=jnp.int32), slots)
+    tod = jnp.broadcast_to(tod[None, :], (E, T))
     return gf.gap_fill(v, obs, state.gapfill, ticks, cfg.gap_strategy,
                        tick_of_day=tod, use_pallas=cfg.use_pallas)
 
@@ -178,7 +220,10 @@ def tick(cfg: PipelineConfig, state: PipelineState, raw: RawWindow,
     new_state = PipelineState(
         gapfill=new_gap, anomaly=new_anom, norm=new_norm,
         prev_value=jnp.where(has, last_v, state.prev_value),
-        prev_ts=jnp.where(has, last_ts, state.prev_ts),
+        # no observation this window: re-express the old carry in this
+        # window's frame so it keeps receding one window length per tick
+        prev_ts=jnp.where(has, last_ts,
+                          state.prev_ts - cfg.n_ticks * cfg.tick_s),
         tick_index=state.tick_index + 1,
     )
     frame = TickFrame(v, obs, filled, replaced)
@@ -314,7 +359,9 @@ class PerceptaPipeline:
         new_state = PipelineState(
             gapfill=new_gap, anomaly=new_anom, norm=new_norm,
             prev_value=jnp.where(has, last_v, state.prev_value),
-            prev_ts=jnp.where(has, last_ts, state.prev_ts),
+            prev_ts=jnp.where(has, last_ts,
+                              state.prev_ts
+                              - self.cfg.n_ticks * self.cfg.tick_s),
             tick_index=state.tick_index + 1,
         )
         return new_state, features, TickFrame(v, obs, filled, replaced)

@@ -97,13 +97,13 @@ class Accumulator:
         return self._chunks[0]
 
     # --- window close ---------------------------------------------------------
-    def close_window(self, t_start: float, t_end: float):
+    def close_window(self, t_start: float, t_end: float, rebase: bool = False):
         """Build the padded raw-window arrays for [t_start, t_end) and retain
         newer records for later windows."""
-        v, ts, m = self.close_windows([(t_start, t_end)])
+        v, ts, m = self.close_windows([(t_start, t_end)], rebase=rebase)
         return v[0], ts[0], m[0]
 
-    def close_windows(self, bounds):
+    def close_windows(self, bounds, rebase: bool = False):
         """Close K consecutive windows into stacked (K, S, M) arrays.
 
         ``bounds`` is a chronologically ordered sequence of (t_start, t_end)
@@ -115,6 +115,16 @@ class Accumulator:
         each (window, stream) group by timestamp with a stable lexsort
         (arrival order on ties), trims overflow from the oldest side, and
         scatters values/timestamps/validity in one shot.
+
+        ``rebase=True`` emits WINDOW-RELATIVE timestamps: each record's ts
+        has its window's ``t_start`` subtracted in float64 *before* the
+        float32 cast, so sub-second deltas stay exact on arbitrarily long
+        horizons (absolute float32 seconds quantize to >=1s past t~2^24,
+        ~194 days of stream time — minutes of wall time at high speedup).
+        This is the device-staging form the scan/fused system modes consume
+        (the pipeline receives ``window_start = 0``); all bucketing /
+        ordering / validity decisions are made on the float64 absolute
+        columns either way, so ``rebase`` changes only the emitted frame.
         """
         K, S, M = len(bounds), len(self.streams), self.max_samples
         values = np.zeros((K, S, M), np.float32)
@@ -152,6 +162,7 @@ class Accumulator:
         slot = (pos - drop[group])[keep]
         kb, sb, tk, vk = bucket[keep], sid[keep], ts[keep], vs[keep]
         values[kb, sb, slot] = vk.astype(np.float32)
-        ts_out[kb, sb, slot] = tk.astype(np.float32)
+        tk_out = tk - starts[kb] if rebase else tk       # float64 subtract
+        ts_out[kb, sb, slot] = tk_out.astype(np.float32)
         valid[kb, sb, slot] = tk >= starts[kb]
         return values, ts_out, valid

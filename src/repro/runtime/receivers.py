@@ -42,8 +42,11 @@ class SimulatedDevice:
     seed: int = 0
 
     def readings(self, t_start: float, t_end: float, env_seed: int = 0):
-        """Deterministic readings in [t_start, t_end) for reproducibility."""
-        rng = random.Random((self.seed * 7919 + env_seed) ^ 0x5EED)
+        """Deterministic readings in [t_start, t_end) for reproducibility.
+
+        All randomness is derived per-sample from ``hash((stream, seed,
+        env_seed, k))`` so a poll's output depends only on the interval it
+        covers, never on how many polls preceded it."""
         n0 = int(math.floor(t_start / self.interval_s))
         out = []
         k = n0
@@ -97,21 +100,40 @@ class Receiver(threading.Thread):
         self._batch_subs: Dict[str, Callable] = {}
         self._stop = threading.Event()
         self._last_t: Dict[str, float] = {}
+        # serializes poll cycles: the run() thread and synchronous
+        # pump_receivers() callers both invoke poll_once, and an unguarded
+        # read-emit-advance of _last_t double-emits (both see the same t0)
+        # or drops (one overwrites the other's advance) readings
+        self._poll_lock = threading.Lock()
         self.stats = {"payloads": 0, "bytes": 0}
 
     def subscribe(self, env_id: str,
                   on_payload: Optional[Callable[[str, bytes], None]] = None,
                   on_batch: Optional[Callable] = None):
         assert on_payload is not None or on_batch is not None
-        self._subs[env_id] = on_payload
-        if on_batch is not None:
-            self._batch_subs[env_id] = on_batch
-        else:  # re-subscribing payload-only must drop a stale batch route
-            self._batch_subs.pop(env_id, None)
-        self._last_t[env_id] = self.clock()
+        with self._poll_lock:   # atomic wrt a concurrent poll cycle
+            self._subs[env_id] = on_payload
+            if on_batch is not None:
+                self._batch_subs[env_id] = on_batch
+            else:  # re-subscribing payload-only must drop a stale batch route
+                self._batch_subs.pop(env_id, None)
+            # first subscription starts the poll horizon NOW; a re-subscribe
+            # keeps it, so any interval skipped while the subscription was
+            # half-installed is delivered to the new callback instead of
+            # silently dropped (max_backlog_s still bounds staleness)
+            self._last_t.setdefault(env_id, self.clock())
 
     def poll_once(self):
-        """One poll cycle: emit all new readings per environment."""
+        """One poll cycle: emit all new readings per environment.
+
+        The whole cycle holds the receiver's poll lock, so concurrent
+        ``start()``-thread polls and synchronous ``pump_receivers()`` calls
+        interleave as atomic cycles over disjoint [t0, now) intervals —
+        every reading is emitted exactly once."""
+        with self._poll_lock:
+            self._poll_cycle()
+
+    def _poll_cycle(self):
         now = self.clock()
         for env_id, cb in list(self._subs.items()):
             t0 = max(self._last_t[env_id], now - self.max_backlog_s)
@@ -129,6 +151,11 @@ class Receiver(threading.Thread):
                     self.stats["payloads"] += len(readings)
                     self.stats["bytes"] += 16 * len(readings)
                     cb_batch(env_id, self.device.stream, ts, vs)
+            elif cb is None:
+                # a half-installed subscription (e.g. a batch re-subscribe
+                # that lost its route): keep _last_t so nothing is skipped
+                # once a real callback lands, and never call None
+                continue
             else:
                 for ts, v in readings:
                     payload = self.encode(self.device.stream, ts, v)

@@ -27,6 +27,29 @@ axis, per-env state rows and batch rows split across devices; see
 recipe: ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before JAX
 initializes.
 
+``mode="scan_async"`` (and ``"scan_async_sharded"``, which composes with
+the env-sharded dispatch) pipelines host ingest against device compute: a
+``runtime.prefetch.WindowPrefetcher`` pump thread assembles window batch
+j+1 (clock advance -> receiver poll -> queue drain -> ``close_windows``)
+while batch j executes on device via JAX async dispatch, and the Manager
+blocks only at result consumption. The pump performs exactly the
+clock-advance/poll/drain sequence the synchronous loop would at the same
+window boundaries (the deterministic batch-epoch handoff), so outputs are
+bit-identical to ``scan`` by construction.
+
+``scan_k="auto"`` runs ``core.autotune.tune_scan_params`` at construction:
+a short measured grid over windows-per-dispatch x env-mesh split picks the
+windows/s-optimal configuration for this host/device/shape (result kept on
+``self.tuned``).
+
+Device-visible time is WINDOW-RELATIVE (long-horizon float32 safety): the
+Accumulator subtracts each window's start in float64 before the float32
+cast and every pipeline dispatch receives ``window_start = 0``; absolute
+float32 seconds would quantize sub-second deltas past t~2^24 s (~194 days
+of stream time — minutes of wall time at high ``speedup``). The seasonal
+tick-of-day phase survives via the exact integer ``PipelineConfig.tick0``
+offset derived from ``t0``.
+
 ``ingest="columnar"`` (the default) moves record flow onto the
 structure-of-arrays fast path: Receivers hand whole polls to
 ``Translator.translate_batch`` which publishes one ``RecordBatch`` per
@@ -42,6 +65,7 @@ higher-fidelity one.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -55,10 +79,17 @@ from repro.core.frame import make_raw_window
 from repro.runtime.accumulator import Accumulator
 from repro.runtime.forwarder import ForwarderHub
 from repro.runtime.predictor import Predictor
+from repro.runtime.prefetch import WindowPrefetcher
 from repro.runtime.queues import QueueBroker
 from repro.runtime.receivers import Receiver, SimulatedDevice
 from repro.runtime.records import RecordBatch, count_records
 from repro.runtime.translator import Translator
+
+# Manager-loop mode -> device-pipeline mode: the async modes reuse the scan
+# engines and differ only in how the Manager overlaps host assembly
+_PIPELINE_MODE = {"scan_async": "scan", "scan_async_sharded": "scan_sharded"}
+_SCAN_MODES = ("scan", "scan_sharded", "scan_async", "scan_async_sharded")
+_ASYNC_MODES = ("scan_async", "scan_async_sharded")
 
 
 @dataclass
@@ -75,7 +106,8 @@ class PerceptaSystem:
                  forwarders: Optional[ForwarderHub] = None, db=None,
                  mode: str = "fused", speedup: float = 60.0,
                  t0: float = 0.0, manual_time: bool = False,
-                 scan_k: int = 8, ingest: str = "columnar"):
+                 scan_k=8, ingest: str = "columnar",
+                 autotune: Optional[dict] = None):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -85,15 +117,45 @@ class PerceptaSystem:
         assert pipeline_cfg.n_streams == len(sources)
         self.env_ids = list(env_ids)
         self.sources = list(sources)
+        # bake the absolute tick origin in (exact integer seasonal phase
+        # under window-relative device timestamps; see core.pipeline)
+        pipeline_cfg = dataclasses.replace(
+            pipeline_cfg, tick0=int(round(t0 / pipeline_cfg.tick_s)))
         self.cfg = pipeline_cfg
         self.mode = mode
+        pipe_mode = _PIPELINE_MODE.get(mode, mode)
+
+        # scan_k="auto": short measured calibration grid over K x mesh split
+        self.tuned = None
+        mesh = None
+        if scan_k == "auto":
+            from repro.core.autotune import tune_scan_params
+            from repro.distribution import sharding as shard_lib
+            kw = dict(autotune or {})
+            if pipe_mode != "scan_sharded":
+                # mesh splits only apply to the sharded dispatch
+                kw.setdefault("device_counts", [1])
+            self.tuned = tune_scan_params(pipeline_cfg, **kw)
+            scan_k = self.tuned.scan_k
+            if pipe_mode == "scan_sharded":
+                # honor the measured split even when it is 1 device (the
+                # mesh then degenerates to plain scan); leaving mesh=None
+                # would silently shard over ALL devices instead
+                mesh = shard_lib.env_mesh(
+                    pipeline_cfg.n_envs,
+                    devices=jax.devices()[:max(1, self.tuned.mesh_devices)])
         self.scan_k = max(1, int(scan_k))
         assert ingest in ("columnar", "records"), ingest
         self.ingest = ingest
+        # async modes must NOT donate: dispatching with a donated input that
+        # is still being computed blocks the dispatch (and the pump thread
+        # behind it), serializing the very batches the prefetcher overlaps.
+        # Double-buffering two state pytrees is the async design anyway.
         self.pipeline = PerceptaPipeline(
-            pipeline_cfg, mode=mode,
-            donate=mode in ("scan", "scan_sharded"))
+            pipeline_cfg, mode=pipe_mode,
+            donate=mode in ("scan", "scan_sharded"), mesh=mesh)
         self.state = self.pipeline.init_state()
+        self._prefetcher: Optional[WindowPrefetcher] = None
         self.predictor = predictor
         self.forwarders = forwarders
         self.db = db
@@ -157,6 +219,8 @@ class PerceptaSystem:
     def stop(self):
         for r in self.receivers:
             r.stop()
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
 
     # --- synchronous operation (benchmarks / tests) ---------------------------
     def pump_receivers(self):
@@ -178,13 +242,17 @@ class PerceptaSystem:
         ts = np.zeros((E, S, M), np.float32)
         valid = np.zeros((E, S, M), bool)
         for i, env in enumerate(self.env_ids):
-            v, t, m = self.accumulators[env].close_window(t_start, t_end)
+            v, t, m = self.accumulators[env].close_window(t_start, t_end,
+                                                          rebase=True)
             values[i], ts[i], valid[i] = v, t, m
 
         t_proc0 = time.time()
         raw = make_raw_window(values, ts, valid)
+        # window-relative time: timestamps were rebased to this window's
+        # start, so the device sees window_start = 0 (float32-exact on any
+        # horizon); absolute time stays host-side (t_end below)
         self.state, feats, frame = self.pipeline.run_tick(
-            self.state, raw, jnp.full((E,), t_start, jnp.float32))
+            self.state, raw, jnp.zeros((E,), jnp.float32))
         actions, rewards, per_term = self.predictor.on_tick(
             feats.features, t_end, raw=feats.raw)
         latency = time.time() - t_proc0
@@ -248,33 +316,51 @@ class PerceptaSystem:
         ts = np.zeros((K, E, S, M), np.float32)
         valid = np.zeros((K, E, S, M), bool)
         for i, env in enumerate(self.env_ids):
-            v, t, m = self.accumulators[env].close_windows(bounds)
+            v, t, m = self.accumulators[env].close_windows(bounds,
+                                                           rebase=True)
             values[:, i], ts[:, i], valid[:, i] = v, t, m
         return make_raw_window(values, ts, valid), counts
 
     def run_windows_scan(self, k: int) -> List[dict]:
         """Process the next ``k`` windows with ONE device dispatch."""
-        E = self.cfg.n_envs
         bounds = [self.window_bounds(self.window_index + j) for j in range(k)]
         raw, counts = self.assemble_windows(bounds)
+        feats, frames, t_dispatch = self._dispatch_scan(raw, k)
+        return self._consume_scan(bounds, counts, feats, frames, t_dispatch)
 
-        t_proc0 = time.time()
-        starts = jnp.asarray(np.repeat([[b[0]] for b in bounds], E, axis=1),
-                             jnp.float32)
+    def _dispatch_scan(self, raw, k: int):
+        """Launch ONE ``run_many`` over a staged K-window batch (no block:
+        JAX async dispatch returns futures; consumption blocks)."""
+        t_dispatch = time.time()
+        # window-relative time: each window's samples were rebased to its
+        # own start by close_windows, so every scan step sees start = 0
+        starts = jnp.zeros((k, self.cfg.n_envs), jnp.float32)
         self.state, feats, frames = self.pipeline.run_many(
             self.state, raw, starts)
+        return feats, frames, t_dispatch
+
+    def _consume_scan(self, bounds, counts, feats, frames,
+                      t_dispatch) -> List[dict]:
+        """Block on a dispatched batch and run the per-window host side
+        (Predictor, Forwarders, DB, metrics) in window order."""
         jax.block_until_ready(feats.features)
-        batch_latency = time.time() - t_proc0
+        batch_latency = time.time() - t_dispatch
+        k = len(bounds)
 
         out = []
+        # one batch-wide host transfer per leaf; the per-window loop then
+        # slices numpy — per-window DEVICE slicing (feats.features[j]) costs
+        # two extra device dispatches per window and, in async mode, queues
+        # them behind the next batch's scan
         feat_np = np.asarray(feats.features)
+        raw_np = np.asarray(feats.raw)
         obs_np = np.asarray(frames.observed)
         fill_np = np.asarray(frames.filled)
         anom_np = np.asarray(frames.anomalous)
         for j, (t_start, t_end) in enumerate(bounds):
             t_host0 = time.time()
             actions, rewards, per_term = self.predictor.on_tick(
-                feats.features[j], t_end, raw=feats.raw[j])
+                feat_np[j], t_end, raw=raw_np[j])
             if self.forwarders is not None:
                 for i, env in enumerate(self.env_ids):
                     self.forwarders.dispatch(env, t_end, actions[i])
@@ -323,7 +409,9 @@ class PerceptaSystem:
                             self.state.norm)
 
     def run_windows(self, n: int, pump: bool = True) -> List[dict]:
-        if self.mode in ("scan", "scan_sharded"):
+        if self.mode in _ASYNC_MODES:
+            return self._run_windows_async(n, pump)
+        if self.mode in _SCAN_MODES:
             out: List[dict] = []
             while len(out) < n:
                 k = min(self.scan_k, n - len(out))
@@ -343,6 +431,51 @@ class PerceptaSystem:
                 self._advance_clock(self.window_bounds()[1])
                 self.pump_receivers()
             out.append(self.run_window())
+        return out
+
+    # --- pipelined (async) operation ------------------------------------------
+    def _assemble_for_prefetch(self, bounds, pump: bool):
+        """Pump-thread body: exactly the synchronous per-batch sequence
+        (clock advance -> receiver poll -> drain/close) at the same window
+        boundaries — the deterministic handoff that makes ``scan_async``
+        bit-identical to ``scan``."""
+        if pump:
+            self._advance_clock(bounds[-1][1])
+            self.pump_receivers()
+        return self.assemble_windows(bounds)
+
+    def _run_windows_async(self, n: int, pump: bool = True) -> List[dict]:
+        """Double-buffered Manager loop: while batch j runs on device, the
+        pump thread assembles batch j+1 and the host consumes batch j-1.
+
+        Batch boundaries (``min(scan_k, remaining)``) match the synchronous
+        scan loop exactly, so the drain epochs — and therefore the outputs —
+        are identical."""
+        if self._prefetcher is None:
+            self._prefetcher = WindowPrefetcher(self._assemble_for_prefetch)
+        plans, idx, left = [], self.window_index, n
+        while left > 0:
+            k = min(self.scan_k, left)
+            plans.append([self.window_bounds(idx + j) for j in range(k)])
+            idx, left = idx + k, left - k
+        for bounds in plans:
+            self._prefetcher.submit(bounds, pump=pump)
+
+        out: List[dict] = []
+        pending = None
+        for _ in plans:
+            batch = self._prefetcher.next_batch()
+            # consume j-1 BEFORE dispatching j: the Predictor's per-window
+            # steps are device computations too, and the single device
+            # executes its queue in order — dispatching batch j first would
+            # make window j-1's small steps wait behind batch j's big scan
+            # (a priority inversion that serializes the whole loop)
+            if pending is not None:
+                out.extend(self._consume_scan(*pending))
+            feats, frames, t_dispatch = self._dispatch_scan(
+                batch.raw, len(batch.bounds))
+            pending = (batch.bounds, batch.counts, feats, frames, t_dispatch)
+        out.extend(self._consume_scan(*pending))
         return out
 
     def stats(self) -> dict:

@@ -238,8 +238,71 @@ def test_batch_assembly_env_isolation():
 
 
 # --------------------------------------------------------------------------
-# Harmonize fast path: dense contraction == segment scatter == one-hot
+# Long horizons: window-relative device time keeps float32 exact at t~2^24
 # --------------------------------------------------------------------------
+
+T0_FAR = float(2 ** 24)     # ~194 days of stream time: absolute float32
+                            # seconds quantize to >=1s here
+
+
+def test_accumulator_rebase_preserves_subsecond_deltas(rng):
+    """Rebased staging emits float64-exact window offsets; the absolute
+    float32 cast it replaces collapses sub-second jitter at t~2^24."""
+    from repro.runtime.records import Record
+    offs = np.sort(rng.uniform(0.0, 100.0, 32))
+    win = [(T0_FAR, T0_FAR + 100.0)]
+    acc = Accumulator("e", ["s"], 64)
+    acc.ingest([Record("e", "s", T0_FAR + float(o), 1.0) for o in offs])
+    _, ts_rel, m = acc.close_windows(win, rebase=True)
+    got = ts_rel[0, 0, m[0, 0]]
+    assert np.array_equal(got, offs.astype(np.float32))
+    # the absolute form really does degrade (regression guard's premise):
+    acc2 = Accumulator("e", ["s"], 64)
+    acc2.ingest([Record("e", "s", T0_FAR + float(o), 1.0) for o in offs])
+    _, ts_abs, m2 = acc2.close_windows(win, rebase=False)
+    deltas = np.diff(ts_abs[0, 0, m2[0, 0]].astype(np.float64))
+    assert (deltas % 1.0 == 0.0).all()      # sub-second structure is gone
+
+
+@pytest.mark.parametrize("gap_strategy", ["locf", "linear", "ewma",
+                                          "seasonal"])
+@pytest.mark.parametrize("mode", ["fused", "scan"])
+def test_long_horizon_features_bit_identical_to_t0_zero(gap_strategy, mode,
+                                                        rng):
+    """The same relative record pattern streamed at t0=0 and t0=2^24 must
+    produce bit-identical features/frames/rewards (tick_s=64 and 16
+    seasonal slots make 2^24 a whole number of seasonal periods, so even
+    the absolute tick-of-day phase coincides)."""
+    from repro.runtime.records import Record
+    window_s = 8 * 64.0
+    offs = rng.uniform(0.0, 4 * window_s, 160)
+    vals = rng.normal(5, 2, 160)
+
+    def run(t0):
+        from repro.core.reward import energy_reward_spec
+        from repro.runtime.predictor import (ActionSpace, Predictor,
+                                             linear_policy)
+        srcs = [SourceSpec("m", "mqtt", SimulatedDevice("a", 60.0, seed=1)),
+                SourceSpec("p", "http", SimulatedDevice("b", 300.0, seed=2))]
+        cfg = PipelineConfig(n_envs=2, n_streams=2, n_ticks=8, tick_s=64.0,
+                             max_samples=32, seasonal_slots=16,
+                             gap_strategy=gap_strategy, k_sigma=3.0)
+        pred = Predictor(linear_policy(2, 2),
+                         energy_reward_spec(price_idx=1, grid_idx=0,
+                                            temp_idx=0),
+                         ActionSpace(np.array([-1., -1.]),
+                                     np.array([1., 1.])),
+                         2, cfg.n_features, replay_capacity=64)
+        sys_ = PerceptaSystem(["e0", "e1"], srcs, cfg, pred, t0=t0,
+                              manual_time=True, mode=mode, scan_k=2)
+        for env, stream in (("e0", "a"), ("e1", "b")):
+            for o, v in zip(offs, vals):
+                sys_.broker.publish(Record(env, stream, t0 + float(o),
+                                           float(v)))
+        return [{k: v for k, v in r.items() if k != "latency_s"}
+                for r in sys_.run_windows(4, pump=False)]
+
+    assert run(0.0) == run(T0_FAR)
 
 @pytest.mark.parametrize("agg", list(hz.AGGS))
 def test_harmonize_dense_matches_scatter(agg, rng, monkeypatch):
