@@ -1,8 +1,8 @@
 # Developer / CI entrypoints. `make test` is the tier-1 verify command from
 # ROADMAP.md; `make bench-smoke` is a ~2-minute benchmark pass covering the
 # five pipeline execution axes (modular / fused / scan / scan_sharded /
-# scan_async) plus the scan-engine, async-overlap, autotuner and
-# columnar-ingest acceptance cells. The sharded mode runs on a forced
+# scan_async) plus the scan-engine, async-overlap, batched-Predictor,
+# autotuner and columnar-ingest acceptance cells. The sharded mode runs on a forced
 # 8-host-device CPU mesh (--host-devices) so the shard_map path is
 # exercised in CI, not just on real multi-chip hardware; the async overlap
 # cell runs in its own subprocess (accelerator-emulating XLA flags, see
@@ -10,7 +10,7 @@
 # records/s per mode).
 PY ?= python
 
-.PHONY: test bench-smoke bench-pr2 bench-pr3 ci
+.PHONY: test bench-smoke bench-pr2 bench-pr3 bench-pr4 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -30,5 +30,12 @@ bench-pr3:
 	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
 		--only "scan_engine|scan_sharded|scan_async|autotune|columnar" \
 		--json BENCH_pr3.json
+
+# PR 4: the batched-Predictor-consume cells (identity + before/after host
+# share on the PR 3 overlap cell) next to the scan-engine trajectory cells
+bench-pr4:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|autotune|columnar" \
+		--json BENCH_pr4.json
 
 ci: test bench-smoke

@@ -39,6 +39,17 @@ def _row(name, us, derived=""):
                     "derived": derived})
 
 
+def _subprocess_env(xla_flags: str) -> dict:
+    """Environment for an acceptance-cell subprocess: fresh XLA flags plus
+    this repo's src/ ahead of any inherited PYTHONPATH entries."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = xla_flags
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    return env
+
+
 def _time(fn, n=5, warmup=2, best=False):
     """Mean (default) or best-of-n microseconds per call.
 
@@ -411,6 +422,10 @@ print(json.dumps({
     # full cores; ~1.3 = one physical core + SMT sibling)
     "host_parallel_factor": round(parallel_factor(), 2),
     "host_assembly_frac": round(A / (A + D + C), 2),
+    # total host-side share (assembly + consume) of scan wall — the part
+    # of the loop the device cannot hide; PR 4's batched Predictor consume
+    # attacks the C term (see bench_predictor_batch for before/after)
+    "host_share": round((A + C) / (A + D + C), 2),
     "scan_phase_ms": {"assemble": round(A / (N // K) * 1e3, 1),
                       "device": round(D / (N // K) * 1e3, 1),
                       "consume": round(C / (N // K) * 1e3, 1)},
@@ -457,11 +472,7 @@ def bench_scan_async(quick=False):
          f"bit_identical {ident} over {n} windows")
 
     # --- overlap cell (subprocess; see _ASYNC_CELL_SCRIPT header) ---------
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_cpu_multi_thread_eigen=false"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(os.path.dirname(__file__), "..", "src")]
-        + env.get("PYTHONPATH", "").split(os.pathsep))
+    env = _subprocess_env("--xla_cpu_multi_thread_eigen=false")
     script = _ASYNC_CELL_SCRIPT.replace("__QUICK__", str(bool(quick)))
     out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=1200)
@@ -481,9 +492,193 @@ def bench_scan_async(quick=False):
          f"median {cell['speedup_median_of_pairs']:.2f}x, ideal "
          f"{cell['ideal_speedup']:.2f}x, host parallel factor "
          f"{cell['host_parallel_factor']:.2f}) | "
-         f"host assembly {cell['host_assembly_frac']:.0%} of scan wall "
+         f"host assembly {cell['host_assembly_frac']:.0%} / host total "
+         f"{cell['host_share']:.0%} of scan wall "
          f"(A {ph['assemble']:.0f} / D {ph['device']:.0f} / "
          f"C {ph['consume']:.0f} ms/batch)")
+
+
+# --------------------------------------------------------------------------
+# Table 2e — batched Predictor consume: on_windows vs per-window on_tick
+# --------------------------------------------------------------------------
+
+# Before/after phase decomposition of the PR 3 overlap cell under the same
+# accelerator-emulating XLA flag: twin scan systems consume identical
+# batches, one through the per-window on_tick reference loop, one through
+# the single-dispatch on_windows scan. Reported: A/D/C phase times, the
+# host share (A+C)/(A+D+C) both ways, and bit-identity of every output row
+# + the replay ring across the two consume paths.
+_PRED_BATCH_SCRIPT = """
+import json, time
+import numpy as np
+import jax
+from repro.core import PipelineConfig
+from repro.core.reward import energy_reward_spec
+from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+from repro.runtime.receivers import SimulatedDevice
+from repro.runtime.records import RecordBatch
+from repro.runtime.system import PerceptaSystem, SourceSpec
+
+E, S, K, M = 8, 8, 32, 64
+T, TICK_S, PER = 64, 15.0, 160
+
+def mk(batched):
+    srcs = [SourceSpec(f"s{i}", "mqtt",
+                       SimulatedDevice(f"st{i}", 60.0, base=3.0, seed=i))
+            for i in range(S)]
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=TICK_S,
+                         max_samples=M, harmonize_method="onehot",
+                         gap_strategy="linear")
+    pred = Predictor(linear_policy(S, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     E, cfg.n_features, replay_capacity=64)
+    return PerceptaSystem([f"b{i}" for i in range(E)], srcs, cfg, pred,
+                          speedup=1e9, manual_time=True, mode="scan",
+                          scan_k=K, batched_consume=batched)
+
+def publish(s, n_windows, rng):
+    w = s.window_s
+    n = n_windows * PER
+    t0 = s.window_bounds(s.window_index)[0]
+    for env in s.env_ids:
+        for src in s.sources:
+            ts = np.sort(rng.uniform(t0, t0 + n_windows * w, n))
+            s.broker.publish(RecordBatch.from_columns(
+                env, src.device.stream, ts, rng.normal(5, 2, n)))
+
+QUICK = __QUICK__
+N = 64 if QUICK else 96
+REPS = 2 if QUICK else 3
+
+def measure(s, rows):
+    A = D = C = 0.0
+    for b in range(N // K):
+        bounds = [s.window_bounds(s.window_index + j) for j in range(K)]
+        t0 = time.time(); raw, counts = s.assemble_windows(bounds)
+        A += time.time() - t0
+        t0 = time.time()
+        feats, frames, td = s._dispatch_scan(raw, K)
+        jax.block_until_ready(feats.features)
+        D += time.time() - t0
+        t0 = time.time()
+        out = s._consume_scan(bounds, counts, feats, frames, td)
+        C += time.time() - t0
+        rows.extend({k: v for k, v in r.items() if k != "latency_s"}
+                    for r in out)
+    return A, D, C
+
+# Interleaved legs + pooled A/D: the assemble and dispatch phases run
+# IDENTICAL code on both twins (only the consume path differs), so their
+# best-of is taken across both twins' legs — shared-box drift between
+# sequentially-measured twins would otherwise pollute the share deltas.
+sys_by = {"perwindow": mk(False), "batched": mk(True)}
+rows_by = {}
+legs = {"perwindow": [], "batched": []}
+for s in sys_by.values():
+    s.run_windows(K, pump=False)                 # jit/cache warmup
+for rep in range(REPS):                          # identical publish seeds
+    for name, s in sys_by.items():
+        publish(s, N, np.random.RandomState(rep))
+        rows = []
+        legs[name].append(measure(s, rows))
+        rows_by[name] = rows
+A = min(a for ls in legs.values() for a, _, _ in ls)
+D = min(d for ls in legs.values() for _, d, _ in ls)
+res = {}
+for name, ls in legs.items():
+    C = min(c for _, _, c in ls)
+    tot = A + D + C
+    nb = N // K
+    res[name] = {
+        "phase_ms": {"assemble": round(A / nb * 1e3, 1),
+                     "device": round(D / nb * 1e3, 1),
+                     "consume": round(C / nb * 1e3, 1)},
+        "host_share": round((A + C) / tot, 3),
+        "host_assembly_frac": round(A / tot, 3),
+        "consume_frac": round(C / tot, 3),
+        "windows_per_s": round(N / tot, 1),
+    }
+
+ident = rows_by["perwindow"] == rows_by["batched"]
+pa, pb = sys_by["perwindow"].predictor, sys_by["batched"].predictor
+for x, y in zip(jax.tree.leaves(pa.replay), jax.tree.leaves(pb.replay)):
+    ident = ident and bool((np.asarray(x) == np.asarray(y)).all())
+ident = ident and pa.stats == pb.stats \
+    and bool((pa._replay_times == pb._replay_times).all())
+cpw = res["perwindow"]["phase_ms"]["consume"]
+cb = res["batched"]["phase_ms"]["consume"]
+print(json.dumps({
+    "bit_identical": bool(ident),
+    "perwindow": res["perwindow"],
+    "batched": res["batched"],
+    "consume_speedup": round(cpw / max(cb, 1e-9), 2),
+    "cell": {"K": K, "E": E, "S": S, "T": T, "M": M,
+             "records_per_stream_window": PER},
+}))
+"""
+
+
+def bench_predictor_batch(quick=False):
+    import subprocess
+
+    import jax
+
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.predictor import (ActionSpace, Predictor,
+                                         linear_policy)
+
+    # --- identity + dispatch-cost cell (in-process, exact) ----------------
+    E, F, K = 8, 8, 32
+
+    def mkp():
+        return Predictor(
+            linear_policy(F, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            E, F, replay_capacity=64)
+
+    rng = np.random.RandomState(0)
+    feats = rng.normal(0, 1, (K, E, F)).astype(np.float32)
+    raw = rng.normal(5, 2, (K, E, F)).astype(np.float32)
+    times = [60.0 * (j + 1) for j in range(K)]
+    a, b = mkp(), mkp()
+    seq = [a.on_tick(feats[j], times[j], raw=raw[j]) for j in range(K)]
+    act, rew, per = b.on_windows(feats, times, raw=raw)
+    ident = ((np.stack([s[0] for s in seq]) == act).all()
+             and (np.stack([s[1] for s in seq]) == rew).all()
+             and (np.stack([s[2] for s in seq]) == per).all()
+             and all(bool((np.asarray(x) == np.asarray(y)).all())
+                     for x, y in zip(jax.tree.leaves(a.replay),
+                                     jax.tree.leaves(b.replay))))
+    SUMMARY["predictor_batch_bit_identical"] = bool(ident)
+
+    n = 4 if quick else 8
+    t_pw = _time(lambda: [a.on_tick(feats[j], times[j], raw=raw[j])
+                          for j in range(K)], n=n, best=True)
+    t_b = _time(lambda: b.on_windows(feats, times, raw=raw), n=n, best=True)
+    SUMMARY["predictor_consume_speedup"] = round(t_pw / t_b, 2)
+    _row(f"predictor_batch_K{K}_E{E}", t_b / K,
+         f"on_windows {1e6 / (t_b / K):.0f} windows/s (1 dispatch) | "
+         f"Kx on_tick {t_pw / K:.0f} us/win | speedup {t_pw / t_b:.2f}x | "
+         f"bit_identical {ident}")
+
+    # --- before/after on the PR 3 overlap cell (subprocess) ---------------
+    env = _subprocess_env("--xla_cpu_multi_thread_eigen=false")
+    script = _PRED_BATCH_SCRIPT.replace("__QUICK__", str(bool(quick)))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-2000:]
+    cell = json.loads(out.stdout.strip().splitlines()[-1])
+    SUMMARY["predictor_batch"] = cell
+    pw, bt = cell["perwindow"], cell["batched"]
+    _row("predictor_batch_overlap_cell_K32_E8_S8_T64",
+         1e6 / bt["windows_per_s"],
+         f"{bt['windows_per_s']:.0f} windows/s | consume "
+         f"{pw['phase_ms']['consume']:.1f} -> {bt['phase_ms']['consume']:.1f}"
+         f" ms/batch ({cell['consume_speedup']:.1f}x) | host share "
+         f"{pw['host_share']:.0%} -> {bt['host_share']:.0%} of scan wall | "
+         f"bit_identical {cell['bit_identical']}")
 
 
 def bench_autotune(quick=False):
@@ -803,15 +998,17 @@ def bench_roofline(quick=False):
 
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
        bench_scan_engine, bench_scan_sharded, bench_scan_async,
-       bench_autotune, bench_stage_breakdown, bench_deployment,
-       bench_serving, bench_kernels, bench_roofline]
+       bench_predictor_batch, bench_autotune, bench_stage_breakdown,
+       bench_deployment, bench_serving, bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
 # tick-latency axes, the scan-engine acceptance cells (incl. the sharded
-# mode on the forced host-device mesh and the async overlap cell), the
-# autotuner grid, and the columnar-ingest cell
+# mode on the forced host-device mesh, the async overlap cell and the
+# batched-Predictor identity cell), the autotuner grid, and the
+# columnar-ingest cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
-         bench_scan_async, bench_autotune, bench_columnar_ingest]
+         bench_scan_async, bench_predictor_batch, bench_autotune,
+         bench_columnar_ingest]
 
 
 def main() -> None:

@@ -18,7 +18,17 @@ device it degenerates to ``scan``; force a multi-device CPU mesh with
 ``--mode scan_async`` to overlap host ingest with device compute (a pump
 thread assembles window batch j+1 while batch j executes — bit-identical
 outputs, higher sustained windows/s when ingest is a meaningful fraction
-of the loop). Ingest is columnar (RecordBatch) throughout.
+of the loop). Ingest is columnar (RecordBatch) throughout, and in the scan
+modes the Predictor consumes each K-window stack in ONE jitted dispatch
+(``Predictor.on_windows``) instead of one ``_step`` per window.
+
+Accessor rules in scan modes: hold pipeline state only through the
+donation-safe ``system.snapshot_state()`` / ``snapshot_norm()`` copies,
+and read replay time through ``pred.export_replay(env_ids, salt)`` — the
+device ring stores exact int32 tick indices (float32 absolute seconds
+would collapse consecutive window ends past t~2^24 s); the export
+reconstructs exact float64 absolute times from the Predictor's host-side
+mirror.
 
 Run: PYTHONPATH=src python examples/serve_edge.py \
          [--mode scan|scan_async|scan_sharded|fused]
@@ -118,8 +128,14 @@ for w in range(0, 6, batch):
 dt = time.time() - t_start
 print(f"\nforwarded decisions: "
       f"{ {f.dest_id: f.stats['sent'] for f in hub.forwarders} }")
+# replay accessor rule: device-side times are exact int32 tick indices;
+# export_replay re-attaches exact float64 absolute times (host mirror)
+# and rolls the ring chronological — never read replay.tick_idx as seconds
+dataset = pred.export_replay(system.env_ids, salt="opeva")
 print(f"DB rows (anonymized): {db.stats['rows']}  "
-      f"replay transitions: {int(pred.replay.size())}")
+      f"replay transitions: {int(pred.replay.size())}  "
+      f"export t=[{dataset['times'][0, 0]:.0f}"
+      f"..{dataset['times'][0, -1]:.0f}]s")
 print(f"ad-hoc serving: {tok_count} tokens via continuous batching "
       f"({engine.stats['ticks']} engine ticks)")
 print(f"wall time {dt:.1f}s for 48 stream-minutes x {E} buildings + serving")

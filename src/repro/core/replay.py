@@ -4,9 +4,18 @@
 anonymizing it and delivering it to the node responsible for training."
 
 The buffer is a fixed-capacity ring over (obs, action, reward, next_obs,
-tick_time) batched across environments, living on device (shardable over the
+tick_idx) batched across environments, living on device (shardable over the
 env dim). ``anonymize`` applies a salted hash to environment identities so
 exported datasets can't be joined back to buildings.
+
+Long-horizon time rule: the device-side per-transition time is the EXACT
+int32 predictor tick index, never a float32 absolute timestamp — absolute
+float32 seconds quantize to >=1s past t~2^24 s (~194 days of stream time),
+which collapses consecutive window ends into the same stored value (the
+same failure class the scan engine's window-relative rebase fixed for raw
+samples). The absolute float64 wall time of each tick lives host-side (the
+``Predictor`` keeps a slot-aligned float64 mirror) and is reconstructed at
+export time by :func:`export_for_training`.
 """
 from __future__ import annotations
 
@@ -22,7 +31,7 @@ class ReplayBuffer(NamedTuple):
     actions: jax.Array    # (E, C, A)
     rewards: jax.Array    # (E, C)
     next_obs: jax.Array   # (E, C, F)
-    times: jax.Array      # (E, C)
+    tick_idx: jax.Array   # (E, C) int32 — exact predictor tick index
     cursor: jax.Array     # () int32 — total ticks written (ring position)
 
     @property
@@ -39,36 +48,71 @@ def init(E, capacity, n_features, n_actions) -> ReplayBuffer:
         actions=jnp.zeros((E, capacity, n_actions), jnp.float32),
         rewards=jnp.zeros((E, capacity), jnp.float32),
         next_obs=jnp.zeros((E, capacity, n_features), jnp.float32),
-        times=jnp.zeros((E, capacity), jnp.float32),
+        tick_idx=jnp.zeros((E, capacity), jnp.int32),
         cursor=jnp.zeros((), jnp.int32),
     )
 
 
-def add(buf: ReplayBuffer, obs, actions, rewards, next_obs, times) -> ReplayBuffer:
-    """Write one tick for every env at the ring position (jit-safe)."""
+def add(buf: ReplayBuffer, obs, actions, rewards, next_obs,
+        tick_idx) -> ReplayBuffer:
+    """Write one tick for every env at the ring position (jit-safe).
+
+    ``tick_idx`` is the integer tick index (scalar or (E,)), stored exactly
+    as int32 — see the module docstring's long-horizon time rule.
+    """
     i = jnp.mod(buf.cursor, buf.capacity)
-    upd = lambda b, x: b.at[:, i].set(x.astype(b.dtype))
+    upd = lambda b, x: b.at[:, i].set(jnp.asarray(x).astype(b.dtype))
     return ReplayBuffer(
         obs=upd(buf.obs, obs),
         actions=upd(buf.actions, actions),
         rewards=upd(buf.rewards, rewards),
         next_obs=upd(buf.next_obs, next_obs),
-        times=upd(buf.times, times),
+        tick_idx=upd(buf.tick_idx, tick_idx),
         cursor=buf.cursor + 1,
     )
 
 
+def add_many(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
+             mask=None) -> ReplayBuffer:
+    """Write K stacked ticks in ONE jit-safe call (leading K axis on every
+    argument; ``tick_idx`` is (K,)).
+
+    Implemented as a ``lax.scan`` carrying the buffer over :func:`add`, so
+    the ring semantics — write order, cursor advance, wraparound, even
+    K > capacity overwrites — are bit-identical to K sequential ``add``
+    calls. ``mask`` (K,) bool skips rows without advancing the cursor
+    (scan-safe replacement for the host-side have-prev ``cond``).
+    """
+    K = obs.shape[0]
+    if mask is None:
+        mask = jnp.ones((K,), jnp.bool_)
+
+    def body(b, xs):
+        m, o, a, r, n, t = xs
+        return jax.lax.cond(
+            m, lambda bb: add(bb, o, a, r, n, t), lambda bb: bb, b), None
+
+    out, _ = jax.lax.scan(body, buf,
+                          (mask, obs, actions, rewards, next_obs, tick_idx))
+    return out
+
+
 def sample(buf: ReplayBuffer, rng, batch: int):
-    """Uniform sample of (env, slot) transitions for retraining."""
+    """Uniform sample of (env, slot) transitions for retraining (host-side
+    entry point: raises on an empty buffer instead of fabricating all-zero
+    transitions from the untouched ring storage)."""
+    if int(buf.cursor) == 0:
+        raise ValueError("cannot sample from an empty ReplayBuffer "
+                         "(no transitions have been added)")
     E = buf.obs.shape[0]
-    n = jnp.maximum(buf.size(), 1)
+    n = buf.size()
     ke, ks = jax.random.split(rng)
     es = jax.random.randint(ke, (batch,), 0, E)
     ss = jax.random.randint(ks, (batch,), 0, n)
     take = lambda x: x[es, ss]
     return {"obs": take(buf.obs), "actions": take(buf.actions),
             "rewards": take(buf.rewards), "next_obs": take(buf.next_obs),
-            "times": take(buf.times)}
+            "tick_idx": take(buf.tick_idx)}
 
 
 def anonymize_env_ids(env_ids, salt: str) -> list:
@@ -80,15 +124,51 @@ def anonymize_env_ids(env_ids, salt: str) -> list:
     return out
 
 
-def export_for_training(buf: ReplayBuffer, env_ids, salt: str) -> dict:
-    """Materialize an anonymized dataset dict (host-side)."""
+def chronological_order(buf: ReplayBuffer):
+    """Slot permutation putting the ring's live rows in write order.
+
+    Until the ring wraps (``cursor <= capacity``) slots 0..size-1 already
+    are chronological; past that the oldest live row sits at
+    ``cursor % capacity`` and the raw slot order is scrambled — exporting
+    it as-is interleaves new and old transitions, corrupting any
+    order-sensitive consumer (n-step returns, episode reconstruction).
+    """
     import numpy as np
-    n = int(buf.size())
+    c = int(buf.cursor)
+    C = buf.capacity
+    if c > C:
+        head = c % C
+        return np.concatenate([np.arange(head, C), np.arange(head)])
+    return np.arange(c)
+
+
+def export_for_training(buf: ReplayBuffer, env_ids, salt: str,
+                        slot_times=None) -> dict:
+    """Materialize an anonymized dataset dict (host-side), rows rolled to
+    chronological order even after the ring has wrapped.
+
+    ``slot_times`` is the optional (capacity,) float64 host-side mirror of
+    absolute tick times (``Predictor._replay_times``); when given, the
+    exported ``times`` column is the exact float64 absolute time of every
+    transition. Without it, ``times`` falls back to the float64 value of
+    the stored integer tick index — still exact and strictly ordered on
+    any horizon, just not in wall seconds.
+    """
+    import numpy as np
+    order = chronological_order(buf)
+    take = lambda x: np.asarray(x)[:, order]
+    tick_idx = take(buf.tick_idx)
+    if slot_times is not None:
+        times = np.asarray(slot_times, np.float64)[order]
+        times = np.broadcast_to(times[None, :], tick_idx.shape).copy()
+    else:
+        times = tick_idx.astype(np.float64)
     return {
         "env_ids": anonymize_env_ids(env_ids, salt),
-        "obs": np.asarray(buf.obs[:, :n]),
-        "actions": np.asarray(buf.actions[:, :n]),
-        "rewards": np.asarray(buf.rewards[:, :n]),
-        "next_obs": np.asarray(buf.next_obs[:, :n]),
-        "times": np.asarray(buf.times[:, :n]),
+        "obs": take(buf.obs),
+        "actions": take(buf.actions),
+        "rewards": take(buf.rewards),
+        "next_obs": take(buf.next_obs),
+        "tick_idx": tick_idx,
+        "times": times,
     }

@@ -32,8 +32,14 @@ class RewardTerm:
     fn: Optional[Callable] = None # custom: fn(features, actions, prev_actions)->(E,)
 
     def evaluate(self, features, actions, prev_actions):
-        f = features[:, self.feature]
-        a = actions[:, self.action] if self.action is not None else 0.0
+        """Evaluate on (..., E, F)/(..., E, A) — trailing-axis indexing, so
+        a K-leading stack of windows evaluates in one call, elementwise
+        bit-identical to K per-window evaluations (the batched Predictor
+        consume relies on this). Built-in terms index the last axis
+        directly; ``custom`` fns keep their (E, F) contract and run
+        per-window under ``lax.map`` over any leading axes."""
+        f = features[..., self.feature]
+        a = actions[..., self.action] if self.action is not None else 0.0
         if self.kind == "linear":
             return self.weight * f
         if self.kind == "abs_error":
@@ -46,10 +52,18 @@ class RewardTerm:
         if self.kind == "threshold_bonus":
             return self.weight * (f > self.target).astype(jnp.float32)
         if self.kind == "action_smoothness":
-            pa = prev_actions[:, self.action]
-            return -self.weight * jnp.square(actions[:, self.action] - pa)
+            pa = prev_actions[..., self.action]
+            return -self.weight * jnp.square(actions[..., self.action] - pa)
         if self.kind == "custom":
-            return self.weight * self.fn(features, actions, prev_actions)
+            # per-window execution (lax.map = scan), never vmap: a custom
+            # fn with an inner contraction would become a batched op under
+            # vmap and could accumulate differently than K per-window
+            # calls, breaking the batched-consume bit-identity guarantee
+            def apply(f, a, p):
+                if f.ndim == 2:
+                    return self.fn(f, a, p)
+                return jax.lax.map(lambda xs: apply(*xs), (f, a, p))
+            return self.weight * apply(features, actions, prev_actions)
         raise ValueError(self.kind)
 
 
@@ -58,7 +72,12 @@ class RewardSpec:
     terms: tuple
 
     def compute(self, features, actions, prev_actions=None):
-        """features (E, F), actions (E, A) -> (total (E,), per_term (E, K))."""
+        """features (..., E, F), actions (..., E, A) ->
+        (total (..., E), per_term (..., E, n_terms)).
+
+        Leading batch axes (e.g. a K-window stack) are supported directly:
+        every term is elementwise over the leading dims, so the stacked
+        result is bit-identical to per-window calls."""
         if prev_actions is None:
             prev_actions = jnp.zeros_like(actions)
         per = jnp.stack([t.evaluate(features, actions, prev_actions)

@@ -2,8 +2,19 @@
 logged in a database, enabling future analysis and potential retraining."
 
 JSONL segments with atomic rotation; env identities are stored anonymized
-(salted hash) per the paper's anonymization requirement. A cursor (segment,
-offset) is exposed so the training node can consume exactly-once.
+(salted hash, pseudonyms cached) per the paper's anonymization requirement.
+A cursor (segment, offset) is exposed so the training node can consume
+exactly-once.
+
+Absolute times are float64 host values end-to-end here (the ``t`` column) —
+the device-side replay ring stores int32 tick indices instead (see
+``core.replay``); this log is where exact wall-clock time is preserved.
+
+Accounting rules: ``stats["segments"]`` counts segments CREATED by this
+instance (reopening an existing segment after ``close()`` or process
+restart does not re-count), and rotation is driven by an explicitly
+tracked byte total per segment — never ``tell()`` on the line-buffered
+text handle, whose cookie is not a byte count on text streams.
 """
 from __future__ import annotations
 
@@ -27,22 +38,48 @@ class LogDB:
         self._lock = threading.Lock()
         self._seg = self._latest_segment()
         self._fh = None
+        self._seg_bytes = 0
+        self._anon_cache: dict = {}
         self.stats = {"rows": 0, "bytes": 0, "segments": 0}
 
     def _latest_segment(self) -> int:
         segs = sorted(self.root.glob("seg-*.jsonl"))
         return int(segs[-1].stem.split("-")[1]) if segs else 0
 
+    def _anon(self, env_id: str) -> str:
+        p = self._anon_cache.get(env_id)
+        if p is None:
+            p = anonymize_env_ids([env_id], self.salt)[0]
+            self._anon_cache[env_id] = p
+        return p
+
     def _open(self):
         if self._fh is None:
             path = self.root / f"seg-{self._seg:06d}.jsonl"
+            fresh = not path.exists()
             self._fh = open(path, "a", buffering=1)
-            self.stats["segments"] += 1
+            # resume the byte count from disk when reopening an existing
+            # segment so rotation still triggers at the true size
+            self._seg_bytes = 0 if fresh else path.stat().st_size
+            if fresh:
+                self.stats["segments"] += 1
 
-    def append(self, env_id: str, tick_time: float, obs, action, reward,
-               extra: Optional[dict] = None):
+    def _write_locked(self, lines) -> None:
+        """Caller holds the lock: write rows, account bytes, rotate once."""
+        self._open()
+        self._fh.write("".join(l + "\n" for l in lines))
+        nb = sum(len(l) + 1 for l in lines)
+        self.stats["rows"] += len(lines)
+        self.stats["bytes"] += nb
+        self._seg_bytes += nb
+        if self._seg_bytes > self.rotate_bytes:
+            self._fh.close()
+            self._fh = None
+            self._seg += 1
+
+    def _row(self, env_id, tick_time, obs, action, reward, extra):
         row = {
-            "env": anonymize_env_ids([env_id], self.salt)[0],
+            "env": self._anon(env_id),
             "t": float(tick_time),
             "obs": [float(x) for x in obs],
             "action": [float(x) for x in action],
@@ -51,16 +88,27 @@ class LogDB:
         }
         if extra:
             row.update(extra)
-        line = json.dumps(row)
+        return json.dumps(row)
+
+    def append(self, env_id: str, tick_time: float, obs, action, reward,
+               extra: Optional[dict] = None):
+        line = self._row(env_id, tick_time, obs, action, reward, extra)
         with self._lock:
-            self._open()
-            self._fh.write(line + "\n")
-            self.stats["rows"] += 1
-            self.stats["bytes"] += len(line) + 1
-            if self._fh.tell() > self.rotate_bytes:
-                self._fh.close()
-                self._fh = None
-                self._seg += 1
+            self._write_locked([line])
+
+    def append_many(self, env_ids, tick_time: float, obs, actions, rewards,
+                    extra: Optional[dict] = None):
+        """One window across all envs in a single call: rows are encoded up
+        front, the lock is taken ONCE, and rotation is checked once per
+        batch (a segment may overshoot ``rotate_bytes`` by at most one
+        batch). This is the batched-consume path's DB write — the host loop
+        shrinks with the device loop."""
+        lines = [self._row(env_id, tick_time, o, a, r, extra)
+                 for env_id, o, a, r in zip(env_ids, obs, actions, rewards)]
+        if not lines:
+            return
+        with self._lock:
+            self._write_locked(lines)
 
     def read_from(self, segment: int = 0, offset: int = 0) -> Iterator[tuple]:
         """Yield (cursor, row) from the given cursor for retraining export."""

@@ -28,15 +28,32 @@ class Forwarder:
         self.stats = {"sent": 0, "bytes": 0}
         self._lock = threading.Lock()
 
-    def forward(self, env_id: str, tick_time: float, actions):
-        encode = CODECS[self.protocol][0]
-        for idx in self.action_indices:
-            payload = encode(f"{self.dest_id}/act{idx}", tick_time,
-                             float(actions[idx]))
-            with self._lock:
+    def _transmit_locked(self, payloads) -> None:
+        # ONE lock acquisition per call (not per action index): sent/bytes
+        # move together, so a pump-thread reader never observes a dispatch
+        # half-counted, and batch dispatch isn't serialized on lock churn
+        with self._lock:
+            for payload in payloads:
                 self._transmit(payload)
                 self.stats["sent"] += 1
                 self.stats["bytes"] += len(payload)
+
+    def forward(self, env_id: str, tick_time: float, actions):
+        encode = CODECS[self.protocol][0]
+        self._transmit_locked([
+            encode(f"{self.dest_id}/act{idx}", tick_time, float(actions[idx]))
+            for idx in self.action_indices])
+
+    def forward_window(self, tick_time: float, actions):
+        """Batch dispatch one window: ``actions`` is (E, A), payloads for
+        every (env, action index) are encoded up front in env-major order
+        (matching E sequential ``forward`` calls), then transmitted under
+        one lock acquisition. Like ``forward``, the wire topic carries only
+        dest/action identity — env attribution lives in the LogDB rows."""
+        encode = CODECS[self.protocol][0]
+        self._transmit_locked([
+            encode(f"{self.dest_id}/act{idx}", tick_time, float(a[idx]))
+            for a in actions for idx in self.action_indices])
 
 
 class ForwarderHub:
@@ -46,3 +63,9 @@ class ForwarderHub:
     def dispatch(self, env_id: str, tick_time: float, actions):
         for f in self.forwarders:
             f.forward(env_id, tick_time, actions)
+
+    def dispatch_window(self, tick_time: float, actions):
+        """One window across all envs (actions (E, A)); each forwarder's
+        sink sees the same env order as per-env ``dispatch`` calls."""
+        for f in self.forwarders:
+            f.forward_window(tick_time, actions)

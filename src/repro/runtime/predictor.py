@@ -5,6 +5,30 @@ The model is pluggable (``ModelAdapter``): a vector policy (edge RL), an
 LM-family model through a TokenCodec, or anything callable on (E, F)
 features. This is the "support any type of AI model that consumes this
 data" requirement.
+
+Two consume paths:
+
+  * :meth:`Predictor.on_tick` — one jitted ``_step`` per window. The
+    per-window reference path; fused mode and the bit-identity tests use
+    it.
+  * :meth:`Predictor.on_windows` — a K-window stack in ONE jitted
+    dispatch: the policy and action validation run under ``lax.scan`` (so
+    every window executes exactly the per-window (E, F) gemm), the
+    ``prev_obs``/``prev_actions``/``have_prev`` carry materializes as
+    shifted stacks, reward terms evaluate K-leading in one shot
+    (elementwise over the stack, see ``RewardSpec.compute``), and the K
+    replay transitions append through ``replay.add_many`` (itself a
+    ``lax.scan`` carrying the buffer — exact sequential ring semantics).
+    Outputs are bit-identical to K sequential ``on_tick`` calls; the
+    scan-mode Manager consume uses this path so the decision side of the
+    system costs one device dispatch per K windows, like the pipeline.
+
+Long-horizon time rule (mirrors the scan engine's window-relative rebase):
+the replay buffer stores the EXACT int32 tick index per transition, never a
+float32 absolute time — consecutive window ends quantize to the same
+float32 value past t~2^24 s. The absolute float64 time of every tick is
+mirrored host-side in ``_replay_times`` (slot-aligned with the device
+ring) and re-attached at export by :meth:`export_replay`.
 """
 from __future__ import annotations
 
@@ -63,6 +87,10 @@ class Predictor:
         self.db = db
         self.replay = rp.init(n_envs, replay_capacity, n_features,
                               action_space.n)
+        # host-side float64 absolute-time mirror, slot-aligned with the
+        # device ring: the transition written at cursor c (tick index c+1)
+        # lives in slot c % capacity of both structures
+        self._replay_times = np.zeros((replay_capacity,), np.float64)
         self._prev = {
             "obs": jnp.zeros((n_envs, n_features), jnp.float32),
             "actions": jnp.zeros((n_envs, action_space.n), jnp.float32),
@@ -72,7 +100,7 @@ class Predictor:
         low = jnp.asarray(action_space.low, jnp.float32)
         high = jnp.asarray(action_space.high, jnp.float32)
 
-        def _step(features, raw, prev_obs, prev_actions, replay, tick_time,
+        def _step(features, raw, prev_obs, prev_actions, replay, tick_idx,
                   have_prev):
             actions = self.model(features)
             actions, violated = validate_actions(actions, low, high)
@@ -82,21 +110,100 @@ class Predictor:
             new_replay = jax.lax.cond(
                 have_prev,
                 lambda r: rp.add(r, prev_obs, prev_actions, reward, features,
-                                 tick_time),
+                                 tick_idx),
                 lambda r: r,
                 replay)
             return actions, reward, per_term, violated, new_replay
 
         self._step = jax.jit(_step)
 
+        def _steps(features, raw, tick_idx, prev_obs, prev_actions,
+                   have_prev, replay):
+            """K windows in one dispatch. The policy/validate scan runs the
+            SAME per-window (E, F) computation ``_step`` jits (a batched
+            K-leading gemm could block/accumulate differently on some
+            backends, breaking bit-identity with the reference path); the
+            carried prev obs/actions materialize as the shifted stacks
+            below, so reward terms — elementwise over the stack — evaluate
+            K-leading in one shot."""
+            def body(carry, f):
+                actions = self.model(f)
+                actions, violated = validate_actions(actions, low, high)
+                return carry, (actions, violated)
+
+            _, (actions, violated) = jax.lax.scan(body, 0, features)
+            prev_act_seq = jnp.concatenate([prev_actions[None], actions[:-1]],
+                                           0)
+            rewards, per_term = self.reward_spec.compute(raw, actions,
+                                                         prev_act_seq)
+            # transition j stores (obs/actions entering window j, reward j,
+            # next_obs = window j's features); only the first row of the
+            # batch can lack a predecessor
+            K = features.shape[0]
+            prev_obs_seq = jnp.concatenate([prev_obs[None], features[:-1]], 0)
+            mask = jnp.concatenate([have_prev[None],
+                                    jnp.ones((K - 1,), jnp.bool_)])
+            new_replay = rp.add_many(replay, prev_obs_seq, prev_act_seq,
+                                     rewards, features, tick_idx, mask)
+            return (actions, rewards, per_term, violated, features[-1],
+                    actions[-1], new_replay)
+
+        self._steps = jax.jit(_steps)
+
+    def _record_times(self, base_idx: int, tick_times) -> None:
+        """Mirror absolute float64 tick times into the slot-aligned host
+        ring (tick idx adds at cursor idx-1 -> slot (idx-1) % capacity)."""
+        C = self.replay.capacity
+        for j, t in enumerate(tick_times):
+            idx = base_idx + j
+            if idx >= 1:
+                self._replay_times[(idx - 1) % C] = float(t)
+
     def on_tick(self, features, tick_time, raw=None):
-        """features: (E, F) device array; returns host actions + rewards."""
+        """features: (E, F) device array; returns host actions + rewards.
+
+        The per-window reference path — :meth:`on_windows` must stay
+        bit-identical to K calls of this."""
         raw = features if raw is None else raw
+        idx = self.stats["ticks"]
         actions, reward, per_term, violated, self.replay = self._step(
             features, raw, self._prev["obs"], self._prev["actions"],
-            self.replay, jnp.asarray(tick_time, jnp.float32),
+            self.replay, jnp.asarray(idx, jnp.int32),
             jnp.asarray(self._prev["have"]))
+        self._record_times(idx, [tick_time])
         self._prev = {"obs": features, "actions": actions, "have": True}
         self.stats["ticks"] += 1
         self.stats["violations"] += int(np.asarray(violated).sum())
         return np.asarray(actions), np.asarray(reward), np.asarray(per_term)
+
+    def on_windows(self, features, tick_times, raw=None):
+        """Consume a K-window stack in ONE jitted dispatch.
+
+        ``features``/``raw``: (K, E, F) (raw defaults to features);
+        ``tick_times``: K absolute window-end times (host float64, never
+        sent to device). Returns host ``(actions (K, E, A), rewards (K, E),
+        per_term (K, E, n_terms))`` — bit-identical to K sequential
+        :meth:`on_tick` calls, including replay contents and stats.
+        """
+        features = jnp.asarray(features)
+        raw = features if raw is None else jnp.asarray(raw)
+        K = features.shape[0]
+        assert K >= 1 and len(tick_times) == K, (K, len(tick_times))
+        base = self.stats["ticks"]
+        tick_idx = jnp.asarray(base + np.arange(K), jnp.int32)
+        (actions, rewards, per_term, violated, last_obs, last_actions,
+         self.replay) = self._steps(
+            features, raw, tick_idx, self._prev["obs"],
+            self._prev["actions"], jnp.asarray(self._prev["have"]),
+            self.replay)
+        self._record_times(base, tick_times)
+        self._prev = {"obs": last_obs, "actions": last_actions, "have": True}
+        self.stats["ticks"] += K
+        self.stats["violations"] += int(np.asarray(violated).sum())
+        return np.asarray(actions), np.asarray(rewards), np.asarray(per_term)
+
+    def export_replay(self, env_ids, salt: str) -> dict:
+        """Anonymized chronological replay export with exact float64
+        absolute times reconstructed from the host-side mirror."""
+        return rp.export_for_training(self.replay, env_ids, salt,
+                                      slot_times=self._replay_times)

@@ -16,8 +16,14 @@ Predictor, forward the decisions, log everything.
 are drained once per batch, each env's Accumulator closes K consecutive
 windows into a stacked (K, E, S, M) RawWindow, and ONE device dispatch
 (``PerceptaPipeline.run_many``) processes all K windows with the state
-carried on device. Host-side consumers (Predictor, Forwarders, DB) still
-see one result row per window, in window order.
+carried on device. The decision path is batched the same way: the
+Predictor consumes the stacked (K, E, F) features in ONE jitted dispatch
+(``Predictor.on_windows`` — policy/validate under ``lax.scan``, K-leading
+reward terms, replay appended via the scan-carried ``add_many``), and
+Forwarders/DB take per-window batch calls (``dispatch_window`` /
+``append_many``, one lock per call). Host-side consumers still see one
+result row per window, in window order, bit-identical to the per-window
+reference (``batched_consume=False``).
 
 ``mode="scan_sharded"`` is the same Manager loop with the device dispatch
 executed under ``shard_map`` on an env-sharded mesh (envs -> the ``data``
@@ -107,7 +113,8 @@ class PerceptaSystem:
                  mode: str = "fused", speedup: float = 60.0,
                  t0: float = 0.0, manual_time: bool = False,
                  scan_k=8, ingest: str = "columnar",
-                 autotune: Optional[dict] = None):
+                 autotune: Optional[dict] = None,
+                 batched_consume: bool = True):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -147,6 +154,10 @@ class PerceptaSystem:
         self.scan_k = max(1, int(scan_k))
         assert ingest in ("columnar", "records"), ingest
         self.ingest = ingest
+        # scan-mode consume: one Predictor.on_windows dispatch per K-window
+        # batch (default); False keeps the per-window on_tick loop — the
+        # tested reference path the batched one must match bit for bit
+        self.batched_consume = bool(batched_consume)
         # async modes must NOT donate: dispatching with a donated input that
         # is still being computed blocks the dispatch (and the pump thread
         # behind it), serializing the very batches the prefetcher overlaps.
@@ -341,11 +352,28 @@ class PerceptaSystem:
 
     def _consume_scan(self, bounds, counts, feats, frames,
                       t_dispatch) -> List[dict]:
-        """Block on a dispatched batch and run the per-window host side
-        (Predictor, Forwarders, DB, metrics) in window order."""
-        jax.block_until_ready(feats.features)
-        batch_latency = time.time() - t_dispatch
+        """Block on a dispatched batch and run the batch host side
+        (Predictor, Forwarders, DB, metrics) in window order.
+
+        The Predictor consumes the whole K-window stack in ONE jitted
+        dispatch (``on_windows`` over the stacked device features — the
+        same fusion ``run_many`` applies to the pipeline, applied to the
+        decision path), then the per-window loop only slices numpy for
+        Forwarders/DB/metrics. ``batched_consume=False`` keeps the
+        per-window ``on_tick`` loop as the tested reference; both paths
+        are bit-identical (asserted in tests/test_predictor_batch.py).
+        """
         k = len(bounds)
+        if self.batched_consume:
+            # feed the stacked DEVICE features straight into the predictor
+            # scan — one dispatch, one host transfer per output leaf
+            actions_b, rewards_b, _ = self.predictor.on_windows(
+                feats.features, [b[1] for b in bounds], raw=feats.raw)
+            batch_latency = time.time() - t_dispatch
+        else:
+            jax.block_until_ready(feats.features)
+            batch_latency = time.time() - t_dispatch
+            raw_np = np.asarray(feats.raw)
 
         out = []
         # one batch-wide host transfer per leaf; the per-window loop then
@@ -353,24 +381,26 @@ class PerceptaSystem:
         # two extra device dispatches per window and, in async mode, queues
         # them behind the next batch's scan
         feat_np = np.asarray(feats.features)
-        raw_np = np.asarray(feats.raw)
         obs_np = np.asarray(frames.observed)
         fill_np = np.asarray(frames.filled)
         anom_np = np.asarray(frames.anomalous)
         for j, (t_start, t_end) in enumerate(bounds):
             t_host0 = time.time()
-            actions, rewards, per_term = self.predictor.on_tick(
-                feat_np[j], t_end, raw=raw_np[j])
+            if self.batched_consume:
+                actions, rewards = actions_b[j], rewards_b[j]
+            else:
+                # reference path: the per-window dispatch stays inside the
+                # timed region so latency_s keeps counting Predictor time
+                actions, rewards, _ = self.predictor.on_tick(
+                    feat_np[j], t_end, raw=raw_np[j])
             if self.forwarders is not None:
-                for i, env in enumerate(self.env_ids):
-                    self.forwarders.dispatch(env, t_end, actions[i])
+                self.forwarders.dispatch_window(t_end, actions)
             if self.db is not None:
-                for i, env in enumerate(self.env_ids):
-                    self.db.append(env, t_end, feat_np[j, i], actions[i],
-                                   float(rewards[i]))
+                self.db.append_many(self.env_ids, t_end, feat_np[j], actions,
+                                    rewards)
             self.window_index += 1
-            # comparable to run_window's latency_s: amortized device share
-            # of the batch dispatch plus this window's host-side work
+            # comparable to run_window's latency_s: amortized device +
+            # predictor share of the batch plus this window's host work
             latency = batch_latency / k + (time.time() - t_host0)
             self.metrics["tick_latency_s"].append(latency)
             self.metrics["ingest_records"].append(counts[j])
