@@ -1,25 +1,29 @@
 # Developer / CI entrypoints. `make test` is the tier-1 verify command from
 # ROADMAP.md; `make bench-smoke` is a ~2-minute benchmark pass covering the
-# five pipeline execution axes (modular / fused / scan / scan_sharded /
-# scan_async) plus the scan-engine, async-overlap, batched-Predictor,
-# autotuner and columnar-ingest acceptance cells. The sharded mode runs on a forced
-# 8-host-device CPU mesh (--host-devices) so the shard_map path is
-# exercised in CI, not just on real multi-chip hardware; the async overlap
-# cell runs in its own subprocess (accelerator-emulating XLA flags, see
-# benchmarks/run.py). Results are also written as JSON (windows/s +
-# records/s per mode).
+# pipeline execution axes (modular / fused / scan / scan_sharded /
+# scan_async / scan_fused_decide) plus the scan-engine, async-overlap,
+# batched-Predictor, fused-decide, autotuner and columnar-ingest acceptance
+# cells. The sharded modes run on a forced 8-host-device CPU mesh
+# (--host-devices) so the shard_map path is exercised in CI, not just on
+# real multi-chip hardware; the async overlap cell runs in its own
+# subprocess (accelerator-emulating XLA flags, see benchmarks/run.py).
+# Results are also written as JSON (windows/s + records/s per mode) and
+# diffed against the committed trajectory record by benchmarks/compare.py
+# (report-only: single-run numbers drift on shared boxes).
 PY ?= python
 
-.PHONY: test bench-smoke bench-pr2 bench-pr3 bench-pr4 ci
+.PHONY: test bench-smoke bench-pr2 bench-pr3 bench-pr4 bench-pr5 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # CI pass: writes BENCH_smoke.json (untracked scratch) so repeated CI runs
-# never clobber the committed BENCH_prN.json trajectory records
+# never clobber the committed BENCH_prN.json trajectory records, then
+# reports >10% throughput regressions vs the committed BENCH_pr5.json
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
 		--json BENCH_smoke.json
+	$(PY) -m benchmarks.compare BENCH_pr5.json BENCH_smoke.json
 
 # regenerate the committed perf-trajectory artifacts (run manually per PR)
 bench-pr2:
@@ -37,5 +41,13 @@ bench-pr4:
 	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
 		--only "scan_engine|scan_sharded|scan_async|predictor_batch|autotune|columnar" \
 		--json BENCH_pr4.json
+
+# PR 5: the fused-decide cells (identity, K=32/E=256 fused-vs-two-dispatch
+# with phase decomposition + host-transfer bytes, sharded E=256 on the
+# forced 8-device mesh) next to the scan-engine trajectory cells
+bench-pr5:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|autotune|columnar" \
+		--json BENCH_pr5.json
 
 ci: test bench-smoke

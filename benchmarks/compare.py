@@ -1,0 +1,109 @@
+"""Diff two BENCH_*.json artifacts and flag throughput regressions.
+
+Walks both artifacts for throughput-like numeric leaves (``windows_per_s``
+/ ``records_per_s`` maps and any key named ``*windows_per_s*`` /
+``*records_per_s*`` / ``speedup`` nested in the cell blocks), joins them by
+path, and reports every metric present in both with its ratio. A metric
+whose new value is more than ``--threshold`` (default 10%) below the old
+one is flagged as a REGRESSION.
+
+Exit status is 0 unless ``--strict`` is passed and regressions were found:
+CI (``make bench-smoke``) runs it report-only, because single-run bench
+numbers on shared boxes drift — the report is the signal, the committed
+BENCH_prN.json trajectory is the record.
+
+Run: ``python -m benchmarks.compare OLD.json NEW.json [--threshold 0.1]
+[--strict]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# path components that hold raw measurement noise, not comparable metrics
+_SKIP_KEYS = {"rows", "pair_ratios", "grid", "pruned", "cell"}
+_METRIC_HINTS = ("windows_per_s", "records_per_s", "speedup",
+                 "host_transfer_reduction")
+
+
+def _is_metric(path: tuple) -> bool:
+    leaf = path[-1]
+    return any(h in leaf for h in _METRIC_HINTS) \
+        or any(h in p for p in path[:-1] for h in ("windows_per_s",
+                                                   "records_per_s"))
+
+
+def flatten_metrics(obj, path=()) -> dict:
+    """path-tuple -> float for every throughput-like numeric leaf."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k in _SKIP_KEYS:
+                continue
+            out.update(flatten_metrics(v, path + (str(k),)))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        if _is_metric(path):
+            out[path] = float(obj)
+    return out
+
+
+def compare(old: dict, new: dict, threshold: float = 0.1):
+    """Returns (report_rows, regressions): every joined metric with its
+    ratio, and the subset whose new/old ratio is below 1 - threshold."""
+    a, b = flatten_metrics(old), flatten_metrics(new)
+    rows, regressions = [], []
+    for path in sorted(set(a) & set(b)):
+        ov, nv = a[path], b[path]
+        ratio = nv / ov if ov else float("inf")
+        flag = ""
+        if ov and ratio < 1.0 - threshold:
+            flag = "REGRESSION"
+            regressions.append((path, ov, nv, ratio))
+        elif ov and ratio > 1.0 + threshold:
+            flag = "improved"
+        rows.append((path, ov, nv, ratio, flag))
+    only_old = sorted(set(a) - set(b))
+    only_new = sorted(set(b) - set(a))
+    return rows, regressions, only_old, only_new
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH artifacts, flag >threshold regressions")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.1,
+                    help="relative drop that counts as a regression "
+                         "(default 0.10)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when regressions are found")
+    args = ap.parse_args(argv)
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    rows, regressions, only_old, only_new = compare(old, new,
+                                                    args.threshold)
+    if not rows:
+        print(f"# no comparable throughput metrics between {args.old} and "
+              f"{args.new}")
+        return 0
+    width = max(len(".".join(p)) for p, *_ in rows)
+    print(f"# {args.old} -> {args.new} (threshold "
+          f"{args.threshold:.0%})")
+    for path, ov, nv, ratio, flag in rows:
+        print(f"{'.'.join(path):<{width}}  {ov:>12.1f} -> {nv:>12.1f}  "
+              f"x{ratio:5.2f}  {flag}")
+    for p in only_old:
+        print(f"{'.'.join(p)}: only in {args.old}")
+    for p in only_new:
+        print(f"{'.'.join(p)}: only in {args.new}")
+    n = len(regressions)
+    print(f"# {len(rows)} metrics compared, {n} regression"
+          f"{'' if n == 1 else 's'} (> {args.threshold:.0%} down)")
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -478,11 +478,11 @@ def bench_scan_async(quick=False):
                          capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, out.stderr[-2000:]
     cell = json.loads(out.stdout.strip().splitlines()[-1])
+    # schema rule: every number appears ONCE — the overlap cell's
+    # windows/s live inside the nested scan_async block only (they used to
+    # be duplicated under the top-level windows_per_s map, which made
+    # artifact diffs double-count them)
     SUMMARY["scan_async"] = cell
-    SUMMARY["windows_per_s"]["scan_async_cell_scan"] = \
-        cell["windows_per_s_scan"]
-    SUMMARY["windows_per_s"]["scan_async_cell_async"] = \
-        cell["windows_per_s_scan_async"]
     ph = cell["scan_phase_ms"]
     _row("scan_async_overlap_K32_E8_S8_T64",
          1e6 / cell["windows_per_s_scan_async"],
@@ -679,6 +679,261 @@ def bench_predictor_batch(quick=False):
          f" ms/batch ({cell['consume_speedup']:.1f}x) | host share "
          f"{pw['host_share']:.0%} -> {bt['host_share']:.0%} of scan wall | "
          f"bit_identical {cell['bit_identical']}")
+
+
+# --------------------------------------------------------------------------
+# Table 2f — device-resident decision path: fused decide vs two dispatches
+# --------------------------------------------------------------------------
+
+def bench_fused_decide(quick=False):
+    """Three cells for the fused decision engine:
+
+    * identity (system level, K=32/E=8): ``scan_fused_decide`` results +
+      replay export bit-identical to the two-dispatch reference;
+    * acceptance (engine level, K=32/E=256 — the per-device regime): the
+      fused single dispatch vs ``run_many`` + ``on_windows`` + the
+      consume fetches, with phase decomposition and measured host-transfer
+      bytes per batch (the fused path fetches only the small per-window
+      outputs);
+    * sharded (K=32/E=256 on the visible env mesh — 8 devices under
+      ``--host-devices 8``): fused carry env-sharded, bit-identity vs the
+      unsharded fused engine asserted.
+    Legs of the acceptance cell are interleaved (ratio of totals) so
+    shared-box drift cancels, same protocol as the overlap cells.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import PipelineConfig
+    from repro.core import pipeline as pl
+    from repro.core.frame import make_raw_window
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.predictor import (ActionSpace, Predictor,
+                                         linear_policy)
+    from repro.runtime.receivers import SimulatedDevice
+    from repro.runtime.system import PerceptaSystem, SourceSpec
+
+    # --- identity cell (system level) -------------------------------------
+    def mk(mode):
+        srcs = [SourceSpec(f"s{i}", "mqtt",
+                           SimulatedDevice(f"st{i}", 60.0, base=3.0, seed=i))
+                for i in range(8)]
+        cfg = PipelineConfig(n_envs=8, n_streams=8, n_ticks=16, tick_s=60.0,
+                             max_samples=64)
+        pred = Predictor(
+            linear_policy(8, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            8, cfg.n_features, replay_capacity=64)
+        return PerceptaSystem([f"b{i}" for i in range(8)], srcs, cfg, pred,
+                              speedup=1e9, manual_time=True, mode=mode,
+                              scan_k=32)
+
+    n = 32 if quick else 64
+    strip = lambda rs: [{k: v for k, v in r.items() if k != "latency_s"}
+                        for r in rs]
+    ref, fus = mk("scan"), mk("scan_fused_decide")
+    ident = strip(ref.run_windows(n)) == strip(fus.run_windows(n))
+    ea, eb = ref.export_replay("bench"), fus.export_replay("bench")
+    for key in ("obs", "actions", "rewards", "next_obs", "tick_idx",
+                "times"):
+        ident = ident and bool(
+            (np.asarray(ea[key]) == np.asarray(eb[key])).all())
+    ref.stop(), fus.stop()
+    SUMMARY["fused_decide_bit_identical"] = bool(ident)
+    _row("fused_decide_identity_K32_E8_S8", 0.0,
+         f"bit_identical {ident} over {n} windows "
+         f"(results + rolled replay export w/ reconstructed times)")
+
+    # --- acceptance cell: K=32, E=256, one dispatch vs two ----------------
+    # the high-cadence edge regime the fused engine targets: short windows
+    # (8 ticks), the Predictor's DEFAULT 4096-slot replay ring. The
+    # two-dispatch path re-copies the full (E, 4096, F) ring storage every
+    # on_windows dispatch (its jit cannot donate — the Predictor owns the
+    # buffer across calls) and ships features + frames to the host; the
+    # fused engine updates the donated ring in place and ships only the
+    # small DecideBatch leaves.
+    K, E, S, T, M, CAP = 32, 256, 8, 8, 16, 4096
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    F = cfg.n_features
+    rng = np.random.RandomState(0)
+    raws = make_raw_window(
+        rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
+        rng.uniform(0, T * 60, (K, E, S, M)).astype(np.float32),
+        rng.rand(K, E, S, M) > 0.3)
+    starts = jnp.zeros((K, E), jnp.float32)
+    times = [T * 60.0 * (j + 1) for j in range(K)]
+    denom = float(E * S * T)
+
+    def mkp():
+        return Predictor(
+            linear_policy(F, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            E, F, replay_capacity=CAP)
+
+    # two-dispatch reference: exactly the scan-mode Manager's device +
+    # consume work (run_many, on_windows, the batch-wide fetches, the
+    # per-window metric loop over the (E, S, T) frames)
+    p_ref = mkp()
+    pipe = pl.PerceptaPipeline(cfg, mode="scan", donate=True)
+    ref_state = [pl.init_state(cfg)]
+    ref_bytes = [0]
+
+    def run_ref():
+        t0 = time.time()
+        ref_state[0], feats, frames = pipe.run_many(ref_state[0], raws,
+                                                    starts)
+        jax.block_until_ready(feats.features)
+        t1 = time.time()
+        acts, rews, _per = p_ref.on_windows(feats.features, times,
+                                            raw=feats.raw)
+        feat_np = np.asarray(feats.features)
+        obs_np = np.asarray(frames.observed)
+        fill_np = np.asarray(frames.filled)
+        anom_np = np.asarray(frames.anomalous)
+        metrics = [(float(np.mean(rews[j])), float(obs_np[j].mean()),
+                    float(fill_np[j].mean()), int(anom_np[j].sum()))
+                   for j in range(K)]
+        ref_bytes[0] = (feat_np.nbytes + obs_np.nbytes + fill_np.nbytes
+                        + anom_np.nbytes + acts.nbytes + rews.nbytes
+                        + _per.nbytes)
+        return t1 - t0, time.time() - t1, acts, rews, metrics
+
+    # fused: one dispatch; the host touches only the small output leaves
+    p_fus = mkp()
+    from repro import compat
+    engine = compat.jit_donated(
+        functools.partial(pl.run_many_decide, cfg, p_fus.make_decide_fn()),
+        donate_argnums=(0, 1))
+    fus_state = [pl.init_state(cfg), p_fus.decide_state()]
+    fus_bytes = [0]
+
+    def run_fused():
+        t0 = time.time()
+        fus_state[0], fus_state[1], outs = engine(fus_state[0], fus_state[1],
+                                                  raws, starts)
+        jax.block_until_ready(outs.rewards)
+        t1 = time.time()
+        acts = np.asarray(outs.actions)
+        rews = np.asarray(outs.rewards)
+        viol = np.asarray(outs.violated)
+        obs_c = np.asarray(outs.observed)
+        fill_c = np.asarray(outs.filled)
+        anom_c = np.asarray(outs.anomalous)
+        p_fus.absorb_fused(times, viol)
+        metrics = [(float(np.mean(rews[j])),
+                    float(int(obs_c[j].sum()) / denom),
+                    float(int(fill_c[j].sum()) / denom),
+                    int(anom_c[j].sum()))
+                   for j in range(K)]
+        fus_bytes[0] = (acts.nbytes + rews.nbytes + viol.nbytes
+                        + obs_c.nbytes + fill_c.nbytes + anom_c.nbytes)
+        return t1 - t0, time.time() - t1, acts, rews, metrics
+
+    # warmup + engine-level bit-identity (fresh twin states)
+    _, _, a_ref, r_ref, m_ref = run_ref()
+    _, _, a_fus, r_fus, m_fus = run_fused()
+    cell_ident = (bool((a_ref == a_fus).all())
+                  and bool((r_ref == r_fus).all()) and m_ref == m_fus)
+
+    # interleaved pairs; the headline speedup is the MEDIAN of per-pair
+    # ratios (same protocol as the overlap cells: shared-box throughput
+    # drifts on minute timescales, and a couple of congested pairs poison
+    # a ratio of totals but not a median)
+    pairs = 4 if quick else 8
+    legs = {"ref": [0.0, 0.0], "fused": [0.0, 0.0]}
+    ratios = []
+    nb = 0
+    for _pair in range(pairs):
+        d, c, *_ = run_ref()
+        legs["ref"][0] += d
+        legs["ref"][1] += c
+        d2, c2, *_ = run_fused()
+        legs["fused"][0] += d2
+        legs["fused"][1] += c2
+        ratios.append((d + c) / (d2 + c2))
+        nb += 1
+    tot_ref = sum(legs["ref"])
+    tot_fus = sum(legs["fused"])
+    wps_ref = K * nb / tot_ref
+    wps_fus = K * nb / tot_fus
+    speedup = float(np.median(ratios))
+    xfer_ratio = ref_bytes[0] / max(fus_bytes[0], 1)
+    SUMMARY["windows_per_s"]["fused_decide_two_dispatch_E256"] = \
+        round(wps_ref, 1)
+    SUMMARY["windows_per_s"]["fused_decide_E256"] = round(wps_fus, 1)
+    SUMMARY["fused_decide"] = {
+        "cell": {"K": K, "E": E, "S": S, "T": T, "M": M,
+                 "replay_capacity": CAP},
+        "bit_identical": cell_ident,
+        "speedup": round(speedup, 2),
+        "speedup_ratio_of_totals": round(tot_ref / tot_fus, 2),
+        "pair_ratios": [round(r, 2) for r in ratios],
+        "phase_ms_two_dispatch": {
+            "device": round(legs["ref"][0] / nb * 1e3, 1),
+            "consume": round(legs["ref"][1] / nb * 1e3, 1)},
+        "phase_ms_fused": {
+            "device": round(legs["fused"][0] / nb * 1e3, 1),
+            "consume": round(legs["fused"][1] / nb * 1e3, 1)},
+        "host_transfer_bytes_two_dispatch": int(ref_bytes[0]),
+        "host_transfer_bytes_fused": int(fus_bytes[0]),
+        "host_transfer_reduction": round(xfer_ratio, 1),
+    }
+    _row(f"fused_decide_K{K}_E{E}", 1e6 / wps_fus,
+         f"{wps_fus:.0f} windows/s (1 dispatch end-to-end) vs "
+         f"{wps_ref:.0f} two-dispatch | speedup {speedup:.2f}x "
+         f"(median of {nb} interleaved pair ratios; ratio of totals "
+         f"{tot_ref / tot_fus:.2f}x) | host transfer "
+         f"{ref_bytes[0] / 2**20:.2f} -> "
+         f"{fus_bytes[0] / 2**20:.3f} MiB/batch ({xfer_ratio:.0f}x less) | "
+         f"bit_identical {cell_ident}")
+
+    # --- sharded cell: E=256 on the visible env mesh ----------------------
+    # measured with the SAME estimator as the unsharded fused cell
+    # (interleaved legs, ratio of totals) so the recorded sharded-vs-fused
+    # ratio doesn't mix a best-of min against drift-inclusive totals
+    p_sh = mkp()
+    sh_engine, mesh = pl.make_run_many_decide_sharded(
+        cfg, p_sh.make_decide_fn(), p_sh.decide_state())
+    sh_engine = compat.jit_donated(sh_engine, donate_argnums=(0, 1))
+    sh_state = [pl.init_state(cfg), p_sh.decide_state()]
+
+    def run_sharded():
+        t0 = time.time()
+        sh_state[0], sh_state[1], outs = sh_engine(sh_state[0], sh_state[1],
+                                                   raws, starts)
+        jax.block_until_ready(outs.rewards)
+        return time.time() - t0, outs
+
+    _, outs_sh = run_sharded()       # warmup + identity vs unsharded fused
+    sh_ident = bool((np.asarray(outs_sh.actions) == a_fus).all())
+    run_sharded()                    # second warmup: the first donated
+    #                                  re-dispatch can trigger a slow lazy
+    #                                  XLA path; exclude it like a compile
+    pairs_sh = 4 if quick else 8
+    tot_f2 = tot_sh = 0.0
+    sh_ratios = []
+    for _pair in range(pairs_sh):
+        d, c, *_ = run_fused()
+        tot_f2 += d + c
+        dt, _ = run_sharded()
+        tot_sh += dt
+        sh_ratios.append((d + c) / dt)
+    wps_sh = K * pairs_sh / tot_sh
+    mesh_speedup = float(np.median(sh_ratios))
+    mesh_n = int(np.prod(list(mesh.shape.values())))
+    SUMMARY["windows_per_s"]["fused_decide_sharded_E256"] = round(wps_sh, 1)
+    SUMMARY["fused_decide_sharded_bit_identical"] = sh_ident
+    SUMMARY["fused_decide_mesh_speedup"] = round(mesh_speedup, 2)
+    _row(f"fused_decide_sharded_K{K}_E{E}", 1e6 / wps_sh,
+         f"{wps_sh:.0f} windows/s | {mesh_n}-device env mesh "
+         f"({E // mesh_n} envs/device) | {mesh_speedup:.2f}x vs unsharded "
+         f"fused (median of {pairs_sh} interleaved pair ratios) | "
+         f"bit_identical-to-fused {sh_ident}")
 
 
 def bench_autotune(quick=False):
@@ -998,17 +1253,18 @@ def bench_roofline(quick=False):
 
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
        bench_scan_engine, bench_scan_sharded, bench_scan_async,
-       bench_predictor_batch, bench_autotune, bench_stage_breakdown,
-       bench_deployment, bench_serving, bench_kernels, bench_roofline]
+       bench_predictor_batch, bench_fused_decide, bench_autotune,
+       bench_stage_breakdown, bench_deployment, bench_serving,
+       bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
 # tick-latency axes, the scan-engine acceptance cells (incl. the sharded
-# mode on the forced host-device mesh, the async overlap cell and the
-# batched-Predictor identity cell), the autotuner grid, and the
-# columnar-ingest cell
+# mode on the forced host-device mesh, the async overlap cell, the
+# batched-Predictor identity cell and the fused-decide cells), the
+# autotuner grid, and the columnar-ingest cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
-         bench_scan_async, bench_predictor_batch, bench_autotune,
-         bench_columnar_ingest]
+         bench_scan_async, bench_predictor_batch, bench_fused_decide,
+         bench_autotune, bench_columnar_ingest]
 
 
 def main() -> None:

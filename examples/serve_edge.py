@@ -18,20 +18,40 @@ device it degenerates to ``scan``; force a multi-device CPU mesh with
 ``--mode scan_async`` to overlap host ingest with device compute (a pump
 thread assembles window batch j+1 while batch j executes — bit-identical
 outputs, higher sustained windows/s when ingest is a meaningful fraction
-of the loop). Ingest is columnar (RecordBatch) throughout, and in the scan
+of the loop). ``--mode scan_fused_decide`` (and its ``_sharded`` /
+``_async`` / ``_async_sharded`` compositions) goes one step further and
+fuses the DECISION path into the same dispatch: policy, action
+validation, rewards and the replay-ring write execute inside the window
+scan, so the whole ingest->decide->bank loop costs one device dispatch
+per batch and only the small per-window outputs come back to the host.
+Ingest is columnar (RecordBatch) throughout, and in the non-fused scan
 modes the Predictor consumes each K-window stack in ONE jitted dispatch
 (``Predictor.on_windows``) instead of one ``_step`` per window.
 
 Accessor rules in scan modes: hold pipeline state only through the
 donation-safe ``system.snapshot_state()`` / ``snapshot_norm()`` copies,
-and read replay time through ``pred.export_replay(env_ids, salt)`` — the
-device ring stores exact int32 tick indices (float32 absolute seconds
-would collapse consecutive window ends past t~2^24 s); the export
-reconstructs exact float64 absolute times from the Predictor's host-side
-mirror.
+and read the replay through ``system.export_replay(salt)`` /
+``system.replay_size()`` — the device ring stores exact int32 tick
+indices (float32 absolute seconds would collapse consecutive window ends
+past t~2^24 s), and in the fused-decide modes the ring itself lives in
+the DONATED device carry, so ``pred.replay`` is a stale construction-time
+snapshot there; the system export snapshots the live carry without
+donating it and reconstructs exact float64 absolute times (from the
+host mirror in on_tick/on_windows modes, from the stored tick indices in
+fused-decide modes).
+
+Note on fused-decide + this LM policy: the decide step is traced once
+into the scan, so a policy closing over host state (here: the norm
+snapshot the TokenCodec reads) keeps the traced constant — exactly like
+``Predictor.on_windows`` already does — and the sharded build probes
+shapes at CONSTRUCTION time, so that state must be populated before the
+system is created. The fused ``_sharded`` compositions additionally
+require the model to be per-env row-wise; this policy's per-env norm
+lookup is not, so those modes are exercised by the tests/benchmarks
+(row-wise ``linear_policy``) rather than this example.
 
 Run: PYTHONPATH=src python examples/serve_edge.py \
-         [--mode scan|scan_async|scan_sharded|fused]
+         [--mode scan|scan_async|scan_sharded|scan_fused_decide|fused]
 """
 import argparse
 import time
@@ -73,7 +93,18 @@ def lm_policy(feats):
 ap = argparse.ArgumentParser()
 ap.add_argument("--mode", default="scan",
                 choices=["scan", "scan_async", "scan_sharded",
-                         "scan_async_sharded", "fused"])
+                         "scan_async_sharded", "scan_fused_decide",
+                         "scan_fused_decide_async", "fused"],
+                help="device execution mode; the scan_fused_decide modes "
+                     "fuse the policy/reward/replay step into the window "
+                     "scan (one dispatch per batch, device-resident replay "
+                     "ring). The fused *_sharded compositions are omitted "
+                     "here: this example's LM policy pairs feature row i "
+                     "with row i of the captured norm snapshot, which is "
+                     "not per-env row-wise, so it cannot split across the "
+                     "env mesh (see the DecideFns sharding contract; the "
+                     "sharded fused engine runs in tests/benchmarks with "
+                     "row-wise policies)")
 args = ap.parse_args()
 SCAN_K = 2  # windows per scan-fused dispatch
 E = 4
@@ -87,6 +118,12 @@ sources = [
 ]
 pcfg = PipelineConfig(n_envs=E, n_streams=3, n_ticks=8, tick_s=60.0,
                       max_samples=32)
+# seed the codec's norm snapshot BEFORE the system exists: the sharded
+# fused-decide build traces the decide step (and so this policy) at
+# construction time to probe output shapes, and the policy must be
+# traceable from the start — the fresh-state norm is the correct t=0 value
+from repro.core import init_state as _pl_init_state
+norm_state["s"] = _pl_init_state(pcfg).norm
 pred = Predictor(ModelAdapter(lm_policy, "lm_policy"),
                  energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=2),
                  ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
@@ -129,11 +166,13 @@ dt = time.time() - t_start
 print(f"\nforwarded decisions: "
       f"{ {f.dest_id: f.stats['sent'] for f in hub.forwarders} }")
 # replay accessor rule: device-side times are exact int32 tick indices;
-# export_replay re-attaches exact float64 absolute times (host mirror)
-# and rolls the ring chronological — never read replay.tick_idx as seconds
-dataset = pred.export_replay(system.env_ids, salt="opeva")
+# the system export re-attaches exact float64 absolute times (host mirror,
+# or tick-index reconstruction in fused-decide modes where the ring lives
+# in the donated device carry) and rolls the ring chronological — never
+# read replay.tick_idx as seconds, never alias pred.replay in fused modes
+dataset = system.export_replay(salt="opeva")
 print(f"DB rows (anonymized): {db.stats['rows']}  "
-      f"replay transitions: {int(pred.replay.size())}  "
+      f"replay transitions: {system.replay_size()}  "
       f"export t=[{dataset['times'][0, 0]:.0f}"
       f"..{dataset['times'][0, -1]:.0f}]s")
 print(f"ad-hoc serving: {tok_count} tokens via continuous batching "

@@ -2,5 +2,6 @@
 # batched JAX: harmonize -> anomaly -> gap-fill -> normalize -> aggregate ->
 # encode -> (model) -> reward -> replay. See pipeline.PerceptaPipeline.
 from repro.core.frame import FeatureFrame, RawWindow, TickFrame  # noqa: F401
-from repro.core.pipeline import (PerceptaPipeline, PipelineConfig,  # noqa: F401
-                                 PipelineState, init_state, tick)
+from repro.core.pipeline import (DecideBatch, PerceptaPipeline,  # noqa: F401
+                                 PipelineConfig, PipelineState, init_state,
+                                 run_many_decide, tick)

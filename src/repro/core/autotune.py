@@ -11,9 +11,28 @@ of real ``run_many`` dispatches on synthetic windows (deterministic
 contents, window-relative timestamps — the device-staging convention) and
 returns the windows/s-optimal configuration.
 
-Wired as ``PerceptaSystem(scan_k="auto")``; the ``measure`` hook is
-injectable so selection logic is deterministic under test (and so callers
-can swap in e.g. a median-of-N timer on noisy shared hosts).
+Fused decision path: pass ``decide=`` / ``decide_state=`` (the system does
+when ``mode`` is a fused-decide mode) and every grid cell measures the
+FUSED engine — ``run_many_decide`` (pipeline tick + policy + reward +
+replay in one dispatch), sharded when the cell's mesh split is >1 — so the
+tuned (scan_k, mesh) is the argmax of the engine that will actually run.
+
+Two pruning rules keep calibration time off hopeless cells (both
+deterministic under a fixed ``measure`` hook — decisions depend only on
+measured values and grid order):
+
+  * mesh splits whose per-device env count falls below
+    ``min_envs_per_device`` are skipped outright (an E=8 batch spread over
+    8 devices is one env row per chip — all dispatch overhead);
+  * once any measured cell is more than ``prune_factor`` x slower than the
+    incumbent best, the REST of that mesh-split's k column is early-stopped
+    (a split that far off at one K has never been observed to close a
+    >3x gap within the grid's K range).
+
+Skipped cells are recorded on ``TuneResult.pruned`` so calibration logs
+stay auditable. Wired as ``PerceptaSystem(scan_k="auto")``; the ``measure``
+hook is injectable so selection logic is deterministic under test (and so
+callers can swap in e.g. a median-of-N timer on noisy shared hosts).
 """
 from __future__ import annotations
 
@@ -27,13 +46,16 @@ class TuneResult(NamedTuple):
     mesh_devices: int
     best_windows_per_s: float
     grid: tuple               # ((scan_k, mesh_devices, windows_per_s), ...)
+    pruned: tuple = ()        # ((scan_k|None, mesh_devices, reason), ...)
 
     def as_dict(self) -> dict:
         return {"scan_k": self.scan_k, "mesh_devices": self.mesh_devices,
                 "best_windows_per_s": round(self.best_windows_per_s, 1),
                 "grid": [{"scan_k": k, "mesh_devices": n,
                           "windows_per_s": round(w, 1)}
-                         for k, n, w in self.grid]}
+                         for k, n, w in self.grid],
+                "pruned": [{"scan_k": k, "mesh_devices": n, "reason": r}
+                           for k, n, r in self.pruned]}
 
 
 def candidate_device_counts(n_envs: int, n_devices: int) -> list:
@@ -57,7 +79,10 @@ def _default_measure(fn: Callable[[], None], *, reps: int = 3, **_) -> float:
 def tune_scan_params(cfg, k_grid: Sequence[int] = (8, 16, 32),
                      device_counts: Optional[Sequence[int]] = None,
                      reps: int = 3, seed: int = 0, valid_p: float = 0.7,
-                     measure: Optional[Callable] = None) -> TuneResult:
+                     measure: Optional[Callable] = None,
+                     decide=None, decide_state=None,
+                     min_envs_per_device: int = 2,
+                     prune_factor: float = 3.0) -> TuneResult:
     """Measure windows/s over ``scan_k`` x env-mesh-split and pick the best.
 
     ``cfg``: the deployment's :class:`PipelineConfig` (shapes are what make
@@ -65,18 +90,23 @@ def tune_scan_params(cfg, k_grid: Sequence[int] = (8, 16, 32),
     available device count dividing ``cfg.n_envs`` (1 = plain ``scan``;
     >1 = ``scan_sharded`` on an ``env_mesh`` over that many devices).
     ``measure(fn, k=..., n_devices=..., reps=...)`` must return wall seconds
-    for one warmed dispatch; the default times real executions.
+    for one warmed dispatch; the default times real executions. With
+    ``decide``/``decide_state`` the cells run the fused decision engine
+    instead (``run_many_decide``, donated exactly like production — each
+    cell threads fresh copies, so the caller's decide state is untouched).
 
     Selection is the measured-grid argmax (first in grid order on exact
     ties), so the chosen cell is within measurement noise of the grid
-    optimum by construction; determinism under a fixed ``measure`` is
-    covered in tests.
+    optimum by construction; determinism under a fixed ``measure`` —
+    pruning included — is covered in tests.
     """
     import jax
     import numpy as np
 
     from repro.core.frame import make_raw_window
-    from repro.core.pipeline import PerceptaPipeline, init_state
+    from repro.core.pipeline import (PerceptaPipeline, init_state,
+                                     make_run_many_decide_sharded,
+                                     run_many_decide)
     from repro.distribution import sharding as shard_lib
 
     if measure is None:
@@ -84,6 +114,8 @@ def tune_scan_params(cfg, k_grid: Sequence[int] = (8, 16, 32),
     if device_counts is None:
         device_counts = candidate_device_counts(cfg.n_envs,
                                                 len(jax.devices()))
+    assert (decide is None) == (decide_state is None), \
+        "decide and decide_state come as a pair"
     E, S, M = cfg.n_envs, cfg.n_streams, cfg.max_samples
     window_s = cfg.n_ticks * cfg.tick_s
     rng = np.random.RandomState(seed)
@@ -94,24 +126,73 @@ def tune_scan_params(cfg, k_grid: Sequence[int] = (8, 16, 32),
     ts = rng.uniform(0, window_s, (kmax, E, S, M)).astype(np.float32)
     valid = rng.rand(kmax, E, S, M) < valid_p
 
-    grid = []
+    grid, pruned = [], []
+    best_wps = 0.0
     for ndev in device_counts:
-        if ndev == 1:
+        if ndev > 1 and E // ndev < min_envs_per_device:
+            pruned.append((None, int(ndev),
+                           f"envs_per_device<{min_envs_per_device}"))
+            continue
+        if decide is not None:
+            import functools
+
+            from repro import compat
+            # donate like the production engine: a non-donated cell pays
+            # a full replay-ring copy per dispatch (~35 ms at the default
+            # capacity) the real fused engine never pays, which would
+            # skew the argmax toward large K / wrong mesh splits
+            if ndev == 1:
+                engine = compat.jit_donated(
+                    functools.partial(run_many_decide, cfg, decide),
+                    donate_argnums=(0, 1))
+            else:
+                mesh = shard_lib.env_mesh(E, devices=jax.devices()[:ndev])
+                eng, _ = make_run_many_decide_sharded(cfg, decide,
+                                                      decide_state, mesh)
+                engine = compat.jit_donated(eng, donate_argnums=(0, 1))
+        elif ndev == 1:
             pipe = PerceptaPipeline(cfg, mode="scan")
         else:
             mesh = shard_lib.env_mesh(E, devices=jax.devices()[:ndev])
             pipe = PerceptaPipeline(cfg, mode="scan_sharded", mesh=mesh)
-        for k in k_grid:
+        for i, k in enumerate(k_grid):
             raws = make_raw_window(values[:k], ts[:k], valid[:k])
             starts = jax.numpy.zeros((k, E), jax.numpy.float32)
             state = init_state(cfg)
 
-            def fn(pipe=pipe, raws=raws, starts=starts, state=state):
-                _, feats, _ = pipe.run_many(state, raws, starts)
-                jax.block_until_ready(feats.features)
+            if decide is not None:
+                # donation consumes the carries: thread fresh COPIES of
+                # the caller's decide state through a cell-local loop,
+                # exactly like the production Manager (the caller's state
+                # itself is never donated)
+                cell = [state,
+                        jax.tree.map(lambda x: jax.numpy.array(x, copy=True),
+                                     decide_state)]
+
+                def fn(engine=engine, raws=raws, starts=starts, cell=cell):
+                    cell[0], cell[1], outs = engine(cell[0], cell[1], raws,
+                                                    starts)
+                    jax.block_until_ready(outs.rewards)
+            else:
+                def fn(pipe=pipe, raws=raws, starts=starts, state=state):
+                    _, feats, _ = pipe.run_many(state, raws, starts)
+                    jax.block_until_ready(feats.features)
 
             secs = measure(fn, k=k, n_devices=ndev, reps=reps)
-            grid.append((int(k), int(ndev), float(k) / float(secs)))
+            wps = float(k) / float(secs)
+            grid.append((int(k), int(ndev), wps))
+            best_wps = max(best_wps, wps)
+            if wps * prune_factor < best_wps:
+                for k_rest in list(k_grid)[i + 1:]:
+                    pruned.append((int(k_rest), int(ndev),
+                                   f">{prune_factor:g}x_off_incumbent"))
+                break
 
-    best_k, best_n, best_wps = max(grid, key=lambda row: row[2])
-    return TuneResult(best_k, best_n, best_wps, tuple(grid))
+    if not grid:
+        raise ValueError(
+            "tune_scan_params: every requested mesh split was pruned "
+            f"(device_counts={list(device_counts)}, n_envs={E}, "
+            f"min_envs_per_device={min_envs_per_device}; pruned={pruned}). "
+            "Include 1 in device_counts or lower min_envs_per_device.")
+    best_k, best_n, best = max(grid, key=lambda row: row[2])
+    return TuneResult(best_k, best_n, best, tuple(grid), tuple(pruned))

@@ -22,6 +22,25 @@ Three execution modes (the measured §Perf axis on CPU, same math):
     with E/N env rows per chip. CPU testing recipe:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (must be set
     before JAX initializes; ``benchmarks/run.py --host-devices 8``).
+  * ``scan_fused_decide`` — ``run_many_decide``: the SAME K-window scan
+    with the decision path fused into the scan body. Each window's
+    FeatureFrame flows directly into an injected per-window ``decide``
+    step (policy gemm, action validation, reward terms, replay-ring
+    write) without ever leaving the device, and the scan carry becomes
+    ``(PipelineState, decide carry)`` — one donated pytree, one device
+    dispatch per K windows for the WHOLE loop, ingest to banked
+    transition. Host transfer shrinks from the stacked (K, E, F) features
+    + raw + (K, E, S, T) frames to the small per-window outputs
+    (:class:`DecideBatch`: actions, rewards, violation flags and per-env
+    observed/filled/anomalous COUNTS — host metrics divide the exact
+    integer counts, so the fractions match the reference bit for bit).
+    ``scan_fused_decide_sharded`` runs it under ``shard_map`` on the env
+    mesh: the decide carry shards on the env dim exactly like the
+    pipeline state (scalars — have_prev, tick, ring cursor — replicated),
+    closed-over policy weights are replicated, and the decision math is
+    per-env row-wise (reward custom fns must be row-wise too), so no
+    collectives and bit-identity with the unsharded engine hold just like
+    ``scan_sharded``.
 
 All mesh/shard_map spellings route through ``repro.compat`` (JAX 0.4.x ..
 0.7 support matrix in ROADMAP.md).
@@ -250,6 +269,124 @@ def run_many(cfg: PipelineConfig, state: PipelineState, raws: RawWindow,
     return final_state, feats, frames
 
 
+class DecideBatch(NamedTuple):
+    """Per-window outputs of the fused decision scan (leading K axis).
+
+    Everything the Manager's host loop needs, and nothing bigger: the
+    decision outputs are (K, E[, A]) and the pipeline-quality metrics are
+    exact per-env int32 COUNTS over the (S, T) tick grid — the host
+    divides them in float64, reproducing ``np.mean`` over the full frame
+    bit for bit without transferring the (K, E, S, T) frame stack.
+    ``features`` stays on device unless a host sink (LogDB) actually
+    fetches it — JAX only pays the device->host copy per leaf touched.
+    """
+    actions: jax.Array      # (K, E, A) validated actions
+    rewards: jax.Array      # (K, E)
+    per_term: jax.Array     # (K, E, n_terms)
+    violated: jax.Array     # (K, E) bool — pre-clamp envelope violations
+    features: jax.Array     # (K, E, F) — fetched only when a sink needs it
+    observed: jax.Array     # (K, E) int32 counts over (S, T)
+    filled: jax.Array       # (K, E) int32
+    anomalous: jax.Array    # (K, E) int32
+
+
+def run_many_decide(cfg: PipelineConfig, decide, state: PipelineState,
+                    dstate, raws: RawWindow, window_starts):
+    """K windows + K decisions as ONE ``lax.scan``: :func:`run_many` with
+    the decision path fused into the scan body.
+
+    ``decide`` is a ``(step, bank)`` pair (see
+    ``runtime.predictor.DecideFns``): ``step`` runs one window's policy/
+    validation/reward math inside the scan — exactly the per-window (E, F)
+    computation of the reference ``on_tick`` step, so outputs stay
+    bit-identical to the two-dispatch path — and emits that window's
+    replay transition row; ``bank`` then writes all K stacked rows AFTER
+    the scan in one exact ring scatter. Only the small prev/tick part of
+    the decide carry rides the scan (the (E, C, F) replay storage through
+    a scan carry measured a full copy per dispatch — as a plain donated
+    input updated by one scatter, XLA aliases it in place). Returns
+    ``(final_state, final_dcarry, DecideBatch)``.
+    """
+    step, bank = decide
+
+    def body(carry, xs):
+        pstate, dcarry = carry
+        raw, ws = xs
+        new_state, feats, frame = tick(cfg, pstate, raw, ws)
+        new_dcarry, (actions, reward, per_term, violated), trans = step(
+            dcarry, feats)
+        out = DecideBatch(
+            actions=actions, rewards=reward, per_term=per_term,
+            violated=violated, features=feats.features,
+            # exact per-env counts (S*T <= int32 by construction); the
+            # cross-env total is summed host-side so the sharded engine
+            # stays collective-free
+            observed=jnp.sum(frame.observed, axis=(1, 2), dtype=jnp.int32),
+            filled=jnp.sum(frame.filled, axis=(1, 2), dtype=jnp.int32),
+            anomalous=jnp.sum(frame.anomalous, axis=(1, 2), dtype=jnp.int32))
+        return (new_state, new_dcarry), (out, trans)
+
+    # the ring stays OUT of the scan carry: thread the small decide state,
+    # then bank the stacked transitions with one scatter
+    small = dstate._replace(replay=None)
+    (final_state, final_small), (outs, trans) = jax.lax.scan(
+        body, (state, small), (raws, window_starts))
+    final_dcarry = final_small._replace(replay=bank(dstate.replay, trans))
+    return final_state, final_dcarry, outs
+
+
+def make_run_many_decide_sharded(cfg: PipelineConfig, decide, dstate,
+                                 mesh=None):
+    """Env-sharded fused decision engine: :func:`run_many_decide` under
+    ``shard_map`` on the one-axis env mesh.
+
+    The whole fused carry shards on the env dim: pipeline state leaves and
+    decide-carry leaves (prev obs/actions rows, replay ring rows) split on
+    dim 0, the (K, ...) batch and stacked :class:`DecideBatch` outputs on
+    dim 1, and every scalar (``tick_index``, ``have_prev``, the decide
+    tick counter, the ring ``cursor``) replicated — ``sharding.env_specs``
+    resolves all of that by leaf rank. Policy weights enter as closure
+    constants of ``decide`` and are replicated by construction. The
+    decision math must be per-env row-wise (builtin reward terms are;
+    custom fns must not reduce across envs), which keeps the body
+    collective-free and the outputs bit-identical to the unsharded
+    engine. ``dstate`` is only a shape/dtype template for spec probing.
+
+    Build-time trace: probing the output specs runs ``jax.eval_shape``
+    over the fused body HERE, so the decide step (and any model inside
+    it) must be traceable at construction time — a policy closing over
+    host state must have that state populated before the system is built
+    (``examples/serve_edge.py`` seeds its codec norm snapshot first).
+    """
+    from repro.distribution import sharding as shard_lib
+
+    if mesh is None:
+        mesh = shard_lib.env_mesh(cfg.n_envs)
+    fn = functools.partial(run_many_decide, cfg, decide)
+    E, S, M = cfg.n_envs, cfg.n_streams, cfg.max_samples
+    state_s = jax.eval_shape(lambda: init_state(cfg))
+    dstate_s = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        dstate)
+    raw_s = RawWindow(jax.ShapeDtypeStruct((1, E, S, M), jnp.float32),
+                      jax.ShapeDtypeStruct((1, E, S, M), jnp.float32),
+                      jax.ShapeDtypeStruct((1, E, S, M), jnp.bool_))
+    starts_s = jax.ShapeDtypeStruct((1, E), jnp.float32)
+    out_state_s, out_dstate_s, out_batch_s = jax.eval_shape(
+        fn, state_s, dstate_s, raw_s, starts_s)
+    axis = mesh.axis_names[0]
+    in_specs = (shard_lib.env_specs(state_s, 0, axis),
+                shard_lib.env_specs(dstate_s, 0, axis),
+                shard_lib.env_specs(raw_s, 1, axis),
+                shard_lib.env_specs(starts_s, 1, axis))
+    out_specs = (shard_lib.env_specs(out_state_s, 0, axis),
+                 shard_lib.env_specs(out_dstate_s, 0, axis),
+                 shard_lib.env_specs(out_batch_s, 1, axis))
+    sharded = compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
+    return sharded, mesh
+
+
 def make_run_many_sharded(cfg: PipelineConfig, mesh=None):
     """Env-sharded scan engine: :func:`run_many` under ``shard_map``.
 
@@ -301,10 +438,13 @@ class PerceptaPipeline:
     """
 
     def __init__(self, cfg: PipelineConfig, mode: str = "fused",
-                 donate: bool = False, mesh=None):
+                 donate: bool = False, mesh=None, decide=None,
+                 decide_state=None):
         # donate=True requires the caller to treat the passed-in state as
         # consumed (the engine hands back the new state); it is how the
-        # scan engine keeps exactly one live state pytree on device.
+        # scan engine keeps exactly one live state pytree on device. The
+        # fused-decide modes donate BOTH carries (pipeline state + decide
+        # carry) so the replay ring never gets copied between batches.
         self.cfg = cfg
         self.mode = mode
         self.donate = donate
@@ -313,12 +453,22 @@ class PerceptaPipeline:
         # alias their zero buffers, which raw donate_argnums rejects
         self._fused = compat.jit_donated(
             tickf, donate_argnums=(0,) if donate else ())
-        if mode == "scan_sharded":
+        donate_scan = (0,) if donate else ()
+        if mode in ("scan_fused_decide", "scan_fused_decide_sharded"):
+            assert decide is not None and decide_state is not None, \
+                "fused-decide modes need decide= and decide_state="
+            donate_scan = (0, 1) if donate else ()
+            if mode == "scan_fused_decide_sharded":
+                scan_fn, self.mesh = make_run_many_decide_sharded(
+                    cfg, decide, decide_state, mesh)
+            else:
+                scan_fn = functools.partial(run_many_decide, cfg, decide)
+                self.mesh = None
+        elif mode == "scan_sharded":
             scan_fn, self.mesh = make_run_many_sharded(cfg, mesh)
         else:
             scan_fn, self.mesh = functools.partial(run_many, cfg), None
-        self._scan = compat.jit_donated(
-            scan_fn, donate_argnums=(0,) if donate else ())
+        self._scan = compat.jit_donated(scan_fn, donate_argnums=donate_scan)
         # modular: one jit per module, host transitions in between — the
         # architecture exactly as drawn (baseline for §Perf)
         self._m_harm = jax.jit(functools.partial(stage_harmonize, cfg))
@@ -332,10 +482,21 @@ class PerceptaPipeline:
 
     def run_many(self, state, raws: RawWindow, window_starts):
         """Scan-fused execution of K pre-batched windows (one dispatch)."""
+        if self.mode in ("scan_fused_decide", "scan_fused_decide_sharded"):
+            raise RuntimeError("fused-decide modes carry a decide state: "
+                               "use run_many_decide(state, dstate, ...)")
         return self._scan(state, raws, window_starts)
 
+    def run_many_decide(self, state, dstate, raws: RawWindow, window_starts):
+        """Fused pipeline+decision execution of K windows (one dispatch).
+
+        Returns ``(new_state, new_dstate, DecideBatch)``; with
+        ``donate=True`` BOTH input carries are consumed."""
+        return self._scan(state, dstate, raws, window_starts)
+
     def run_tick(self, state, raw: RawWindow, window_start):
-        if self.mode in ("fused", "scan", "scan_sharded"):
+        if self.mode in ("fused", "scan", "scan_sharded",
+                         "scan_fused_decide", "scan_fused_decide_sharded"):
             return self._fused(state, raw, window_start)
         # modular: each stage returns to host before the next is dispatched
         v, obs, ticks = jax.block_until_ready(

@@ -97,6 +97,57 @@ def add_many(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
     return out
 
 
+def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
+              mask=None) -> ReplayBuffer:
+    """Write K stacked ticks as ONE unique-indices scatter (jit-safe).
+
+    Final buffer contents and cursor are bit-identical to K sequential
+    :func:`add` calls under ``mask`` (:func:`add_many` semantics), but the
+    buffer never threads a ``lax.scan`` carry: the fused decision engine
+    measured a full ring copy per dispatch when the (E, C, F) storage rode
+    the scan carry, which grew with capacity and ate the fusion win. Here
+    the ring is an ordinary donated input updated by one scatter, which
+    XLA aliases in place.
+
+    Ring semantics drop out of a pre-reduction instead of write order:
+    masked row j lands at position ``cursor + (#masked rows <= j) - 1``;
+    once K exceeds capacity only the LAST ``capacity`` masked rows are
+    visible after wraparound, so earlier rows are routed to distinct
+    out-of-range slots and dropped by the scatter (``mode="drop"``) —
+    every surviving slot is written exactly once, so ``unique_indices``
+    holds and no ordering ambiguity exists.
+    """
+    K = obs.shape[0]
+    if mask is None:
+        mask = jnp.ones((K,), jnp.bool_)
+    nm = mask.astype(jnp.int32)
+    pos = buf.cursor + jnp.cumsum(nm) - 1      # write position per masked row
+    total = buf.cursor + nm.sum()
+    C = buf.capacity
+    keep = mask & (pos >= total - C)           # last C masked writes survive
+    # dropped rows get distinct out-of-range slots: unique_indices stays a
+    # true promise and mode="drop" discards them
+    slot = jnp.where(keep, jnp.mod(pos, C),
+                     C + jnp.arange(K, dtype=pos.dtype))
+
+    def upd(b, x):
+        # b (E, C, ...), x (K, E, ...) -> rows swap to (E, K, ...)
+        v = jnp.moveaxis(jnp.asarray(x).astype(b.dtype), 0, 1)
+        return b.at[:, slot].set(v, mode="drop", unique_indices=True)
+
+    E = buf.obs.shape[0]
+    tick_b = jnp.broadcast_to(jnp.asarray(tick_idx, jnp.int32)[:, None],
+                              (K, E))
+    return ReplayBuffer(
+        obs=upd(buf.obs, obs),
+        actions=upd(buf.actions, actions),
+        rewards=upd(buf.rewards, rewards),
+        next_obs=upd(buf.next_obs, next_obs),
+        tick_idx=upd(buf.tick_idx, tick_b),
+        cursor=total,
+    )
+
+
 def sample(buf: ReplayBuffer, rng, batch: int):
     """Uniform sample of (env, slot) transitions for retraining (host-side
     entry point: raises on an empty buffer instead of fabricating all-zero

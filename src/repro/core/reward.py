@@ -37,7 +37,16 @@ class RewardTerm:
         bit-identical to K per-window evaluations (the batched Predictor
         consume relies on this). Built-in terms index the last axis
         directly; ``custom`` fns keep their (E, F) contract and run
-        per-window under ``lax.map`` over any leading axes."""
+        per-window under ``lax.map`` over any leading axes.
+
+        Sharding contract: every built-in kind is per-env row-wise, which
+        is what lets the fused decision engine evaluate terms inside the
+        env-sharded window scan (``mode="scan_fused_decide_sharded"``)
+        with no collectives and bit-identical outputs. A ``custom`` fn
+        must honor the same contract — no reductions across the env axis,
+        and any contraction phrased so its rounding is independent of the
+        number of env rows a device holds (see ``linear_policy``'s
+        multiply+reduce dot) — to compose with the sharded modes."""
         f = features[..., self.feature]
         a = actions[..., self.action] if self.action is not None else 0.0
         if self.kind == "linear":

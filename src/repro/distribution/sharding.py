@@ -50,10 +50,15 @@ def env_mesh(n_envs: int, devices=None, axis_name: str = ENV_AXIS) -> Mesh:
 def env_specs(shape_tree, env_axis: int, axis_name: str = ENV_AXIS):
     """PartitionSpec pytree sharding dim ``env_axis`` of every array leaf.
 
-    Leaves with too few dims to carry an env axis (the scalar ``tick_index``
-    counter) are replicated. Used by ``core.pipeline.run_many_sharded`` for
-    both the state pytree (env_axis=0) and the K-leading scan batch /
-    stacked outputs (env_axis=1).
+    Leaves with too few dims to carry an env axis are replicated — that
+    one rank rule places every carry in the system: the pipeline state's
+    scalar ``tick_index``, and the fused decision carry's ``have_prev`` /
+    ``tick`` / replay-ring ``cursor`` scalars all replicate while the
+    per-env rows (state leaves, prev obs/actions, (E, C, ...) replay
+    storage) split on the env dim. Used by
+    ``core.pipeline.make_run_many_sharded`` and
+    ``make_run_many_decide_sharded`` for the carries (env_axis=0) and the
+    K-leading scan batch / stacked outputs (env_axis=1).
     """
     def one(s):
         if s.ndim <= env_axis:

@@ -6,7 +6,7 @@ LM-family model through a TokenCodec, or anything callable on (E, F)
 features. This is the "support any type of AI model that consumes this
 data" requirement.
 
-Two consume paths:
+Three consume paths:
 
   * :meth:`Predictor.on_tick` — one jitted ``_step`` per window. The
     per-window reference path; fused mode and the bit-identity tests use
@@ -22,6 +22,18 @@ Two consume paths:
     Outputs are bit-identical to K sequential ``on_tick`` calls; the
     scan-mode Manager consume uses this path so the decision side of the
     system costs one device dispatch per K windows, like the pipeline.
+  * :meth:`Predictor.make_decide_fn` — the fully fused path
+    (``mode="scan_fused_decide"``): a pure per-window decision step the
+    pipeline scan body calls directly, with :class:`DecideState` (prev
+    obs/actions, have_prev, the exact tick counter, and the
+    :class:`~repro.core.replay.ReplayBuffer`) carried ON DEVICE inside
+    the same donated scan carry as the pipeline state. The Predictor
+    object then holds no live replay/prev state — the system owns the
+    carry, :meth:`absorb_fused` keeps the host-side stats/time mirror in
+    sync per batch, and replay export goes through the system's
+    non-donating snapshot (``PerceptaSystem.export_replay``). The step
+    runs exactly the per-window ops of ``_step``, so fused outputs are
+    bit-identical to both reference consume paths.
 
 Long-horizon time rule (mirrors the scan engine's window-relative rebase):
 the replay buffer stores the EXACT int32 tick index per transition, never a
@@ -33,7 +45,7 @@ ring) and re-attached at export by :meth:`export_replay`.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +65,43 @@ class ActionSpace:
         return len(self.low)
 
 
+class DecideState(NamedTuple):
+    """Device-resident decision carry for the fused scan engine.
+
+    Lives inside the same donated/env-sharded carry pytree as the pipeline
+    state: ``prev_obs``/``prev_actions`` and every replay-ring row shard on
+    the env dim, the scalars (``have_prev``, ``tick``, the ring cursor)
+    replicate. ``tick`` is the EXACT int32 predictor tick index of the
+    next window — the long-horizon time rule's device half; absolute
+    float64 times are reconstructed host-side at export. Only the small
+    prev/tick part rides the per-window ``lax.scan`` carry; the replay
+    ring is written once per batch by the ``bank`` half of
+    :class:`DecideFns` (threading the (E, C, F) storage through the scan
+    carry measured a full ring copy per dispatch).
+    """
+    prev_obs: jax.Array      # (E, F)
+    prev_actions: jax.Array  # (E, A)
+    have_prev: jax.Array     # () bool
+    tick: jax.Array          # () int32
+    replay: rp.ReplayBuffer
+
+
+class DecideFns(NamedTuple):
+    """The fused engine's decision protocol (see ``make_decide_fn``).
+
+    ``step(DecideState, FeatureFrame) -> (DecideState, (actions, reward,
+    per_term, violated), transition)`` runs one window's decision math
+    inside the scan body (the carried ``replay`` field passes through
+    untouched — it may be ``None`` there); ``transition`` is the
+    ``(prev_obs, prev_actions, reward, next_obs, tick, have_prev)`` row
+    the window banks. ``bank(ReplayBuffer, stacked transitions) ->
+    ReplayBuffer`` writes the whole batch after the scan in one exact
+    ring scatter (``replay.add_batch``).
+    """
+    step: Callable
+    bank: Callable
+
+
 class ModelAdapter:
     """Wraps any policy fn(features (E,F)) -> actions (E,A)."""
 
@@ -66,13 +115,25 @@ class ModelAdapter:
 
 def linear_policy(n_features: int, n_actions: int, seed: int = 0,
                   low=-1.0, high=1.0) -> ModelAdapter:
-    """A small deterministic policy standing in for the deployed RL model."""
+    """A small deterministic policy standing in for the deployed RL model.
+
+    The policy dot is phrased as multiply+reduce over F rather than
+    ``feats @ W``: under the env-sharded fused engine each device sees
+    E/N feature rows, and XLA:CPU lowers the (rows, F) x (F, A) dot
+    through row-count-dependent kernels inside the fused scan (1-ulp
+    divergence between the sharded and full-E programs). The reduce
+    form's per-element add order depends only on F, so the same bits come
+    out at every shard size — the property the fused-sharded mode's
+    bit-identity guarantee rests on (a custom model must preserve it too
+    to compose with ``mode="scan_fused_decide_sharded"``).
+    """
     k = jax.random.PRNGKey(seed)
     W = jax.random.normal(k, (n_features, n_actions)) / jnp.sqrt(n_features)
 
     @jax.jit
     def fn(feats):
-        return jnp.tanh(feats @ W) * (high - low) / 2 + (high + low) / 2
+        logits = (feats[..., :, None] * W[None, :, :]).sum(-2)
+        return jnp.tanh(logits) * (high - low) / 2 + (high + low) / 2
 
     return ModelAdapter(fn, "linear_policy")
 
@@ -149,6 +210,73 @@ class Predictor:
                     actions[-1], new_replay)
 
         self._steps = jax.jit(_steps)
+
+    # --- fused decision path (mode="scan_fused_decide") --------------------
+    def decide_state(self) -> DecideState:
+        """Materialize the current decision state as the device carry the
+        fused scan engine threads (and donates) between batches. Taking it
+        hands ownership to the caller: from here on the Predictor's own
+        ``replay``/``_prev`` references are a stale snapshot of this
+        moment — export through the system's non-donating snapshot."""
+        return DecideState(
+            prev_obs=jnp.asarray(self._prev["obs"], jnp.float32),
+            prev_actions=jnp.asarray(self._prev["actions"], jnp.float32),
+            have_prev=jnp.asarray(bool(self._prev["have"])),
+            tick=jnp.asarray(self.stats["ticks"], jnp.int32),
+            replay=self.replay,
+        )
+
+    def make_decide_fn(self) -> DecideFns:
+        """Decision protocol for the fused pipeline scan (:class:`DecideFns`).
+
+        The ``step`` half runs exactly the per-window ops of the jitted
+        ``_step`` (policy on the (E, F) features, validate, rewards on
+        engineering units with the carried prev actions) and emits the
+        window's replay transition row at the carried exact tick index;
+        the ``bank`` half writes the K stacked rows in one unique-indices
+        ring scatter (``replay.add_batch`` — final contents bit-identical
+        to K sequential guarded ``add`` calls, without the ring ever
+        riding the scan carry). Everything is per-env row-wise — both
+        halves run unchanged under the env-sharded ``shard_map`` build
+        (custom reward fns and models must be row-wise too; see
+        ``linear_policy`` for the shard-size-invariant dot phrasing)."""
+        low = jnp.asarray(self.action_space.low, jnp.float32)
+        high = jnp.asarray(self.action_space.high, jnp.float32)
+        model, spec = self.model, self.reward_spec
+
+        def step(carry: DecideState, feats):
+            actions = model(feats.features)
+            actions, violated = validate_actions(actions, low, high)
+            reward, per_term = spec.compute(feats.raw, actions,
+                                            carry.prev_actions)
+            # transition entering this window: only bankable once a
+            # predecessor exists (the mask the bank applies)
+            transition = (carry.prev_obs, carry.prev_actions, reward,
+                          feats.features, carry.tick, carry.have_prev)
+            new = DecideState(prev_obs=feats.features, prev_actions=actions,
+                              have_prev=jnp.ones((), jnp.bool_),
+                              tick=carry.tick + 1, replay=carry.replay)
+            return new, (actions, reward, per_term, violated), transition
+
+        def bank(replay, transitions):
+            obs, actions, rewards, next_obs, tick, mask = transitions
+            return rp.add_batch(replay, obs, actions, rewards, next_obs,
+                                tick, mask)
+
+        return DecideFns(step, bank)
+
+    def absorb_fused(self, tick_times, violated) -> None:
+        """Post-consume host bookkeeping for one fused batch: advance the
+        tick/violation stats and the slot-aligned float64 time mirror in
+        lockstep with the device carry (which advanced by ``len(
+        tick_times)`` inside the dispatch). The mirror stays maintained so
+        mirror-based and reconstructed exports agree; the fused export
+        itself reconstructs times from ``tick_idx`` (see
+        ``PerceptaSystem.export_replay``)."""
+        base = self.stats["ticks"]
+        self._record_times(base, tick_times)
+        self.stats["ticks"] += len(tick_times)
+        self.stats["violations"] += int(np.asarray(violated).sum())
 
     def _record_times(self, base_idx: int, tick_times) -> None:
         """Mirror absolute float64 tick times into the slot-aligned host

@@ -43,6 +43,28 @@ clock-advance/poll/drain sequence the synchronous loop would at the same
 window boundaries (the deterministic batch-epoch handoff), so outputs are
 bit-identical to ``scan`` by construction.
 
+``mode="scan_fused_decide"`` collapses the LAST dispatch boundary: the
+Predictor's per-window step (policy gemm, ``validate_actions``, reward
+terms, ``replay.add``) is traced INTO the pipeline scan body
+(``core.pipeline.run_many_decide``), the decision state
+(``predictor.DecideState``: prev obs/actions, have_prev, exact tick
+counter, the replay ring) joins the pipeline state in one donated device
+carry, and the whole ingest->decide->bank loop costs ONE device dispatch
+per K-window batch. Consume only drains host sinks from the small
+per-window outputs (actions, rewards, violation flags, exact per-env
+observed/filled/anomalous counts); the (K, E, F) feature stack is fetched
+only when a LogDB is attached, and the (K, E, S, T) frames never leave
+the device. ``"scan_fused_decide_sharded"`` runs the fused scan under
+``shard_map`` on the env mesh (decide carry sharded on the env dim,
+policy weights replicated, scalars replicated — collective-free, so
+bit-identical); ``"scan_fused_decide_async"`` /
+``"scan_fused_decide_async_sharded"`` compose with the prefetcher (and,
+like all async modes, do not donate). Accessor rules: the replay ring
+lives in the donated carry, so read it ONLY through
+``system.export_replay(salt)`` / ``snapshot_decide()`` /
+``replay_size()`` — never through ``predictor.replay``, which is a stale
+snapshot of construction time in these modes.
+
 ``scan_k="auto"`` runs ``core.autotune.tune_scan_params`` at construction:
 a short measured grid over windows-per-dispatch x env-mesh split picks the
 windows/s-optimal configuration for this host/device/shape (result kept on
@@ -93,9 +115,21 @@ from repro.runtime.translator import Translator
 
 # Manager-loop mode -> device-pipeline mode: the async modes reuse the scan
 # engines and differ only in how the Manager overlaps host assembly
-_PIPELINE_MODE = {"scan_async": "scan", "scan_async_sharded": "scan_sharded"}
-_SCAN_MODES = ("scan", "scan_sharded", "scan_async", "scan_async_sharded")
-_ASYNC_MODES = ("scan_async", "scan_async_sharded")
+_PIPELINE_MODE = {
+    "scan_async": "scan",
+    "scan_async_sharded": "scan_sharded",
+    "scan_fused_decide_async": "scan_fused_decide",
+    "scan_fused_decide_async_sharded": "scan_fused_decide_sharded",
+}
+_FUSED_DECIDE_MODES = ("scan_fused_decide", "scan_fused_decide_sharded",
+                       "scan_fused_decide_async",
+                       "scan_fused_decide_async_sharded")
+_SCAN_MODES = ("scan", "scan_sharded", "scan_async",
+               "scan_async_sharded") + _FUSED_DECIDE_MODES
+_ASYNC_MODES = ("scan_async", "scan_async_sharded",
+                "scan_fused_decide_async", "scan_fused_decide_async_sharded")
+# pipeline modes whose dispatch runs under shard_map on the env mesh
+_SHARDED_PIPE_MODES = ("scan_sharded", "scan_fused_decide_sharded")
 
 
 @dataclass
@@ -131,6 +165,17 @@ class PerceptaSystem:
         self.cfg = pipeline_cfg
         self.mode = mode
         pipe_mode = _PIPELINE_MODE.get(mode, mode)
+        self.fused_decide = mode in _FUSED_DECIDE_MODES
+        # fused-decide: the decision step is traced into the pipeline scan
+        # and the decision state (prev obs/actions, tick, replay ring)
+        # becomes part of the device carry — the Predictor hands both over
+        # here and only does host bookkeeping (absorb_fused) afterwards
+        decide = predictor.make_decide_fn() if self.fused_decide else None
+        self._dstate = predictor.decide_state() if self.fused_decide else None
+        # predictor tick index of this system's window 0: export-time
+        # reconstruction maps tick idx -> window (idx - base); ticks issued
+        # BEFORE this system keep their host-mirror times
+        self._tick_base = int(predictor.stats["ticks"])
 
         # scan_k="auto": short measured calibration grid over K x mesh split
         self.tuned = None
@@ -139,12 +184,17 @@ class PerceptaSystem:
             from repro.core.autotune import tune_scan_params
             from repro.distribution import sharding as shard_lib
             kw = dict(autotune or {})
-            if pipe_mode != "scan_sharded":
-                # mesh splits only apply to the sharded dispatch
+            if pipe_mode not in _SHARDED_PIPE_MODES:
+                # mesh splits only apply to the sharded dispatches
                 kw.setdefault("device_counts", [1])
+            if self.fused_decide:
+                # tune the engine that will actually run: the fused scan
+                # (pipeline tick + decision step in one dispatch)
+                kw.setdefault("decide", decide)
+                kw.setdefault("decide_state", self._dstate)
             self.tuned = tune_scan_params(pipeline_cfg, **kw)
             scan_k = self.tuned.scan_k
-            if pipe_mode == "scan_sharded":
+            if pipe_mode in _SHARDED_PIPE_MODES:
                 # honor the measured split even when it is 1 device (the
                 # mesh then degenerates to plain scan); leaving mesh=None
                 # would silently shard over ALL devices instead
@@ -164,7 +214,9 @@ class PerceptaSystem:
         # Double-buffering two state pytrees is the async design anyway.
         self.pipeline = PerceptaPipeline(
             pipeline_cfg, mode=pipe_mode,
-            donate=mode in ("scan", "scan_sharded"), mesh=mesh)
+            donate=mode in ("scan", "scan_sharded", "scan_fused_decide",
+                            "scan_fused_decide_sharded"),
+            mesh=mesh, decide=decide, decide_state=self._dstate)
         self.state = self.pipeline.init_state()
         self._prefetcher: Optional[WindowPrefetcher] = None
         self.predictor = predictor
@@ -336,6 +388,9 @@ class PerceptaSystem:
         """Process the next ``k`` windows with ONE device dispatch."""
         bounds = [self.window_bounds(self.window_index + j) for j in range(k)]
         raw, counts = self.assemble_windows(bounds)
+        if self.fused_decide:
+            outs, t_dispatch = self._dispatch_decide(raw, k)
+            return self._consume_decide(bounds, counts, outs, t_dispatch)
         feats, frames, t_dispatch = self._dispatch_scan(raw, k)
         return self._consume_scan(bounds, counts, feats, frames, t_dispatch)
 
@@ -415,6 +470,80 @@ class PerceptaSystem:
             })
         return out
 
+    # --- fused-decide operation ------------------------------------------------
+    def _dispatch_decide(self, raw, k: int):
+        """Launch ONE fused pipeline+decision dispatch over a staged
+        K-window batch: features flow straight into the policy/validate/
+        reward/replay step inside the scan, and BOTH carries (pipeline
+        state + decide state) stay device-resident (donated in the sync
+        modes). No block — consumption blocks."""
+        t_dispatch = time.time()
+        starts = jnp.zeros((k, self.cfg.n_envs), jnp.float32)
+        self.state, self._dstate, outs = self.pipeline.run_many_decide(
+            self.state, self._dstate, raw, starts)
+        return outs, t_dispatch
+
+    def _consume_decide(self, bounds, counts, outs, t_dispatch) -> List[dict]:
+        """Drain host sinks from the SMALL fused outputs.
+
+        The host fetches only actions (K, E, A), rewards (K, E), violation
+        flags and the per-env int32 observed/filled/anomalous counts — the
+        (K, E, F) feature stack is fetched ONLY when a LogDB needs obs
+        rows, and the (K, E, S, T) frames never leave the device (the
+        fractions divide the exact counts, bit-identical to ``np.mean``
+        over the full frame)."""
+        k = len(bounds)
+        actions_b = np.asarray(outs.actions)   # first fetch blocks the batch
+        batch_latency = time.time() - t_dispatch
+        rewards_b = np.asarray(outs.rewards)
+        obs_c = np.asarray(outs.observed)
+        fill_c = np.asarray(outs.filled)
+        anom_c = np.asarray(outs.anomalous)
+        feat_np = np.asarray(outs.features) if self.db is not None else None
+        self.predictor.absorb_fused([b[1] for b in bounds],
+                                    np.asarray(outs.violated))
+        denom = float(self.cfg.n_envs * self.cfg.n_streams * self.cfg.n_ticks)
+        out = []
+        for j, (t_start, t_end) in enumerate(bounds):
+            t_host0 = time.time()
+            actions, rewards = actions_b[j], rewards_b[j]
+            if self.forwarders is not None:
+                self.forwarders.dispatch_window(t_end, actions)
+            if self.db is not None:
+                self.db.append_many(self.env_ids, t_end, feat_np[j], actions,
+                                    rewards)
+            self.window_index += 1
+            latency = batch_latency / k + (time.time() - t_host0)
+            self.metrics["tick_latency_s"].append(latency)
+            self.metrics["ingest_records"].append(counts[j])
+            out.append({
+                "window": self.window_index - 1,
+                "records": counts[j],
+                "latency_s": latency,
+                "mean_reward": float(np.mean(rewards)),
+                # exact integer counts / float64 size == np.mean over the
+                # (E, S, T) bool frame, bit for bit
+                "observed_frac": float(int(obs_c[j].sum()) / denom),
+                "filled_frac": float(int(fill_c[j].sum()) / denom),
+                "anomalous": int(anom_c[j].sum()),
+            })
+        return out
+
+    def _dispatch_batch(self, batch):
+        """Mode-dispatching async helper: launch one assembled batch and
+        return the pending tuple ``_consume_batch`` expects."""
+        k = len(batch.bounds)
+        if self.fused_decide:
+            outs, td = self._dispatch_decide(batch.raw, k)
+            return (batch.bounds, batch.counts, outs, td)
+        feats, frames, td = self._dispatch_scan(batch.raw, k)
+        return (batch.bounds, batch.counts, feats, frames, td)
+
+    def _consume_batch(self, pending) -> List[dict]:
+        if self.fused_decide:
+            return self._consume_decide(*pending)
+        return self._consume_scan(*pending)
+
     def _advance_clock(self, t_end: float):
         if self.manual_time:
             self._manual_t = t_end + 1e-3
@@ -437,6 +566,52 @@ class PerceptaSystem:
         """Donation-safe copy of just the normalizer stats (NormState)."""
         return jax.tree.map(lambda x: jnp.array(x, copy=True),
                             self.state.norm)
+
+    def snapshot_decide(self):
+        """Deep copy of the fused decision carry (``DecideState``), safe to
+        hold across window batches. Fused-decide modes donate the carry —
+        including the replay ring — into every dispatch, so bare
+        ``system._dstate`` leaf references become invalid after the next
+        batch; this is the replay-path twin of :meth:`snapshot_state`."""
+        assert self.fused_decide, "snapshot_decide: not a fused-decide mode"
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), self._dstate)
+
+    def replay_size(self) -> int:
+        """Live transition count of the replay ring, any mode."""
+        buf = (self._dstate.replay if self.fused_decide
+               else self.predictor.replay)
+        return min(int(buf.cursor), buf.capacity)
+
+    def export_replay(self, salt: str) -> dict:
+        """Anonymized chronological replay export, any mode.
+
+        Non-fused modes delegate to ``Predictor.export_replay`` (host
+        float64 mirror re-attached). Fused-decide modes snapshot the
+        device carry WITHOUT donating it and reconstruct the exact float64
+        absolute time of every system-era transition from its stored int32
+        tick index: tick ``idx`` is this system's window ``idx - base``
+        (``base`` = the predictor's tick count at construction), and
+        windows are consecutive by construction, so it ended at
+        ``(t0 + (idx - base) * window_s) + window_s`` — evaluated in
+        float64 with exactly :meth:`window_bounds`' operation order, which
+        makes the reconstruction bit-identical to the mirror the per-step
+        paths maintain. Slots written BEFORE this system existed (a
+        Predictor with prior ``on_tick``/``on_windows`` history) keep
+        their host-mirror times — their windows were not this system's."""
+        if not self.fused_decide:
+            return self.predictor.export_replay(self.env_ids, salt)
+        from repro.core import replay as rp
+        buf = self.snapshot_decide().replay
+        # every env row shares the batch-wide tick index, so row 0 carries
+        # the slot-aligned index ring; dead slots are never selected by the
+        # export's chronological order
+        idx_i = np.asarray(buf.tick_idx[0])
+        idx = (idx_i - self._tick_base).astype(np.float64)
+        recon = (self._t0 + idx * self.window_s) + self.window_s
+        slot_times = np.where(idx_i >= self._tick_base, recon,
+                              self.predictor._replay_times)
+        return rp.export_for_training(buf, self.env_ids, salt,
+                                      slot_times=slot_times)
 
     def run_windows(self, n: int, pump: bool = True) -> List[dict]:
         if self.mode in _ASYNC_MODES:
@@ -499,13 +674,13 @@ class PerceptaSystem:
             # steps are device computations too, and the single device
             # executes its queue in order — dispatching batch j first would
             # make window j-1's small steps wait behind batch j's big scan
-            # (a priority inversion that serializes the whole loop)
+            # (a priority inversion that serializes the whole loop). In the
+            # fused-decide composition consume is pure host-sink draining,
+            # so the order only matters for result sequencing there.
             if pending is not None:
-                out.extend(self._consume_scan(*pending))
-            feats, frames, t_dispatch = self._dispatch_scan(
-                batch.raw, len(batch.bounds))
-            pending = (batch.bounds, batch.counts, feats, frames, t_dispatch)
-        out.extend(self._consume_scan(*pending))
+                out.extend(self._consume_batch(pending))
+            pending = self._dispatch_batch(batch)
+        out.extend(self._consume_batch(pending))
         return out
 
     def stats(self) -> dict:

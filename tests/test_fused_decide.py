@@ -1,0 +1,377 @@
+"""Device-resident decision path (``mode="scan_fused_decide"``).
+
+The fused engine runs pipeline tick + policy + validation + reward +
+replay write in ONE ``lax.scan`` dispatch per K-window batch, carrying
+``(PipelineState, DecideState)`` as a single donated (and, sharded,
+env-split) pytree. Everything the host can observe — window results,
+forwarder sinks, DB rows, predictor stats, the replay export — must be
+bit-identical to the PR 4 two-dispatch reference (``mode="scan"`` with
+``batched_consume=True``), across batch splits, replay-ring wraparound,
+1- and 8-device meshes, large E, and long horizons (t0 = 2^24 with the
+float64 time reconstruction from exact int32 tick indices).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PipelineConfig
+from repro.core import pipeline as pl
+from repro.core.frame import make_raw_window
+from repro.core.reward import energy_reward_spec
+from repro.runtime.db import LogDB
+from repro.runtime.forwarder import Forwarder, ForwarderHub
+from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+from repro.runtime.receivers import SimulatedDevice
+from repro.runtime.system import PerceptaSystem, SourceSpec
+
+T0_FAR = float(2 ** 24)     # float32 absolute seconds quantize to >=2s here
+
+FUSED_MODES = ("scan_fused_decide", "scan_fused_decide_sharded",
+               "scan_fused_decide_async", "scan_fused_decide_async_sharded")
+
+
+def _system(mode, scan_k=3, cap=16, tmp_db=None, t0=0.0, tick_s=60.0,
+            forwarders=True, **kw):
+    srcs = [
+        SourceSpec("meter", "mqtt", SimulatedDevice("grid_kw", 60.0,
+                                                    base=3.0, seed=1)),
+        SourceSpec("price", "http", SimulatedDevice("price_eur", 300.0,
+                                                    base=0.2, amplitude=0.05,
+                                                    seed=2)),
+    ]
+    cfg = PipelineConfig(n_envs=2, n_streams=2, n_ticks=8, tick_s=tick_s,
+                         max_samples=32)
+    pred = Predictor(linear_policy(2, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     2, cfg.n_features, replay_capacity=cap)
+    hub = ForwarderHub([Forwarder("hvac", "mqtt", [0]),
+                        Forwarder("ev", "amqp", [1])]) if forwarders else None
+    db = LogDB(tmp_db, salt="x") if tmp_db else None
+    return PerceptaSystem(["bldg-0", "bldg-1"], srcs, cfg, pred,
+                          forwarders=hub, db=db, speedup=5000.0,
+                          manual_time=True, mode=mode, scan_k=scan_k,
+                          t0=t0, **kw)
+
+
+def _strip(results):
+    return [{k: v for k, v in r.items() if k != "latency_s"}
+            for r in results]
+
+
+def _rows(db):
+    return [{k: v for k, v in row.items() if k != "logged_at"}
+            for _, row in db.read_from()]
+
+
+def _assert_export_equal(a: dict, b: dict):
+    assert a["env_ids"] == b["env_ids"]
+    for k in ("obs", "actions", "rewards", "next_obs", "tick_idx", "times"):
+        assert (np.asarray(a[k]) == np.asarray(b[k])).all(), k
+
+
+# --------------------------------------------------------------------------
+# System level: every composing mode == the PR 4 batched-consume reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", FUSED_MODES)
+def test_fused_decide_matches_batched_consume_reference(mode, tmp_path):
+    # 7 windows over scan_k=3: two full batches + a ragged tail; the
+    # in-process sharded modes run the degenerate 1-device mesh (the real
+    # 8-device mesh is the subprocess test below)
+    ref = _system("scan", tmp_db=str(tmp_path / "ref"),
+                  batched_consume=True)
+    fus = _system(mode, tmp_db=str(tmp_path / "fus"))
+    rr, rf = ref.run_windows(7), fus.run_windows(7)
+    ref.stop(), fus.stop()
+    assert _strip(rr) == _strip(rf)
+    # identical decision delivery: every forwarder sink + stats
+    for fa, fb in zip(ref.forwarders.forwarders, fus.forwarders.forwarders):
+        assert fa.sink == fb.sink and fa.stats == fb.stats
+    # identical DB rows — the fused path fetches the (K, E, F) features
+    # only because a LogDB is attached
+    assert _rows(ref.db) == _rows(fus.db)
+    # host-side predictor bookkeeping advanced in lockstep
+    assert ref.predictor.stats == fus.predictor.stats
+    # replay export: mirror-reattached (reference) vs snapshot +
+    # tick_idx->float64 reconstruction (fused) agree bit for bit
+    _assert_export_equal(ref.export_replay("s"), fus.export_replay("s"))
+    ref.db.close(), fus.db.close()
+
+
+def test_fused_decide_split_invariance():
+    """21 windows as 21x(K=1), 3x(K=7), and scan_k=5 ragged batches —
+    identical results and replay everywhere (the donated carry threads
+    through batch boundaries exactly like the host-side _prev did)."""
+    outs, exports = [], []
+    for k in (1, 7, 5):
+        s = _system("scan_fused_decide", scan_k=k, forwarders=False, cap=64)
+        outs.append(_strip(s.run_windows(21)))
+        exports.append(s.export_replay("s"))
+        s.stop()
+    # per-window `records` attribution follows the drain schedule (scan_k=1
+    # drains every window, scan_k=7 once per batch — the documented scan
+    # caveat); every decision/pipeline output must be split-invariant and
+    # the ingest totals must agree
+    norecs = [[{k: v for k, v in r.items() if k != "records"} for r in o]
+              for o in outs]
+    assert norecs[0] == norecs[1] == norecs[2]
+    totals = [sum(r["records"] for r in o) for o in outs]
+    assert totals[0] == totals[1] == totals[2]
+    _assert_export_equal(exports[0], exports[1])
+    _assert_export_equal(exports[0], exports[2])
+
+
+def test_fused_decide_replay_wraparound_k_exceeds_capacity(tmp_path):
+    """scan_k=7 against a capacity-4 ring: a single fused batch overwrites
+    the whole ring (K > capacity), and repeated batches keep wrapping —
+    cursor semantics must stay bit-identical to the sequential reference,
+    and the export must come back rolled to chronological order."""
+    ref = _system("scan", cap=4, scan_k=7, tmp_db=str(tmp_path / "ref"))
+    fus = _system("scan_fused_decide", cap=4, scan_k=7,
+                  tmp_db=str(tmp_path / "fus"))
+    rr, rf = ref.run_windows(11), fus.run_windows(11)
+    ref.stop(), fus.stop()
+    assert _strip(rr) == _strip(rf)
+    assert _rows(ref.db) == _rows(fus.db)
+    ea, eb = ref.export_replay("s"), fus.export_replay("s")
+    _assert_export_equal(ea, eb)
+    # 11 ticks -> 10 transitions through a 4-slot ring: live rows are the
+    # last 4, strictly chronological after the roll
+    assert (eb["tick_idx"][0] == np.arange(7, 11)).all()
+    assert (np.diff(eb["times"][0]) > 0).all()
+    assert ref.replay_size() == fus.replay_size() == 4
+    ref.db.close(), fus.db.close()
+
+
+def test_fused_decide_export_exact_at_long_horizon():
+    """t0 = 2^24 with sub-second windows: absolute float32 times collapse
+    (regression premise), but the fused export's float64 reconstruction
+    from the stored int32 tick indices reproduces the exact window ends —
+    and matches the reference predictor's host-mirror export bit for
+    bit."""
+    ref = _system("scan", t0=T0_FAR, tick_s=0.1, forwarders=False)
+    fus = _system("scan_fused_decide", t0=T0_FAR, tick_s=0.1,
+                  forwarders=False)
+    assert _strip(ref.run_windows(6, pump=False)) \
+        == _strip(fus.run_windows(6, pump=False))
+    ends = np.asarray([ref.window_bounds(j)[1] for j in range(6)],
+                      np.float64)
+    assert len(np.unique(ends.astype(np.float32))) < 6   # premise
+    ea, eb = ref.export_replay("s"), fus.export_replay("s")
+    _assert_export_equal(ea, eb)
+    assert (eb["times"][0] == ends[1:]).all()
+    assert (np.diff(eb["times"][0]) > 0).all()
+    ref.stop(), fus.stop()
+
+
+def test_fused_decide_export_with_pre_system_predictor_history(rng):
+    """A Predictor that already consumed windows BEFORE the system exists:
+    the fused export must keep the host-mirror times for those pre-system
+    slots and offset the reconstruction by the construction-time tick
+    base — matching the reference mirror export bit for bit."""
+    def mk(mode):
+        srcs = [SourceSpec("meter", "mqtt",
+                           SimulatedDevice("grid_kw", 60.0, base=3.0,
+                                           seed=1)),
+                SourceSpec("price", "http",
+                           SimulatedDevice("price_eur", 300.0, base=0.2,
+                                           amplitude=0.05, seed=2))]
+        cfg = PipelineConfig(n_envs=2, n_streams=2, n_ticks=8, tick_s=60.0,
+                             max_samples=32)
+        pred = Predictor(
+            linear_policy(2, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            2, cfg.n_features, replay_capacity=16)
+        # prior host-side history at arbitrary (non-window-grid) times
+        feats = rng.normal(0, 1, (3, 2, cfg.n_features)).astype(np.float32)
+        pred.on_windows(feats, [7.5, 11.25, 200.0])
+        return PerceptaSystem(["bldg-0", "bldg-1"], srcs, cfg, pred,
+                              speedup=5000.0, manual_time=True, mode=mode,
+                              scan_k=3)
+
+    rng_state = rng.get_state()
+    ref = mk("scan")
+    rng.set_state(rng_state)      # identical prior history for both
+    fus = mk("scan_fused_decide")
+    assert _strip(ref.run_windows(5)) == _strip(fus.run_windows(5))
+    ea, eb = ref.export_replay("s"), fus.export_replay("s")
+    _assert_export_equal(ea, eb)
+    # premise: both eras present in the export (tick 0's transition is
+    # masked — no predecessor — so the prior-era times are ticks 1 and 2)
+    assert eb["tick_idx"][0].min() < 3 <= eb["tick_idx"][0].max()
+    assert 11.25 in eb["times"][0] and 200.0 in eb["times"][0]
+    ref.stop(), fus.stop()
+
+
+def test_fused_decide_accessors_and_guards():
+    s = _system("scan_fused_decide", forwarders=False)
+    s.run_windows(4)
+    # snapshot_decide is a deep copy: safe across the donated dispatches
+    snap = s.snapshot_decide()
+    s.run_windows(3)
+    assert int(snap.tick) == 4 and int(s.snapshot_decide().tick) == 7
+    assert s.replay_size() == 6            # 7 ticks -> 6 transitions
+    # the raw scan entry point refuses fused mode (wrong carry signature)
+    with pytest.raises(RuntimeError, match="run_many_decide"):
+        s.pipeline.run_many(s.state, None, None)
+    # non-fused systems reject the fused-only accessor
+    ref = _system("scan", forwarders=False)
+    with pytest.raises(AssertionError):
+        ref.snapshot_decide()
+    s.stop(), ref.stop()
+
+
+# --------------------------------------------------------------------------
+# replay.add_batch: the fused engine's one-scatter ring write
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,cap", [(3, 8), (8, 8), (11, 4), (21, 4)])
+def test_add_batch_matches_sequential_adds(K, cap, rng):
+    """One unique-indices scatter == K guarded sequential add() calls bit
+    for bit — masked rows, exact cursor advance, and K > capacity
+    wraparound where only the last `capacity` masked writes survive."""
+    from repro.core import replay as rp
+
+    E, F, A = 3, 4, 2
+    obs = rng.normal(0, 1, (K, E, F)).astype(np.float32)
+    acts = rng.normal(0, 1, (K, E, A)).astype(np.float32)
+    rews = rng.normal(0, 1, (K, E)).astype(np.float32)
+    nxt = rng.normal(0, 1, (K, E, F)).astype(np.float32)
+    idx = np.arange(K, dtype=np.int32)
+    mask = rng.rand(K) > 0.3
+    a = rp.init(E, cap, F, A)
+    for j in range(K):
+        if mask[j]:
+            a = rp.add(a, obs[j], acts[j], rews[j], nxt[j], idx[j])
+    b = rp.add_batch(rp.init(E, cap, F, A), obs, acts, rews, nxt, idx,
+                     mask=jnp.asarray(mask))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    # and consecutive batches across the same ring (cursor mid-stream)
+    a2 = rp.add_many(a, obs, acts, rews, nxt, idx + K)
+    b2 = rp.add_batch(b, obs, acts, rews, nxt, idx + K)
+    for x, y in zip(jax.tree.leaves(a2), jax.tree.leaves(b2)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+# --------------------------------------------------------------------------
+# Engine level: large-E smoke cell (E=256 — the per-device regime the
+# benchmarked cells target)
+# --------------------------------------------------------------------------
+
+def test_fused_decide_large_e_engine_identity():
+    import functools
+
+    E, S, M, T, K = 256, 8, 16, 8, 4
+    cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    rng = np.random.RandomState(0)
+    raws = make_raw_window(
+        rng.normal(5, 2, (K, E, S, M)).astype(np.float32),
+        rng.uniform(0, T * 60, (K, E, S, M)).astype(np.float32),
+        rng.rand(K, E, S, M) > 0.3)
+    starts = jnp.zeros((K, E), jnp.float32)
+
+    def mkp():
+        return Predictor(
+            linear_policy(cfg.n_features, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            E, cfg.n_features, replay_capacity=32)
+
+    # reference: two dispatches (pipeline scan, then on_windows)
+    p_ref = mkp()
+    pipe = pl.PerceptaPipeline(cfg, mode="scan")
+    _, feats, frames = pipe.run_many(pl.init_state(cfg), raws, starts)
+    acts, rews, _ = p_ref.on_windows(feats.features,
+                                     [T * 60.0 * (j + 1) for j in range(K)],
+                                     raw=feats.raw)
+    # fused: one dispatch, decide state carried on device
+    p_fus = mkp()
+    engine = jax.jit(functools.partial(pl.run_many_decide, cfg,
+                                       p_fus.make_decide_fn()))
+    _, dstate, outs = engine(pl.init_state(cfg), p_fus.decide_state(),
+                             raws, starts)
+    assert (np.asarray(outs.actions) == acts).all()
+    assert (np.asarray(outs.rewards) == rews).all()
+    for x, y in zip(jax.tree.leaves(p_ref.replay),
+                    jax.tree.leaves(dstate.replay)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    # the count outputs reproduce np.mean over the frames exactly
+    obs_np = np.asarray(frames.observed)
+    got = np.asarray(outs.observed)
+    for j in range(K):
+        assert float(int(got[j].sum()) / float(E * S * T)) \
+            == float(obs_np[j].mean())
+
+
+# --------------------------------------------------------------------------
+# Real multi-device mesh (subprocess: the XLA flag must precede JAX init)
+# --------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = """
+import numpy as np
+from repro.core import PipelineConfig
+from repro.core.reward import energy_reward_spec
+from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+from repro.runtime.receivers import SimulatedDevice
+from repro.runtime.system import PerceptaSystem, SourceSpec
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+
+def mk(mode):
+    srcs = [SourceSpec("meter", "mqtt",
+                       SimulatedDevice("grid_kw", 60.0, base=3.0, seed=1)),
+            SourceSpec("price", "http",
+                       SimulatedDevice("price_eur", 300.0, base=0.2,
+                                       amplitude=0.05, seed=2))]
+    cfg = PipelineConfig(n_envs=8, n_streams=2, n_ticks=4, tick_s=60.0,
+                         max_samples=16)
+    pred = Predictor(linear_policy(2, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     8, cfg.n_features, replay_capacity=8)
+    return PerceptaSystem([f"b{i}" for i in range(8)], srcs, cfg, pred,
+                          speedup=5000.0, manual_time=True, mode=mode,
+                          scan_k=3)
+
+strip = lambda rs: [{k: v for k, v in r.items() if k != "latency_s"}
+                    for r in rs]
+ref = mk("scan")
+rr = strip(ref.run_windows(11))          # ring wraps: 10 adds, capacity 8
+ea = ref.export_replay("s")
+for mode in ("scan_fused_decide_sharded", "scan_fused_decide_async_sharded"):
+    s = mk(mode)
+    assert dict(s.pipeline.mesh.shape) == {"data": 8}, s.pipeline.mesh
+    assert strip(s.run_windows(11)) == rr, mode
+    eb = s.export_replay("s")
+    assert ea["env_ids"] == eb["env_ids"]
+    for k in ("obs", "actions", "rewards", "next_obs", "tick_idx", "times"):
+        assert (np.asarray(ea[k]) == np.asarray(eb[k])).all(), (mode, k)
+    s.stop()
+print("FUSED_SHARDED_OK")
+"""
+
+
+def test_fused_decide_sharded_multi_device_bit_identical():
+    """Real 8-device forced CPU mesh: the fused carry (pipeline state +
+    decide state + replay ring) env-sharded over 8 chips, with ring
+    wraparound, == plain scan + batched consume on one device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "FUSED_SHARDED_OK" in out.stdout

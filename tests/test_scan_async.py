@@ -261,6 +261,84 @@ def test_candidate_device_counts_divisibility():
     assert candidate_device_counts(6, 4) == [1, 2, 3]
 
 
+def test_autotuner_floor_prunes_starved_mesh_splits():
+    """Splits below min_envs_per_device never measure (an E=8 batch over 8
+    devices is one env row per chip — pure dispatch overhead), and the
+    skip is recorded on TuneResult.pruned."""
+    calls = []
+
+    def measure(fn, *, k, n_devices, reps=3):
+        calls.append((k, n_devices))
+        return 0.001 * k
+
+    cfg = PipelineConfig(n_envs=8, n_streams=2, n_ticks=8, tick_s=60.0,
+                         max_samples=32)
+    res = tune_scan_params(cfg, k_grid=(2, 4), device_counts=[1, 4, 8],
+                           measure=measure)
+    assert all(n != 8 for _, n in calls)
+    assert (None, 8, "envs_per_device<2") in res.pruned
+    assert {n for _, n, _ in res.grid} == {1, 4}
+    # the floor is a knob: relaxing it restores the split
+    res2 = tune_scan_params(cfg, k_grid=(2,), device_counts=[1, 8],
+                            measure=measure, min_envs_per_device=1)
+    assert res2.pruned == () and {n for _, n, _ in res2.grid} == {1, 8}
+
+
+def test_autotuner_early_stops_cells_far_off_incumbent():
+    """A cell >prune_factor x slower than the incumbent stops the rest of
+    its mesh-split column; selection stays deterministic under the
+    injected timer (pruned set included)."""
+    def measure(fn, *, k, n_devices, reps=3):
+        if n_devices == 2:
+            return 1.0          # 2 w/s at k=2: hopeless split
+        return {2: 0.004, 4: 0.006}[k]
+
+    cfg = PipelineConfig(n_envs=4, n_streams=2, n_ticks=8, tick_s=60.0,
+                         max_samples=32)
+    a = tune_scan_params(cfg, k_grid=(2, 4), device_counts=[1, 2],
+                         measure=measure)
+    b = tune_scan_params(cfg, k_grid=(2, 4), device_counts=[1, 2],
+                         measure=measure)
+    assert a == b
+    # ndev=2 measured only at k=2; k=4 early-stopped
+    assert {(k, n) for k, n, _ in a.grid} == {(2, 1), (4, 1), (2, 2)}
+    assert a.pruned == ((4, 2, ">3x_off_incumbent"),)
+    assert a.scan_k == 4 and a.mesh_devices == 1
+
+
+def test_autotuner_fused_decide_grid_measures_fused_engine():
+    """With decide=/decide_state= every cell runs the fused engine; the
+    caller's decide state is never donated, so tuning leaves it intact."""
+    import jax
+    import numpy as np
+
+    cfg = PipelineConfig(n_envs=2, n_streams=2, n_ticks=4, tick_s=60.0,
+                         max_samples=16)
+    pred = Predictor(linear_policy(2, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     2, cfg.n_features, replay_capacity=8)
+    dstate = pred.decide_state()
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), dstate)
+    res = tune_scan_params(cfg, k_grid=(2, 4), device_counts=[1], reps=1,
+                           decide=pred.make_decide_fn(), decide_state=dstate)
+    assert {(k, n) for k, n, _ in res.grid} == {(2, 1), (4, 1)}
+    assert all(w > 0 for _, _, w in res.grid)
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(dstate)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_system_scan_k_auto_fused_decide_runs_tuned():
+    """scan_k="auto" composes with the fused-decide mode end to end and
+    the tuned system stays bit-identical to the scan reference."""
+    sys_ = _system("scan_fused_decide", scan_k="auto",
+                   autotune=dict(k_grid=(2, 4, 8), measure=_fake_measure))
+    assert sys_.scan_k == 4
+    ref = _strip(_system("scan", scan_k=4).run_windows(5))
+    assert _strip(sys_.run_windows(5)) == ref
+    sys_.stop()
+
+
 def test_system_scan_k_auto_picks_measured_optimum():
     sys_ = _system("scan_async",
                    scan_k="auto",
