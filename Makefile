@@ -12,10 +12,18 @@
 # (report-only: single-run numbers drift on shared boxes).
 PY ?= python
 
-.PHONY: test bench-smoke bench-pr2 bench-pr3 bench-pr4 bench-pr5 ci
+.PHONY: test lint bench-smoke bench-pr2 bench-pr3 bench-pr4 bench-pr5 \
+	bench-pr6 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# invariant gate (PR 6): the AST lint over src/examples/benchmarks plus the
+# jaxpr contract checker over every builtin policy/reward/decide path; rule
+# catalog in ROADMAP.md ("Invariant catalog") and
+# `python -m repro.analysis.lint --list-rules`
+lint:
+	PYTHONPATH=src $(PY) -m repro.analysis.lint --jaxpr-builtins
 
 # CI pass: writes BENCH_smoke.json (untracked scratch) so repeated CI runs
 # never clobber the committed BENCH_prN.json trajectory records, then
@@ -50,4 +58,11 @@ bench-pr5:
 		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|autotune|columnar" \
 		--json BENCH_pr5.json
 
-ci: test bench-smoke
+# PR 6: the construction-time contract-check overhead cell next to the
+# scan-engine trajectory cells
+bench-pr6:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|autotune|columnar|contract_check" \
+		--json BENCH_pr6.json
+
+ci: lint test bench-smoke

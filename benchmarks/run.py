@@ -936,6 +936,93 @@ def bench_fused_decide(quick=False):
          f"bit_identical-to-fused {sh_ident}")
 
 
+def bench_contract_check(quick=False):
+    """Construction-overhead guard for the PR 6 invariant gate: the jaxpr
+    contract check that ``PerceptaSystem`` runs for fused/``_sharded``
+    modes must add <1% to standing a fused system up (construction through
+    the first K-batch dispatch — bare ``__init__`` is single-digit ms, so
+    the meaningful denominator is the time to a RUNNING system, which the
+    first dispatch's compile dominates).
+
+    Two estimators, both min-of-reps (shared-box robust):
+
+    * direct — ``analysis.check_system`` on a live system's freshly built
+      ``DecideFns`` (fresh closures, so no trace-cache hits: exactly the
+      cold construction-time cost). This is the asserted number.
+    * paired — interleaved ``contract_check=True`` vs ``False``
+      construction-to-first-dispatch legs, reported for context (its
+      delta is compile-time noise plus the check).
+    """
+    import time as _time
+
+    from repro import analysis
+    from repro.core import PipelineConfig
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.predictor import (ActionSpace, Predictor,
+                                         linear_policy)
+    from repro.runtime.receivers import SimulatedDevice
+    from repro.runtime.system import PerceptaSystem, SourceSpec
+
+    # the fused acceptance regime (same shapes as the fused_decide cell)
+    K, E, S, T, M, CAP = 32, 256, 8, 8, 16, 4096
+
+    def stand_up(check):
+        srcs = [SourceSpec(f"s{i}", "mqtt",
+                           SimulatedDevice(f"st{i}", 60.0, base=3.0, seed=i))
+                for i in range(S)]
+        cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                             max_samples=M)
+        pred = Predictor(
+            linear_policy(S, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            E, cfg.n_features, replay_capacity=CAP)
+        t0 = _time.perf_counter()
+        s = PerceptaSystem([f"b{i}" for i in range(E)], srcs, cfg, pred,
+                           speedup=1e9, manual_time=True,
+                           mode="scan_fused_decide", scan_k=K,
+                           contract_check=check)
+        s.run_windows(K)
+        return s, _time.perf_counter() - t0
+
+    stand_up(True)[0].stop()      # process warmup (imports, jit plumbing)
+    reps = 2 if quick else 3
+    base, checked, direct = [], [], []
+    for _ in range(reps):
+        s, dt = stand_up(False)
+        base.append(dt)
+        # cold check cost on THIS system: fresh DecideFns closures miss
+        # every trace cache, reproducing the construction-time call
+        d = s.predictor.make_decide_fn()
+        t0 = _time.perf_counter()
+        analysis.check_system(s.predictor, decide=d, dstate=s._dstate,
+                              sharded=False)
+        direct.append(_time.perf_counter() - t0)
+        s.stop()
+        s, dt = stand_up(True)
+        checked.append(dt)
+        s.stop()
+
+    check_ms = min(direct) * 1e3
+    base_s = min(base)
+    pct = 100.0 * min(direct) / base_s
+    paired_pct = 100.0 * (min(checked) - base_s) / base_s
+    SUMMARY["contract_check"] = {
+        "check_ms": round(check_ms, 1),
+        "standup_s": round(base_s, 3),
+        "overhead_pct": round(pct, 3),
+        "paired_pct": round(paired_pct, 3),
+    }
+    _row(f"contract_check_K{K}_E{E}", check_ms * 1e3,
+         f"{check_ms:.1f} ms cold check | {pct:.2f}% of the {base_s:.2f}s "
+         f"construction-to-first-dispatch standup (paired delta "
+         f"{paired_pct:+.2f}%) | budget <1%")
+    assert pct < 1.0, (
+        f"construction-time contract check costs {pct:.2f}% of fused-mode "
+        f"system standup ({check_ms:.1f} ms / {base_s:.2f} s) — over the "
+        "1% budget")
+
+
 def bench_autotune(quick=False):
     import jax
 
@@ -1253,9 +1340,9 @@ def bench_roofline(quick=False):
 
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
        bench_scan_engine, bench_scan_sharded, bench_scan_async,
-       bench_predictor_batch, bench_fused_decide, bench_autotune,
-       bench_stage_breakdown, bench_deployment, bench_serving,
-       bench_kernels, bench_roofline]
+       bench_predictor_batch, bench_fused_decide, bench_contract_check,
+       bench_autotune, bench_stage_breakdown, bench_deployment,
+       bench_serving, bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
 # tick-latency axes, the scan-engine acceptance cells (incl. the sharded
@@ -1264,7 +1351,7 @@ ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
 # autotuner grid, and the columnar-ingest cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
          bench_scan_async, bench_predictor_batch, bench_fused_decide,
-         bench_autotune, bench_columnar_ingest]
+         bench_contract_check, bench_autotune, bench_columnar_ingest]
 
 
 def main() -> None:

@@ -1,0 +1,30 @@
+"""Static analysis for Percepta's documented invariants (ROADMAP item 2).
+
+Two engines, one registry:
+
+  * :mod:`repro.analysis.jaxpr_check` — traces a policy / custom reward fn /
+    ``DecideFns.step`` to a closed jaxpr and verifies, WITHOUT executing it,
+    the contracts the sharded/fused engines rest on: no cross-env
+    contractions or reductions (the ``linear_policy`` dot-phrasing rule),
+    no collectives in shard_map-bound fns, no float32 narrowing of
+    absolute-time values (the t~2^24 s quantization class fixed in PR 3/4),
+    and no host callbacks hiding inside scan bodies.
+    ``PerceptaSystem`` runs :func:`check_system` at construction for the
+    ``*_sharded`` and fused-decide modes; ``RewardSpec`` runs
+    :func:`check_reward_terms` on custom fns at spec construction.
+
+  * :mod:`repro.analysis.lint` — an AST lint over the repo source enforcing
+    the host-side invariants (compat routing, snapshot accessors, async
+    donation, one-lock-per-call).  CLI: ``python -m repro.analysis.lint``.
+
+The rule catalog lives in :mod:`repro.analysis.contracts` and is mirrored in
+ROADMAP.md ("Invariant catalog").
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    ContractViolation, Violation, JAXPR_RULES, LINT_RULES,
+    TAG_ENV, TAG_TIME,
+)
+from repro.analysis.jaxpr_check import (  # noqa: F401
+    Rules, check_fn, check_policy, check_reward_fn, check_reward_terms,
+    check_decide_fns, check_system, check_builtins,
+)

@@ -1,0 +1,113 @@
+"""Contract/rule registry shared by the jaxpr checker and the AST lint.
+
+Every rule enforced anywhere in :mod:`repro.analysis` is declared here with
+a one-line statement of the invariant, so the ROADMAP "Invariant catalog"
+section, ``python -m repro.analysis.lint --list-rules`` and the diagnostics
+all speak the same names.  Registering a new rule means: add its id +
+description to :data:`JAXPR_RULES` or :data:`LINT_RULES`, implement it in
+the matching engine (a primitive check in ``jaxpr_check._check_eqn`` /
+propagation table, or an AST visitor in ``lint``), add a bad/good fixture
+pair to ``tests/test_analysis.py``, and mirror the row in ROADMAP.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# provenance tags the jaxpr checker propagates through the eqn graph
+TAG_ENV = "env"        # dimension tag: this axis indexes environments
+TAG_TIME = "abs-time"  # value tag: absolute time (seconds since epoch /
+                       # exact tick index), quantizes in float32 past ~2^24
+
+# --- jaxpr contract rules (traced-program invariants) -----------------------
+JAXPR_RULES = {
+    "env-contraction":
+        "no dot_general/conv contracts over the env axis — cross-env math "
+        "diverges between sharded and unsharded programs",
+    "env-gemm-rows":
+        "env rows must not feed a dot_general/conv at all: XLA:CPU lowers "
+        "(rows, F) gemms through row-count-dependent kernels (1-ulp drift "
+        "per shard size) — phrase per-env dots as multiply+reduce over "
+        "features (see runtime.predictor.linear_policy)",
+    "env-reduce":
+        "no reduction (sum/mean/max/argmax/cumsum/sort/top_k) along the env "
+        "axis — decision math must be per-env row-wise",
+    "collective":
+        "no collectives (psum/all_gather/ppermute/axis_index/...) in "
+        "shard_map-bound fns — the sharded engines are collective-free by "
+        "contract and bit-identical to the unsharded build",
+    "time-cast":
+        "no float32 (or narrower) cast of an absolute-time value — float32 "
+        "absolute seconds/ticks quantize past t~2^24 (the PR 3 collapse); "
+        "rebase to window-relative (subtract a time) before narrowing",
+    "callback-in-scan":
+        "no host callbacks (pure_callback/io_callback/debug.print) inside "
+        "scan/while bodies — they hide a host sync in the fused hot loop",
+    "reward-shape":
+        "custom reward fns return one reward per env row: (E,) for (E, F) "
+        "features",
+}
+
+# --- AST lint rules (host-code invariants) ----------------------------------
+LINT_RULES = {
+    "jax-version-branch":
+        "no jax.__version__ branches outside repro/compat.py — every "
+        "version seam routes through the compat layer (metadata uses are "
+        "fine)",
+    "jax-experimental-outside-compat":
+        "no jax.experimental imports/attributes outside repro/compat.py "
+        "(exception: jax.experimental.pallas, the kernels' only home "
+        "across the supported version matrix)",
+    "mesh-outside-compat":
+        "no direct Mesh/AbstractMesh/make_mesh/set_mesh/use_mesh/shard_map "
+        "construction outside repro/compat.py — axis_types/signature churn "
+        "is shimmed there (typing references are fine)",
+    "donate-outside-compat":
+        "no raw jax.jit(..., donate_argnums=...) outside repro/compat.py — "
+        "donation routes through compat.jit_donated (de-aliases duplicate "
+        "buffers, silences spurious donation warnings, preserves .lower)",
+    "state-leaf-alias":
+        "host code never aliases system.state leaves (system.state.norm "
+        "etc.) — donated carries invalidate old buffers; use the snapshot "
+        "accessors (snapshot_norm / export_replay)",
+    "async-donate":
+        "runtime/ never donates in async modes — a donated input still "
+        "being computed blocks the dispatch and serializes the overlap "
+        "(donate=True literals and mode tuples naming an async mode flag)",
+    "lock-multi-acquire":
+        "runtime/ locks are one-acquire-per-call: no with-lock inside a "
+        "loop, no nested acquire of the same lock, no call to a sibling "
+        "method that re-acquires the held lock (batch first, lock once)",
+}
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One contract/lint finding (shared shape across both engines)."""
+    rule: str
+    message: str
+    primitive: str = ""   # jaxpr: offending primitive; lint: AST node kind
+    source: str = ""      # "file:line" (lint) / traceback summary (jaxpr)
+    label: str = ""       # which checked fn / file the finding is in
+
+    def format(self) -> str:
+        where = f" at {self.source}" if self.source else ""
+        prim = f" [{self.primitive}]" if self.primitive else ""
+        return f"[{self.rule}]{prim}{where}: {self.message}"
+
+
+class ContractViolation(ValueError):
+    """Raised when a checked fn breaks a documented invariant.
+
+    Carries the full finding list; the message names every offending
+    primitive and source line so the diagnostic is actionable at
+    registration time instead of a silent divergence in production.
+    """
+
+    def __init__(self, violations, label: str = ""):
+        self.violations = list(violations)
+        head = (f"{len(self.violations)} contract violation(s)"
+                f"{' in ' + label if label else ''} "
+                "(see ROADMAP.md 'Invariant catalog'; "
+                "repro.analysis docs explain each rule):")
+        lines = [head] + ["  " + v.format() for v in self.violations]
+        super().__init__("\n".join(lines))

@@ -1,0 +1,727 @@
+"""Jaxpr contract checker — shard-safety/time/callback invariants, statically.
+
+The engine traces a fn to a closed jaxpr (``jax.make_jaxpr`` — no execution,
+no compilation) and propagates abstract *provenance tags* through the eqn
+graph:
+
+  * a **dimension tag** ``env`` marks axes that index environments (seeded
+    on dim 0 of ``(E, ...)`` inputs, following them through broadcasts,
+    transposes, reshapes, slices, scans, ...);
+  * a **value tag** ``abs-time`` marks absolute-time values (the int32 tick
+    counter, float64 absolute seconds).  Subtracting two absolute times
+    yields a relative duration, which clears the tag — so the documented
+    "rebase to window-relative, then narrow" pattern passes while a direct
+    ``.astype(float32)`` of absolute time is flagged.
+
+Rules checked per eqn (see :mod:`repro.analysis.contracts` for the catalog):
+``env-contraction`` / ``env-gemm-rows`` (dot_general/conv touching an
+env-tagged dim), ``env-reduce`` (reduce/cumsum/sort/argmax/top_k along an
+env-tagged axis), ``collective``, ``time-cast`` (convert_element_type /
+reduce_precision narrowing an abs-time value below float64 mantissa), and
+``callback-in-scan`` (host callbacks at loop depth >= 1 — the checked entry
+points are all scan-body-bound, so they start at depth 1 by default).
+
+Propagation is conservative: an unknown primitive spreads every input tag
+to every output dim, which can only create false positives, never false
+negatives.  Higher-order primitives (pjit, scan, while, cond, shard_map,
+custom_jvp/vjp, remat) are walked recursively; scan/while carries run to a
+tag fixed point.
+"""
+from __future__ import annotations
+
+import logging
+import warnings
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.contracts import (
+    ContractViolation, Violation, TAG_ENV, TAG_TIME,
+)
+
+logger = logging.getLogger(__name__)
+
+EMPTY = frozenset()
+
+
+class Rules(NamedTuple):
+    """Which rule families a check enforces.
+
+    ``env`` is the shard-invariance family — enforced for the ``*_sharded``
+    modes (the fused non-sharded engine may legally run a non-row-wise
+    model, e.g. examples/serve_edge.py's LM policy).  The other families
+    hold for every checked fn.
+    """
+    env: bool = True
+    collectives: bool = True
+    callbacks: bool = True
+    time: bool = True
+
+
+class Prov(NamedTuple):
+    """Provenance of one jaxpr value: per-dimension tag sets + value tags."""
+    dims: tuple            # tuple[frozenset[str], ...], len == ndim
+    val: frozenset = EMPTY
+
+
+def _empty(ndim: int) -> Prov:
+    return Prov((EMPTY,) * ndim)
+
+
+def _fit(p: Prov, ndim: int) -> Prov:
+    """Defensive rank fix-up: never lose a tag to a rank mismatch."""
+    if len(p.dims) == ndim:
+        return p
+    spread = frozenset().union(*p.dims) if p.dims else EMPTY
+    return Prov((spread,) * ndim, p.val)
+
+
+def _align_union(ins: Sequence[Prov], out_ndim: int) -> Prov:
+    """Right-aligned per-dim union (elementwise ops with rank broadcasting)."""
+    dims = [EMPTY] * out_ndim
+    val = EMPTY
+    for p in ins:
+        off = out_ndim - len(p.dims)
+        for j, t in enumerate(p.dims):
+            if 0 <= j + off < out_ndim:
+                dims[j + off] = dims[j + off] | t
+        val = val | p.val
+    return Prov(tuple(dims), val)
+
+
+# --- primitive classification ------------------------------------------------
+
+_ELEMENTWISE = frozenset("""
+abs add and atan2 cbrt ceil clamp copy cos cosh cumlogsumexp device_put div
+eq erf erfc erf_inv exp exp2 expm1 floor ge gt imag integer_pow is_finite le
+log log1p logistic lt max min mul ne neg nextafter not or population_count
+pow real regularized_incomplete_beta rem round rsqrt select_n shift_left
+shift_right_arithmetic shift_right_logical sign sin sinh sqrt square
+stop_gradient sub tan tanh xor acos asin atan acosh asinh atanh digamma
+lgamma igamma igammac bessel_i0e bessel_i1e clz
+""".split())
+
+_REDUCES = frozenset(
+    ["reduce_sum", "reduce_prod", "reduce_max", "reduce_min",
+     "reduce_and", "reduce_or", "reduce_xor", "argmax", "argmin",
+     "reduce_precision_reduce"])  # last: defensive name, never matches
+
+_CUMULATIVE = frozenset(["cumsum", "cumprod", "cummax", "cummin",
+                         "cumlogsumexp"])
+
+_COLLECTIVES = frozenset(
+    ["psum", "pmax", "pmin", "pmean", "ppermute", "pshuffle", "all_gather",
+     "all_to_all", "reduce_scatter", "psum_scatter", "axis_index",
+     "pbroadcast", "pgather", "pdot"])
+
+_CALLBACKS = frozenset(
+    ["pure_callback", "io_callback", "debug_callback", "callback",
+     "outside_call", "host_callback_call", "python_callback"])
+
+# higher-order prims handled structurally
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+def _src_of(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+        return str(source_info_util.summarize(eqn.source_info))
+    except Exception:
+        return "<unknown>"
+
+
+def _is_jaxpr_like(obj) -> bool:
+    return hasattr(obj, "eqns") or (hasattr(obj, "jaxpr")
+                                    and hasattr(obj, "consts"))
+
+
+def _open(j):
+    """ClosedJaxpr -> Jaxpr (constvars get empty provs in _run)."""
+    return j.jaxpr if hasattr(j, "consts") else j
+
+
+class _Ctx:
+    def __init__(self, rules: Rules, label: str):
+        self.rules = rules
+        self.label = label
+        self.violations = []
+        self._seen = set()
+
+    def add(self, rule, message, primitive, source):
+        key = (rule, primitive, source)
+        if key in self._seen:    # scan fixed-point re-runs revisit eqns
+            return
+        self._seen.add(key)
+        self.violations.append(Violation(rule=rule, message=message,
+                                         primitive=primitive, source=source,
+                                         label=self.label))
+
+
+# --- per-eqn rule checks ------------------------------------------------------
+
+def _check_eqn(eqn, name, ins, ctx: _Ctx, loop_depth: int):
+    rules = ctx.rules
+    if rules.collectives and name in _COLLECTIVES:
+        ctx.add("collective",
+                f"collective '{name}' in a shard_map-bound fn: the sharded "
+                "engines are collective-free by contract (cross-env math "
+                "belongs on the host)", name, _src_of(eqn))
+    if rules.callbacks and name in _CALLBACKS and loop_depth >= 1:
+        ctx.add("callback-in-scan",
+                f"host callback '{name}' inside a scan/while body: a hidden "
+                "host sync per scan step defeats the one-dispatch-per-batch "
+                "engine (log after the batch instead)", name, _src_of(eqn))
+    if rules.time and name == "convert_element_type":
+        new = np.dtype(eqn.params["new_dtype"])
+        p = ins[0]
+        if TAG_TIME in p.val and np.issubdtype(new, np.floating):
+            nmant = np.finfo(new).nmant
+            old = np.dtype(eqn.invars[0].aval.dtype)
+            already_narrow = (np.issubdtype(old, np.floating)
+                              and np.finfo(old).nmant <= nmant)
+            if nmant < 52 and not already_narrow:
+                ctx.add("time-cast",
+                        f"absolute-time value cast {old.name} -> {new.name}:"
+                        " float32 absolute seconds/ticks quantize past "
+                        "t~2^24 (consecutive window ends collapse to the "
+                        "same value). Keep absolute time in float64/int32 "
+                        "and rebase to window-relative (subtract a time) "
+                        "before narrowing", name, _src_of(eqn))
+    if rules.time and name == "reduce_precision":
+        if TAG_TIME in ins[0].val and eqn.params.get("mantissa_bits", 53) < 52:
+            ctx.add("time-cast",
+                    "reduce_precision narrows an absolute-time value below "
+                    "float64 mantissa; rebase to window-relative first",
+                    name, _src_of(eqn))
+    if not rules.env:
+        return
+    if name == "dot_general":
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        lhs, rhs = ins[0], ins[1]
+        contracted = (any(TAG_ENV in lhs.dims[d] for d in lc)
+                      or any(TAG_ENV in rhs.dims[d] for d in rc))
+        anywhere = (any(TAG_ENV in t for t in lhs.dims)
+                    or any(TAG_ENV in t for t in rhs.dims))
+        if contracted:
+            ctx.add("env-contraction",
+                    "dot_general contracts over the env axis: the result "
+                    "mixes rows across environments and diverges between "
+                    "the sharded and unsharded engines", name, _src_of(eqn))
+        elif anywhere:
+            ctx.add("env-gemm-rows",
+                    "env rows feed a dot_general: XLA:CPU lowers (rows, F) "
+                    "gemms through row-count-dependent kernels, so the bits "
+                    "depend on rows-per-device (1-ulp shard drift). Phrase "
+                    "per-env dots as multiply+reduce over features (see "
+                    "runtime.predictor.linear_policy)", name, _src_of(eqn))
+    elif name == "conv_general_dilated":
+        if any(TAG_ENV in t for p in ins[:2] for t in p.dims):
+            ctx.add("env-gemm-rows",
+                    "env rows feed a convolution: lowering is "
+                    "row-count-dependent; keep the env axis out of conv "
+                    "operands (vmap-free per-env math)", name, _src_of(eqn))
+    elif name in _REDUCES and "axes" in eqn.params:
+        bad = [a for a in eqn.params["axes"] if TAG_ENV in ins[0].dims[a]]
+        if bad:
+            ctx.add("env-reduce",
+                    f"'{name}' reduces along the env axis (axis {bad[0]}): "
+                    "per-env decision math must not mix rows across "
+                    "environments (a cross-env mean/sum diverges under the "
+                    "env-sharded engine)", name, _src_of(eqn))
+    elif name in _CUMULATIVE:
+        ax = eqn.params.get("axis", 0)
+        if TAG_ENV in ins[0].dims[ax]:
+            ctx.add("env-reduce",
+                    f"'{name}' scans along the env axis: row i depends on "
+                    "rows < i, which is cross-env math", name, _src_of(eqn))
+    elif name == "sort":
+        d = eqn.params.get("dimension", len(ins[0].dims) - 1)
+        if any(TAG_ENV in p.dims[d] for p in ins if len(p.dims) > d):
+            ctx.add("env-reduce",
+                    "'sort' permutes along the env axis: rows move across "
+                    "environments", name, _src_of(eqn))
+    elif name == "top_k":
+        if ins[0].dims and TAG_ENV in ins[0].dims[-1]:
+            ctx.add("env-reduce",
+                    "'top_k' selects along the env axis: rows mix across "
+                    "environments", name, _src_of(eqn))
+
+
+# --- propagation --------------------------------------------------------------
+
+def _out_ndims(eqn):
+    return [getattr(v.aval, "ndim", 0) for v in eqn.outvars]
+
+
+def _reshape_prov(p: Prov, in_shape, out_shape) -> Prov:
+    """Map dim tags through a reshape by matching size-group boundaries."""
+    if 0 in in_shape or 0 in out_shape:
+        return _fit(p, len(out_shape))
+    out = [EMPTY] * len(out_shape)
+    i = j = 0
+    while i < len(in_shape) or j < len(out_shape):
+        ip, jp, gi, gj = 1, 1, [], []
+        if i < len(in_shape):
+            ip *= in_shape[i]; gi.append(i); i += 1
+        if j < len(out_shape):
+            jp *= out_shape[j]; gj.append(j); j += 1
+        while ip != jp:
+            if ip < jp and i < len(in_shape):
+                ip *= in_shape[i]; gi.append(i); i += 1
+            elif jp < ip and j < len(out_shape):
+                jp *= out_shape[j]; gj.append(j); j += 1
+            else:
+                return _fit(p, len(out_shape))   # unmatched (trailing 1s...)
+        tags = frozenset().union(*(p.dims[d] for d in gi)) if gi else EMPTY
+        for d in gj:
+            out[d] = out[d] | tags
+    return Prov(tuple(out), p.val)
+
+
+def _prop_scanlike(body, ins, n_consts, n_carry, ctx, loop_depth,
+                   xs_drop_leading=True):
+    """scan-style propagation with a carry tag fixed point."""
+    consts = list(ins[:n_consts])
+    carry = list(ins[n_consts:n_consts + n_carry])
+    xs = [Prov(p.dims[1:], p.val) if (xs_drop_leading and p.dims) else p
+          for p in ins[n_consts + n_carry:]]
+    outs = []
+    for _ in range(8):
+        outs = _run(_open(body), consts + carry + xs, ctx, loop_depth + 1)
+        new_carry = []
+        changed = False
+        for old, new in zip(carry, outs[:n_carry]):
+            new = _fit(new, len(old.dims))
+            merged = Prov(tuple(a | b for a, b in zip(old.dims, new.dims)),
+                          old.val | new.val)
+            changed = changed or merged != old
+            new_carry.append(merged)
+        carry = new_carry
+        if not changed:
+            break
+    ys = [Prov((EMPTY,) + p.dims, p.val) for p in outs[n_carry:]]
+    return outs[:n_carry] + ys
+
+
+def _propagate(eqn, name, ins, ctx, loop_depth):
+    params = eqn.params
+    nouts = _out_ndims(eqn)
+
+    if name in _ELEMENTWISE or name in _CUMULATIVE or name == "select_n" \
+            or name == "clamp" or name == "reduce_precision":
+        out = _align_union(ins, nouts[0])
+        if name == "sub" and len(ins) == 2 \
+                and TAG_TIME in ins[0].val and TAG_TIME in ins[1].val:
+            # t_a - t_b is a relative duration: the abs-time tag clears,
+            # so "rebase to window-relative, then narrow" passes
+            out = Prov(out.dims, out.val - {TAG_TIME})
+        if name == "rem" and len(ins) == 2 \
+                and TAG_TIME in ins[0].val and TAG_TIME not in ins[1].val:
+            # t mod period is phase, bounded by the (untagged) divisor
+            out = Prov(out.dims, out.val - {TAG_TIME})
+        return [out] * len(nouts)
+
+    if name == "convert_element_type" or name == "copy" \
+            or name == "device_put":
+        return [_fit(ins[0], nouts[0])]
+
+    if name == "broadcast_in_dim":
+        bd = params["broadcast_dimensions"]
+        dims = [EMPTY] * nouts[0]
+        for src, dst in enumerate(bd):
+            dims[dst] = ins[0].dims[src]
+        return [Prov(tuple(dims), ins[0].val)]
+
+    if name == "transpose":
+        perm = params["permutation"]
+        return [Prov(tuple(ins[0].dims[p] for p in perm), ins[0].val)]
+
+    if name == "reshape":
+        in_shape = tuple(eqn.invars[0].aval.shape)
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        return [_reshape_prov(ins[0], in_shape, out_shape)]
+
+    if name == "squeeze":
+        drop = set(params["dimensions"])
+        dims = tuple(t for d, t in enumerate(ins[0].dims) if d not in drop)
+        return [Prov(dims, ins[0].val)]
+
+    if name == "expand_dims":
+        add = set(params["dimensions"])
+        dims, src = [], iter(ins[0].dims)
+        for d in range(nouts[0]):
+            dims.append(EMPTY if d in add else next(src, EMPTY))
+        return [Prov(tuple(dims), ins[0].val)]
+
+    if name in ("slice", "rev", "dynamic_slice"):
+        return [_fit(ins[0], nouts[0])]
+
+    if name == "split":
+        return [_fit(ins[0], n) for n in nouts]
+
+    if name == "concatenate":
+        return [_align_union(ins, nouts[0])]
+
+    if name == "pad":
+        return [_fit(ins[0], nouts[0])]
+
+    if name == "dynamic_update_slice":
+        return [_align_union(ins[:2], nouts[0])]
+
+    if name in _REDUCES:
+        axes = set(params.get("axes", ()))
+        dims = tuple(t for d, t in enumerate(ins[0].dims) if d not in axes)
+        return [Prov(dims, ins[0].val)] * len(nouts)
+
+    if name == "dot_general":
+        (lc, rc), (lb, rb) = params["dimension_numbers"]
+        lhs, rhs = ins[0], ins[1]
+        lf = [d for d in range(len(lhs.dims)) if d not in lc and d not in lb]
+        rf = [d for d in range(len(rhs.dims)) if d not in rc and d not in rb]
+        dims = ([lhs.dims[a] | rhs.dims[b] for a, b in zip(lb, rb)]
+                + [lhs.dims[d] for d in lf] + [rhs.dims[d] for d in rf])
+        return [Prov(tuple(dims), lhs.val | rhs.val)]
+
+    if name.startswith("scatter"):
+        op, upd = ins[0], ins[2] if len(ins) > 2 else ins[0]
+        if len(upd.dims) == len(op.dims):
+            return [_align_union([op, upd], nouts[0])]
+        spread = frozenset().union(EMPTY, *op.dims, *upd.dims)
+        return [Prov(tuple(t | spread for t in op.dims), op.val | upd.val)]
+
+    if name == "gather":
+        spread = frozenset().union(EMPTY, *(t for p in ins for t in p.dims))
+        val = frozenset().union(EMPTY, *(p.val for p in ins))
+        return [Prov((spread,) * nouts[0], val)]
+
+    if name in ("iota", "rng_bit_generator", "random_seed", "random_wrap",
+                "random_bits", "random_unwrap"):
+        return [_empty(n) for n in nouts]
+
+    if name == "sort":
+        return [_fit(p, n) for p, n in zip(ins, nouts)]
+
+    if name == "top_k":
+        return [_fit(ins[0], n) for n in nouts]
+
+    if name == "scan":
+        return _prop_scanlike(params["jaxpr"], ins, params["num_consts"],
+                              params["num_carry"], ctx, loop_depth)
+
+    if name == "while":
+        cn, bn = params["cond_nconsts"], params["body_nconsts"]
+        carry_in = ins[cn + bn:]
+        # cond runs with (cond_consts + carry); walk it for rule checks
+        _run(_open(params["cond_jaxpr"]), list(ins[:cn]) + list(carry_in),
+             ctx, loop_depth + 1)
+        body_ins = list(ins[cn:cn + bn]) + list(carry_in)
+        outs = _prop_scanlike(params["body_jaxpr"], body_ins, bn,
+                              len(carry_in), ctx, loop_depth,
+                              xs_drop_leading=False)
+        return outs[:len(carry_in)]
+
+    if name == "cond":
+        branch_outs = [_run(_open(br), ins[1:], ctx, loop_depth)
+                       for br in params["branches"]]
+        merged = []
+        for i, n in enumerate(nouts):
+            ps = [_fit(bo[i], n) for bo in branch_outs]
+            merged.append(_align_union(ps, n))
+        return merged
+
+    # generic higher-order fallback (pjit, custom_jvp/vjp, remat,
+    # shard_map, closed_call, ...): exactly one jaxpr-like param whose
+    # invars line up 1:1 with the eqn's
+    sub = None
+    for k in _SUBJAXPR_KEYS:
+        if k in params and _is_jaxpr_like(params[k]):
+            sub = params[k]
+            break
+    if sub is not None:
+        inner = _open(sub)
+        n = len(inner.invars)
+        sub_ins = list(ins[:n]) + [_empty(getattr(v.aval, "ndim", 0))
+                                   for v in inner.invars[len(ins):]]
+        sub_ins = [_fit(p, getattr(v.aval, "ndim", 0))
+                   for p, v in zip(sub_ins, inner.invars)]
+        outs = _run(inner, sub_ins, ctx, loop_depth)
+        outs = outs[:len(nouts)]
+        outs += [_empty(n) for n in nouts[len(outs):]]
+        return [_fit(p, n) for p, n in zip(outs, nouts)]
+
+    # unknown primitive: conservative — spread every tag over every out dim
+    spread = frozenset().union(EMPTY, *(t for p in ins for t in p.dims))
+    val = frozenset().union(EMPTY, *(p.val for p in ins))
+    return [Prov((spread,) * n, val) for n in nouts]
+
+
+def _run(jaxpr, in_provs, ctx: _Ctx, loop_depth: int):
+    """Walk one (open) jaxpr; returns the outvar provs."""
+    env = {}
+
+    def read(a):
+        if hasattr(a, "val"):          # Literal
+            return _empty(np.ndim(a.val))
+        return env.get(a, _empty(getattr(a.aval, "ndim", 0)))
+
+    for v, p in zip(jaxpr.invars, in_provs):
+        env[v] = _fit(p, getattr(v.aval, "ndim", 0))
+    for v in jaxpr.constvars:
+        env[v] = _empty(getattr(v.aval, "ndim", 0))
+
+    for eqn in jaxpr.eqns:
+        ins = [read(x) for x in eqn.invars]
+        name = eqn.primitive.name
+        _check_eqn(eqn, name, ins, ctx, loop_depth)
+        try:
+            outs = _propagate(eqn, name, ins, ctx, loop_depth)
+        except Exception:   # propagation must never mask the real trace
+            logger.debug("propagation fell back for '%s'", name,
+                         exc_info=True)
+            spread = frozenset().union(
+                EMPTY, *(t for p in ins for t in p.dims))
+            val = frozenset().union(EMPTY, *(p.val for p in ins))
+            outs = [Prov((spread,) * n, val) for n in _out_ndims(eqn)]
+        for v, p in zip(eqn.outvars, outs):
+            env[v] = _fit(p, getattr(v.aval, "ndim", 0))
+    return [read(x) for x in jaxpr.outvars]
+
+
+# --- public API ----------------------------------------------------------------
+
+def _parse_tag(tag: str, ndim: int) -> Prov:
+    """Tag spec -> Prov.  '' | 'env:0' | 'time' | 'env:0,time'."""
+    dims = [EMPTY] * ndim
+    val = EMPTY
+    for part in filter(None, (tag or "").split(",")):
+        if part.startswith("env"):
+            d = int(part.split(":")[1]) if ":" in part else 0
+            if d < ndim:
+                dims[d] = dims[d] | {TAG_ENV}
+        elif part == "time":
+            val = val | {TAG_TIME}
+        else:
+            raise ValueError(f"unknown provenance tag {part!r}")
+    return Prov(tuple(dims), val)
+
+
+def check_fn(fn: Callable, args, tags, *, rules: Rules = Rules(),
+             label: str = "", scan_bound: bool = True):
+    """Trace ``fn(*args)`` and return ``(violations, closed_jaxpr)``.
+
+    ``args``: pytrees of arrays / ShapeDtypeStructs (never executed).
+    ``tags``: matching pytrees with a string tag spec per leaf — ``""``
+    (untagged), ``"env:<dim>"``, ``"time"``, or a comma-joined combination.
+    ``scan_bound``: the checked entry points (policies, reward fns, decide
+    steps) all execute inside ``lax.scan``/``lax.map`` bodies, so host
+    callbacks are flagged at top level too; pass False for a fn that is
+    genuinely dispatched outside any loop.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    flat_args = jax.tree.leaves(args)
+    flat_tags = jax.tree.leaves(tags)
+    if len(flat_args) != len(flat_tags):
+        raise ValueError("args/tags pytrees do not match: "
+                         f"{len(flat_args)} leaves vs {len(flat_tags)} tags")
+    in_provs = [_parse_tag(t, int(np.ndim(a) if not hasattr(a, "shape")
+                                  else len(a.shape)))
+                for a, t in zip(flat_args, flat_tags)]
+    ctx = _Ctx(rules, label or getattr(fn, "__name__", "fn"))
+    _run(closed.jaxpr, in_provs, ctx, 1 if scan_bound else 0)
+    return ctx.violations, closed
+
+
+def _raise_if(violations, label):
+    if violations:
+        raise ContractViolation(violations, label)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def check_policy(model: Callable, n_features: int, n_envs: int = 4, *,
+                 rules: Rules = Rules(), label: Optional[str] = None) -> None:
+    """Check a policy ``fn((E, F)) -> (E, A)`` against the shard contract."""
+    label = label or getattr(model, "name", None) \
+        or getattr(model, "__name__", "policy")
+    v, _ = check_fn(lambda f: model(f), (_sds((n_envs, n_features)),),
+                    ("env:0",), rules=rules, label=label)
+    _raise_if(v, f"policy '{label}'")
+
+
+def check_reward_fn(fn: Callable, n_envs: int, n_features: int,
+                    n_actions: int, *, rules: Rules = Rules(),
+                    label: str = "custom reward fn") -> None:
+    """Check a custom reward ``fn((E,F), (E,A), (E,A)) -> (E,)``."""
+    args = (_sds((n_envs, n_features)), _sds((n_envs, n_actions)),
+            _sds((n_envs, n_actions)))
+    v, closed = check_fn(fn, args, ("env:0", "env:0", "env:0"),
+                         rules=rules, label=label)
+    out = closed.out_avals[0]
+    if tuple(out.shape) != (n_envs,):
+        v = list(v) + [Violation(
+            rule="reward-shape", primitive="", source="", label=label,
+            message=f"returns shape {tuple(out.shape)} for (E={n_envs}, "
+                    f"F={n_features}) features; the contract is one reward "
+                    "per env row: (E,)")]
+    _raise_if(v, label)
+
+
+def check_reward_terms(terms, n_features: Optional[int] = None,
+                       n_actions: Optional[int] = None, n_envs: int = 4, *,
+                       rules: Rules = Rules()) -> None:
+    """Check every ``custom`` term of a RewardSpec (duck-typed).
+
+    Feature/action counts are unknown at spec construction, so tracing
+    retries up a probe-shape ladder when a fn indexes past the probe; a fn
+    that cannot be traced at any probe shape is skipped with a warning
+    (it will still be checked at true shapes at system construction).
+    """
+    ladder = ([(n_features, n_actions)]
+              if n_features is not None and n_actions is not None
+              else [(8, 4), (32, 8), (128, 16)])
+    for i, t in enumerate(terms):
+        if getattr(t, "kind", None) != "custom" or t.fn is None:
+            continue
+        label = f"custom reward term #{i}"
+        last_exc = None
+        for F, A in ladder:
+            try:
+                check_reward_fn(t.fn, n_envs, F, A, rules=rules, label=label)
+                last_exc = None
+                break
+            except ContractViolation:
+                raise
+            except Exception as e:   # probe shape too small, etc.
+                last_exc = e
+        if last_exc is not None:
+            warnings.warn(
+                f"repro.analysis: could not statically check {label} at "
+                f"probe shapes {ladder}: {last_exc!r} — it will be checked "
+                "at true shapes at system construction", stacklevel=2)
+
+
+def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
+                     rules: Rules = Rules(), label: str = "decide") -> None:
+    """Check a :class:`~repro.runtime.predictor.DecideFns` pair as the fused
+    scan will run it: ``step`` on a per-window FeatureFrame with the small
+    (replay-free) carry, ``bank`` on the stacked transitions + ring.
+
+    Env tags resolve by leaf rank exactly like ``sharding.env_specs``
+    (leading dim == E ⇒ env axis); the int32 tick counter carries the
+    abs-time tag, so a ``tick.astype(float32)`` anywhere in a custom step
+    is caught here.
+    """
+    from repro.core.frame import FeatureFrame   # lazy: keep import graph flat
+
+    E, F = n_envs, n_features
+
+    def rank_env(x):
+        nd = len(getattr(x, "shape", ()))
+        return "env:0" if nd > 0 and x.shape[0] == E else ""
+
+    small = dstate._replace(replay=None)
+    s_avals = jax.tree.map(
+        lambda x: _sds(jnp.shape(x), jnp.asarray(x).dtype), small)
+    s_tags = jax.tree.map(rank_env, s_avals)
+    if hasattr(s_tags, "_replace") and hasattr(s_tags, "tick"):
+        s_tags = s_tags._replace(tick="time")
+    frame = FeatureFrame(features=_sds((E, F)), raw=_sds((E, F)),
+                         quality=_sds((E,)), tick_time=_sds((E,)))
+    f_tags = FeatureFrame("env:0", "env:0", "env:0", "env:0")
+
+    v, closed = check_fn(decide.step, (s_avals, frame), (s_tags, f_tags),
+                         rules=rules, label=f"{label}.step")
+    _raise_if(v, f"{label}.step")
+
+    # bank runs once per batch outside the scan: trace it on a K-stack of
+    # the transition rows the traced step actually emits (step returns
+    # (new_state, outs, transition) — the transition is the trailing 6
+    # flat outputs by the DecideFns contract)
+    K = 3
+    trans_flat = closed.out_avals[-6:]
+    trans_avals = [_sds((K,) + tuple(a.shape), a.dtype) for a in trans_flat]
+    trans_tags = ["env:1" if len(a.shape) > 1 and a.shape[1] == E else ""
+                  for a in trans_avals]
+    for i, a in enumerate(trans_flat):     # the tick column is int32 abs-time
+        if a.dtype == jnp.int32 and a.ndim == 0:
+            trans_tags[i] = "time"
+    replay_avals = jax.tree.map(
+        lambda x: _sds(jnp.shape(x), jnp.asarray(x).dtype), dstate.replay)
+    r_tags = jax.tree.map(rank_env, replay_avals)
+    v, _ = check_fn(lambda r, tr: decide.bank(r, tuple(tr)),
+                    (replay_avals, trans_avals), (r_tags, trans_tags),
+                    rules=rules, label=f"{label}.bank", scan_bound=False)
+    _raise_if(v, f"{label}.bank")
+
+
+def check_system(predictor, decide=None, dstate=None, *, sharded: bool,
+                 label: str = "PerceptaSystem") -> None:
+    """Construction-time gate for ``PerceptaSystem`` (``*_sharded``/fused).
+
+    The env-axis family only binds under the env-sharded dispatches; the
+    callback/collective/time families hold for every fused build (the
+    decide step is traced into the window scan either way).
+    """
+    rules = Rules(env=sharded)
+    E = predictor.n_envs
+    F = predictor.n_features
+    A = predictor.action_space.n
+    if decide is not None:
+        check_decide_fns(decide, dstate, E, F, rules=rules,
+                         label=f"{label} fused decide")
+    else:
+        check_policy(predictor.model, F, n_envs=E, rules=rules)
+        check_reward_terms(predictor.reward_spec.terms, n_features=F,
+                           n_actions=A, n_envs=E, rules=rules)
+
+
+def check_builtins(verbose: bool = False) -> int:
+    """Check every builtin policy/reward/decide path; returns #fns checked.
+
+    ``make lint`` runs this next to the AST lint so a regression in a
+    builtin (or in the checker itself) fails CI, not a user's registration.
+    """
+    from repro.core.reward import (RewardSpec, RewardTerm, KINDS,
+                                   energy_reward_spec, validate_actions)
+    from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+
+    E, F, A = 4, 6, 2
+    n = 0
+
+    check_policy(linear_policy(F, A), F, n_envs=E)
+    n += 1
+
+    # every builtin term kind, checked through RewardSpec.compute at (E, ...)
+    terms = [RewardTerm(k, feature=1, action=0, target=1.0, band=0.5)
+             for k in KINDS if k != "custom"]
+    terms.append(RewardTerm("custom", fn=lambda f, a, p:
+                            -f[:, 1] * jnp.maximum(f[:, 0], 0.0)))
+    spec = RewardSpec(tuple(terms))
+    check_reward_fn(lambda f, a, p: spec.compute(f, a, p)[0], E, F, A,
+                    label="RewardSpec.compute[builtin kinds]")
+    n += len(terms)
+
+    espec = energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0)
+    check_reward_fn(lambda f, a, p: espec.compute(f, a, p)[0], E, F, A,
+                    label="energy_reward_spec.compute")
+    n += 1
+
+    v, _ = check_fn(
+        lambda a: validate_actions(a, -jnp.ones((A,)), jnp.ones((A,))),
+        (_sds((E, A)),), ("env:0",), label="validate_actions")
+    _raise_if(v, "validate_actions")
+    n += 1
+
+    pred = Predictor(linear_policy(F, A), espec,
+                     ActionSpace(np.full(A, -1.0), np.full(A, 1.0)),
+                     E, F, replay_capacity=16)
+    check_decide_fns(pred.make_decide_fn(), pred.decide_state(), E, F,
+                     label="builtin DecideFns")
+    n += 2
+    if verbose:
+        print(f"jaxpr contract check: {n} builtin fns clean")
+    return n

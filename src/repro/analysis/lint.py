@@ -1,0 +1,452 @@
+"""AST invariant lint — host-side rules the type system can't see.
+
+Enforces the repo's documented host-code invariants (rule catalog in
+:mod:`repro.analysis.contracts`, mirrored in ROADMAP.md "Invariant
+catalog"):
+
+  * every version-sensitive JAX spelling routes through ``repro.compat``
+    (``jax.__version__`` branches, ``jax.experimental`` imports, direct
+    Mesh/shard_map/set_mesh construction, raw donation kwargs) — the
+    exception is ``jax.experimental.pallas``, the kernels' only home
+    across the supported version matrix;
+  * host code never aliases ``system.state`` leaves (donated carries
+    invalidate old buffers — use the snapshot accessors);
+  * ``runtime/`` never donates in async modes and holds its locks once
+    per call (the PR 4 one-lock-per-call rule).
+
+Suppression: append ``# lint: allow[<rule-id>]`` to the offending line (or
+the line above).  Violations that need their own PR live in the committed
+``lint_baseline.json`` next to this module (``--update-baseline``
+regenerates it); baselined findings never fail the run, new ones always do.
+
+CLI::
+
+    python -m repro.analysis.lint [paths...] [--jaxpr-builtins]
+    python -m repro.analysis.lint --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import re
+import sys
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.contracts import LINT_RULES, Violation
+
+DEFAULT_PATHS = ("src/repro", "examples", "benchmarks")
+_PRAGMA = re.compile(r"#\s*lint:\s*allow\[([a-z0-9,\- ]*)\]")
+
+# calls that must not be spelled outside compat.py (full dotted origin)
+_MESH_CALLS = {
+    "jax.sharding.Mesh", "jax.sharding.AbstractMesh", "jax.make_mesh",
+    "jax.set_mesh", "jax.sharding.set_mesh", "jax.sharding.use_mesh",
+    "jax.experimental.shard_map.shard_map", "jax.shard_map",
+    "jax.experimental.mesh_utils.create_device_mesh",
+}
+_VERSION_PARSERS = {"split", "startswith", "parse", "Version", "tuple",
+                    "map", "LooseVersion"}
+
+
+def _dotted(node) -> Optional[str]:
+    """Attribute/Name chain -> dotted string, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, rel: str, tree: ast.AST, lines: List[str]):
+        self.rel = rel
+        self.lines = lines
+        norm = "/" + rel.replace(os.sep, "/")
+        self.is_compat = norm.endswith("/compat.py") and "/repro/" in norm
+        self.in_runtime = "/runtime/" in norm
+        self.is_system = norm.endswith("/runtime/system.py")
+        self.violations: List[Violation] = []
+        self.imports: Dict[str, str] = {}   # local name -> dotted origin
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        # class -> method -> set of lock expr strings acquired in its body
+        self._class_locks: Dict[ast.ClassDef, Dict[str, Set[str]]] = {}
+        for n in ast.walk(tree):
+            if isinstance(n, ast.ClassDef):
+                self._class_locks[n] = {
+                    m.name: self._locks_acquired(m)
+                    for m in n.body if isinstance(m, ast.FunctionDef)}
+        self._with_locks: List[str] = []    # lexical stack of held locks
+        self._loop_depth = 0
+
+    # --- plumbing -----------------------------------------------------------
+    def _suppressed(self, lineno: int, rule: str) -> bool:
+        for ln in (lineno, lineno - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _PRAGMA.search(self.lines[ln - 1])
+                if m and (not m.group(1).strip()
+                          or rule in re.split(r"[,\s]+", m.group(1))):
+                    return True
+        return False
+
+    def _flag(self, node, rule: str, message: str):
+        if self._suppressed(node.lineno, rule):
+            return
+        self.violations.append(Violation(
+            rule=rule, message=message, primitive=type(node).__name__,
+            source=f"{self.rel}:{node.lineno}", label=self.rel))
+
+    def _enclosing(self, node, *types):
+        cur = node
+        while cur in self._parents:
+            prev, cur = cur, self._parents[cur]
+            if isinstance(cur, types):
+                yield cur, prev
+
+    @staticmethod
+    def _is_lockish(expr) -> bool:
+        src = _dotted(expr) or ""
+        return "lock" in src.lower()
+
+    def _locks_acquired(self, fn: ast.FunctionDef) -> Set[str]:
+        out: Set[str] = set()
+        for n in ast.walk(fn):
+            if isinstance(n, ast.With):
+                for item in n.items:
+                    if self._is_lockish(item.context_expr):
+                        out.add(_dotted(item.context_expr) or "")
+        return out
+
+    # --- compat-routing rules -----------------------------------------------
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.imports[a.asname or a.name.split(".")[0]] = a.name
+            if (not self.is_compat
+                    and a.name.startswith("jax.experimental")
+                    and not a.name.startswith("jax.experimental.pallas")):
+                self._flag(node, "jax-experimental-outside-compat",
+                           f"import of '{a.name}' outside repro/compat.py; "
+                           "route the version seam through repro.compat "
+                           "(only jax.experimental.pallas is exempt)")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        for a in node.names:
+            self.imports[a.asname or a.name] = f"{mod}.{a.name}"
+        if (not self.is_compat and mod.startswith("jax.experimental")
+                and not mod.startswith("jax.experimental.pallas")
+                and not (mod == "jax.experimental"
+                         and all(a.name == "pallas" for a in node.names))):
+            self._flag(node, "jax-experimental-outside-compat",
+                       f"'from {mod} import ...' outside repro/compat.py; "
+                       "route the version seam through repro.compat "
+                       "(only jax.experimental.pallas is exempt)")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        dotted = _dotted(node)
+        if dotted == "jax.__version__" and not self.is_compat:
+            if self._version_branch_context(node):
+                self._flag(node, "jax-version-branch",
+                           "jax.__version__ used in a branch/comparison "
+                           "outside repro/compat.py — add a compat shim "
+                           "instead of a call-site version fork (metadata "
+                           "uses are fine)")
+        elif (dotted and dotted.startswith("jax.experimental")
+              and not dotted.startswith("jax.experimental.pallas")
+              and not self.is_compat):
+            # flag once, at the outermost attribute of the chain
+            parent = self._parents.get(node)
+            if not (isinstance(parent, ast.Attribute)):
+                self._flag(node, "jax-experimental-outside-compat",
+                           f"direct '{dotted}' spelling outside "
+                           "repro/compat.py")
+        # system.state leaf aliasing: <receiver>.state.<leaf>
+        if (isinstance(node.value, ast.Attribute)
+                and node.value.attr == "state"
+                and isinstance(node.value.value, ast.Name)
+                and not self.is_system):
+            recv = node.value.value.id.lower()
+            if recv == "sys" or "system" in recv:
+                self._flag(node, "state-leaf-alias",
+                           f"aliases a pipeline-state leaf "
+                           f"('{node.value.value.id}.state.{node.attr}'): "
+                           "donated scan carries invalidate old buffers — "
+                           "read through the snapshot accessors "
+                           "(snapshot_norm / export_replay)")
+        self.generic_visit(node)
+
+    def _version_branch_context(self, node) -> bool:
+        for anc, child in self._enclosing(node, ast.Compare, ast.BoolOp,
+                                          ast.If, ast.IfExp, ast.While,
+                                          ast.Call, ast.Assert):
+            if isinstance(anc, (ast.Compare, ast.BoolOp, ast.Assert)):
+                return True
+            if isinstance(anc, (ast.If, ast.IfExp, ast.While)) \
+                    and child is anc.test:
+                return True
+            if isinstance(anc, ast.Call):
+                fn = anc.func
+                name = fn.attr if isinstance(fn, ast.Attribute) else \
+                    (fn.id if isinstance(fn, ast.Name) else "")
+                if name in _VERSION_PARSERS:
+                    return True
+        return False
+
+    def visit_Call(self, node: ast.Call):
+        dotted = _dotted(node.func)
+        origin = self.imports.get(dotted, dotted) if dotted else None
+        if dotted and "." in dotted:   # resolve `m.f` where m was imported
+            head, _, tail = dotted.partition(".")
+            if head in self.imports:
+                origin = f"{self.imports[head]}.{tail}"
+        if not self.is_compat and origin in _MESH_CALLS:
+            self._flag(node, "mesh-outside-compat",
+                       f"direct call of '{origin}' outside repro/compat.py "
+                       "— mesh/shard_map construction is a version seam "
+                       "(axis_types, AbstractMesh signature, shard_map "
+                       "location churn); use the repro.compat helpers")
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        if ("donate_argnums" in kw or "donate_argnames" in kw) \
+                and not self.is_compat:
+            callee = (node.func.attr if isinstance(node.func, ast.Attribute)
+                      else dotted) or ""
+            if callee.split(".")[-1] != "jit_donated":
+                self._flag(node, "donate-outside-compat",
+                           "raw donation kwargs outside repro/compat.py — "
+                           "route through compat.jit_donated (de-aliases "
+                           "duplicate donated buffers, silences spurious "
+                           "donation warnings, preserves .lower)")
+        if self.in_runtime and "donate" in kw:
+            val = kw["donate"]
+            if isinstance(val, ast.Constant) and val.value is True:
+                self._flag(node, "async-donate",
+                           "donate=True literal in runtime/: async modes "
+                           "must never donate (a donated input still being "
+                           "computed blocks the dispatch and serializes the "
+                           "prefetch overlap); gate donation on the mode")
+            elif isinstance(val, ast.Compare) and len(val.ops) == 1 \
+                    and isinstance(val.ops[0], ast.In):
+                comp = val.comparators[0]
+                elts = getattr(comp, "elts", [])
+                bad = [e.value for e in elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, str) and "async" in e.value]
+                if bad:
+                    self._flag(node, "async-donate",
+                               f"donation enabled for async mode(s) {bad}: "
+                               "async modes must never donate")
+        # lock rule (c): calling a sibling that re-acquires a held lock
+        if self.in_runtime and self._with_locks \
+                and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "self":
+            for cls, methods in self._class_locks.items():
+                locks = methods.get(node.func.attr)
+                if locks is None:
+                    continue
+                held = set(self._with_locks) & locks
+                if held and self._in_class(node, cls):
+                    self._flag(node, "lock-multi-acquire",
+                               f"calls self.{node.func.attr}() while "
+                               f"holding {sorted(held)[0]}, which that "
+                               "method re-acquires — split out a _locked "
+                               "helper (one acquire per call)")
+        self.generic_visit(node)
+
+    def _in_class(self, node, cls) -> bool:
+        return any(anc is cls for anc, _ in self._enclosing(node,
+                                                            ast.ClassDef))
+
+    # --- threading rules ------------------------------------------------------
+    def visit_With(self, node: ast.With):
+        if not self.in_runtime:
+            return self.generic_visit(node)
+        lock_exprs = [_dotted(i.context_expr) or "" for i in node.items
+                      if self._is_lockish(i.context_expr)]
+        for le in lock_exprs:
+            if self._loop_depth > 0:
+                self._flag(node, "lock-multi-acquire",
+                           f"acquires {le} inside a for-loop: batch the "
+                           "items first and hold the lock once per call "
+                           "(the one-lock-per-call rule)")
+            if le in self._with_locks:
+                self._flag(node, "lock-multi-acquire",
+                           f"nested acquire of {le} (already held by an "
+                           "enclosing with) — deadlocks a non-reentrant "
+                           "lock")
+        self._with_locks.extend(lock_exprs)
+        self.generic_visit(node)
+        del self._with_locks[len(self._with_locks) - len(lock_exprs):]
+
+    def visit_For(self, node: ast.For):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        # loop depth / held locks are per-function lexical properties: a
+        # nested def runs later, outside the enclosing with/for
+        saved = (self._loop_depth, self._with_locks)
+        self._loop_depth, self._with_locks = 0, []
+        self.generic_visit(node)
+        self._loop_depth, self._with_locks = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+# --- runner ---------------------------------------------------------------------
+
+def lint_file(path: str, rel: Optional[str] = None) -> List[Violation]:
+    rel = rel or path
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Violation(rule="parse-error", message=str(e),
+                          source=f"{rel}:{e.lineno or 0}", label=rel)]
+    lint = _FileLint(rel, tree, src.splitlines())
+    lint.visit(tree)
+    return lint.violations
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def run_paths(paths) -> List[Violation]:
+    out: List[Violation] = []
+    for f in iter_py_files(paths):
+        out.extend(lint_file(f, os.path.relpath(f)))
+    return out
+
+
+# --- baseline --------------------------------------------------------------------
+
+def _fingerprint(v: Violation, lines_cache: Dict[str, List[str]]) -> dict:
+    """Line numbers shift; fingerprint on (rule, file, stripped code)."""
+    fname, _, lineno = v.source.rpartition(":")
+    code = ""
+    try:
+        if fname not in lines_cache:
+            with open(fname, "r", encoding="utf-8") as f:
+                lines_cache[fname] = f.read().splitlines()
+        code = lines_cache[fname][int(lineno) - 1].strip()
+    except Exception:
+        pass
+    return {"rule": v.rule, "file": fname.replace(os.sep, "/"),
+            "code": code}
+
+
+def apply_baseline(violations: List[Violation], baseline_path: str):
+    """Split into (new, baselined) against the committed fingerprints."""
+    try:
+        with open(baseline_path, "r", encoding="utf-8") as f:
+            entries = json.load(f).get("violations", [])
+    except FileNotFoundError:
+        entries = []
+    pool = [tuple(sorted(e.items())) for e in entries]
+    cache: Dict[str, List[str]] = {}
+    new, old = [], []
+    for v in violations:
+        fp = tuple(sorted(_fingerprint(v, cache).items()))
+        if fp in pool:
+            pool.remove(fp)
+            old.append(v)
+        else:
+            new.append(v)
+    return new, old
+
+
+def write_baseline(violations: List[Violation], baseline_path: str):
+    cache: Dict[str, List[str]] = {}
+    data = {"comment": "lint findings grandfathered for their own PR; "
+                       "python -m repro.analysis.lint --update-baseline",
+            "violations": [_fingerprint(v, cache) for v in violations]}
+    with open(baseline_path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "lint_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Percepta invariant lint (rules in ROADMAP.md "
+                    "'Invariant catalog')")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline with the current findings")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--jaxpr-builtins", action="store_true",
+                    help="also run the jaxpr contract checker over every "
+                         "builtin policy/reward/decide path")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis.contracts import JAXPR_RULES
+        for name, rules in (("AST lint", LINT_RULES),
+                            ("jaxpr checker", JAXPR_RULES)):
+            print(f"# {name}")
+            for rid, desc in rules.items():
+                print(f"  {rid}: {desc}")
+        return 0
+
+    t0 = time.perf_counter()
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    violations = run_paths(paths)
+    if args.update_baseline:
+        write_baseline(violations, args.baseline)
+        print(f"wrote {len(violations)} finding(s) to {args.baseline}")
+        return 0
+    if args.no_baseline:
+        new, old = violations, []
+    else:
+        new, old = apply_baseline(violations, args.baseline)
+    for v in new:
+        print(f"{v.source}: {v.format()}")
+
+    n_builtin = 0
+    if args.jaxpr_builtins:
+        from repro.analysis.jaxpr_check import check_builtins
+        try:
+            n_builtin = check_builtins()
+        except Exception as e:
+            print(f"jaxpr builtin check FAILED:\n{e}")
+            return 1
+
+    dt = time.perf_counter() - t0
+    files = len(list(iter_py_files(paths)))
+    extra = f", {n_builtin} builtin fns jaxpr-checked" if n_builtin else ""
+    print(f"lint: {files} files, {len(new)} new finding(s), "
+          f"{len(old)} baselined{extra} [{dt:.1f}s]")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,7 @@ smoothness) are expressible directly; ``custom`` takes any jnp-traceable fn.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
@@ -46,7 +47,12 @@ class RewardTerm:
         must honor the same contract — no reductions across the env axis,
         and any contraction phrased so its rounding is independent of the
         number of env rows a device holds (see ``linear_policy``'s
-        multiply+reduce dot) — to compose with the sharded modes."""
+        multiply+reduce dot) — to compose with the sharded modes. The
+        contract is enforced statically: ``repro.analysis`` traces custom
+        fns at spec construction (and again at true shapes when a sharded/
+        fused system is built) and rejects env-axis contractions/reductions
+        with the offending primitive and source line (see ROADMAP.md
+        "Invariant catalog")."""
         f = features[..., self.feature]
         a = actions[..., self.action] if self.action is not None else 0.0
         if self.kind == "linear":
@@ -78,7 +84,32 @@ class RewardTerm:
 
 @dataclass(frozen=True)
 class RewardSpec:
+    """A reward program: weighted terms summed per env per tick.
+
+    Custom terms are statically checked at construction against the
+    per-env row-wise contract (no cross-env reductions, no env-axis
+    contractions, no float32 absolute-time casts — the jaxpr checker in
+    :mod:`repro.analysis`; rules in ROADMAP.md "Invariant catalog").
+    ``unchecked=True`` skips the check (logged) for fns the tracer cannot
+    probe at spec time; they are still checked at true shapes when a
+    ``*_sharded``/fused ``PerceptaSystem`` is constructed.
+    """
     terms: tuple
+    unchecked: bool = False
+
+    def __post_init__(self):
+        if self.unchecked:
+            logging.getLogger(__name__).info(
+                "RewardSpec(unchecked=True): skipping the static contract "
+                "check on %d term(s); custom fns will still be checked at "
+                "system construction for sharded/fused modes",
+                len(self.terms))
+            return
+        if any(t.kind == "custom" for t in self.terms):
+            # lazy import: analysis depends on jax only, but keep reward's
+            # import graph flat for everything that never builds a spec
+            from repro.analysis import check_reward_terms
+            check_reward_terms(self.terms)
 
     def compute(self, features, actions, prev_actions=None):
         """features (..., E, F), actions (..., E, A) ->

@@ -33,7 +33,12 @@ def env_mesh(n_envs: int, devices=None, axis_name: str = ENV_AXIS) -> Mesh:
 
     The (K, E, S, M) scan batch is data-parallel over E (per-env state rows
     never interact), so the mesh is a single ``data`` axis over the host's
-    devices. Uses the largest device count that divides ``n_envs`` — on a
+    devices. The "never interact" part is a checkable contract: everything
+    dispatched on this mesh must be per-env row-wise, with dots phrased so
+    rounding is independent of rows-per-device (``linear_policy``'s
+    multiply+reduce) — ``repro.analysis`` enforces it on the decision path
+    at system construction by jaxpr provenance (ROADMAP.md "Invariant
+    catalog"). Uses the largest device count that divides ``n_envs`` — on a
     lone CPU device this degenerates to a 1-device mesh and ``shard_map``
     becomes a no-op partitioning, which is what lets the sharded mode run
     (and be tested) everywhere. Multi-device CPU recipe:

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import (ModelConfig, ShapeConfig, ShardingConfig,
                                 TrainConfig)
 from repro.distribution import sharding as shd
@@ -126,11 +127,11 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         return new_params, new_opt, metrics
 
     metrics_sh = {k: rep for k in ("ce", "aux", "loss", "grad_norm", "lr")}
-    fn = jax.jit(
+    fn = compat.jit_donated(
         train_step,
+        donate_argnums=(0, 1),
         in_shardings=(param_sh, opt_sh, batch_sh),
         out_shardings=(param_sh, opt_sh, metrics_sh),
-        donate_argnums=(0, 1),
     )
     return fn, (pspecs, opt_specs, in_specs), (param_sh, opt_sh, batch_sh), model
 
@@ -176,10 +177,10 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                                   shd.cache_rules(perf))
     logits_sh = shd.batch_sharding(mesh, 2, perf, batch_size=B)
 
-    fn = jax.jit(model.decode_step,
-                 in_shardings=(param_sh, batch_sh, cache_sh),
-                 out_shardings=(logits_sh, cache_sh),
-                 donate_argnums=(2,))
+    fn = compat.jit_donated(model.decode_step,
+                            donate_argnums=(2,),
+                            in_shardings=(param_sh, batch_sh, cache_sh),
+                            out_shardings=(logits_sh, cache_sh))
     return fn, (pspecs, in_specs, cache_specs), (param_sh, batch_sh, cache_sh), model
 
 

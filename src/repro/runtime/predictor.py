@@ -145,6 +145,11 @@ class Predictor:
         self.model = model
         self.reward_spec = reward_spec
         self.action_space = action_space
+        # recorded so the construction-time contract checker
+        # (repro.analysis.check_system) can probe the decide path at the
+        # true (E, F) shapes without re-deriving them from the pipeline
+        self.n_envs = n_envs
+        self.n_features = n_features
         self.db = db
         self.replay = rp.init(n_envs, replay_capacity, n_features,
                               action_space.n)

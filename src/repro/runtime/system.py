@@ -148,7 +148,8 @@ class PerceptaSystem:
                  t0: float = 0.0, manual_time: bool = False,
                  scan_k=8, ingest: str = "columnar",
                  autotune: Optional[dict] = None,
-                 batched_consume: bool = True):
+                 batched_consume: bool = True,
+                 contract_check: bool = True):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -172,6 +173,26 @@ class PerceptaSystem:
         # here and only does host bookkeeping (absorb_fused) afterwards
         decide = predictor.make_decide_fn() if self.fused_decide else None
         self._dstate = predictor.decide_state() if self.fused_decide else None
+        # construction-time invariant gate (ROADMAP item 2): statically
+        # check the decision path's jaxpr BEFORE building/compiling the
+        # engine, so a cross-env contraction (silent 1-ulp shard
+        # divergence), a hidden host callback in the scan body, or a
+        # float32 absolute-time cast fails registration with the offending
+        # primitive + source line. Env-axis rules bind only under the
+        # sharded dispatches (a fused non-sharded build may legally run a
+        # non-row-wise model); contract_check=False skips the gate.
+        self.contract_check = bool(contract_check)
+        if self.contract_check and (self.fused_decide
+                                    or pipe_mode in _SHARDED_PIPE_MODES):
+            from repro import analysis
+            # env rules bind only where the decision math itself runs
+            # inside the env-sharded dispatch (fused+sharded); in plain
+            # scan_sharded the Predictor consumes on the host, unsharded
+            analysis.check_system(
+                predictor, decide=decide, dstate=self._dstate,
+                sharded=(self.fused_decide
+                         and pipe_mode in _SHARDED_PIPE_MODES),
+                label=f"PerceptaSystem(mode={mode!r})")
         # predictor tick index of this system's window 0: export-time
         # reconstruction maps tick idx -> window (idx - base); ticks issued
         # BEFORE this system keep their host-mirror times

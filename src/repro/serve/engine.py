@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 @dataclass
 class Request:
@@ -71,7 +73,9 @@ class ServeEngine:
             merged = jax.tree.map(merge, cache, new_cache)
             return logits, merged
 
-        self._decode = jax.jit(step, donate_argnums=(2,))
+        # donation routes through compat.jit_donated (the repo-wide rule:
+        # it de-aliases duplicate donated buffers and keeps .lower working)
+        self._decode = compat.jit_donated(step, donate_argnums=(2,))
         self._last_tokens = np.zeros((batch_slots, 1), np.int32)
         self.stats = {"ticks": 0, "tokens_out": 0, "admitted": 0,
                       "retired": 0, "timeouts": 0}
