@@ -12,8 +12,8 @@
 # (report-only: single-run numbers drift on shared boxes).
 PY ?= python
 
-.PHONY: test lint bench-smoke bench-pr2 bench-pr3 bench-pr4 bench-pr5 \
-	bench-pr6 ci
+.PHONY: test lint train-smoke bench-smoke bench-pr2 bench-pr3 bench-pr4 \
+	bench-pr5 bench-pr6 bench-pr7 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -25,13 +25,19 @@ test:
 lint:
 	PYTHONPATH=src $(PY) -m repro.analysis.lint --jaxpr-builtins
 
+# online-retraining smoke (PR 7): the end-to-end
+# sample -> update -> hot-swap -> checkpoint -> restore chain via the
+# crash-recovery example (asserts version continuity and attribution)
+train-smoke:
+	PYTHONPATH=src $(PY) examples/train_retrain.py --windows 20
+
 # CI pass: writes BENCH_smoke.json (untracked scratch) so repeated CI runs
 # never clobber the committed BENCH_prN.json trajectory records, then
-# reports >10% throughput regressions vs the committed BENCH_pr5.json
+# reports >10% throughput regressions vs the committed BENCH_pr7.json
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
 		--json BENCH_smoke.json
-	$(PY) -m benchmarks.compare BENCH_pr5.json BENCH_smoke.json
+	$(PY) -m benchmarks.compare BENCH_pr7.json BENCH_smoke.json
 
 # regenerate the committed perf-trajectory artifacts (run manually per PR)
 bench-pr2:
@@ -65,4 +71,12 @@ bench-pr6:
 		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|autotune|columnar|contract_check" \
 		--json BENCH_pr6.json
 
-ci: lint test bench-smoke
+# PR 7: the online-retraining cells (device sample+update vs host export,
+# serving windows/s with overlapped training on vs off) next to the
+# scan-engine trajectory cells
+bench-pr7:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|autotune|columnar|contract_check" \
+		--json BENCH_pr7.json
+
+ci: lint test train-smoke bench-smoke

@@ -1023,6 +1023,220 @@ def bench_contract_check(quick=False):
         "1% budget")
 
 
+def bench_online_train(quick=False):
+    """Two cells for the device-resident online retraining path (PR 7):
+
+    * sample+update (full E=256 x C=4096 ring, F=8, A=4): the jitted
+      ``sample_device`` + AdamW step — ONE dispatch touching only
+      ``batch`` sampled rows — vs the host round-trip it replaces:
+      ``export_for_training`` (full-ring device->host copy, chronological
+      roll, env-id anonymization) + numpy minibatch gather + the same
+      closed-form TD gradients and AdamW in numpy. Acceptance: the
+      device step >= 3x the export path.
+    * overlapped serving (the K=32/E=256 fused cell): windows/s of the
+      fused decide engine driving the trainer's batch-boundary protocol
+      (``apply_pending`` before the dispatch, ``dispatch`` after) ON vs
+      OFF — the train step rides the dispatch bubble, so the serving
+      cost bound is <= 10%.
+    Both cells interleave their legs and report the MEDIAN of per-pair
+    ratios (the shared-box drift protocol of the overlap cells).
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core import PipelineConfig
+    from repro.core import pipeline as pl
+    from repro.core import replay as rp
+    from repro.core.frame import make_raw_window
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.predictor import (ActionSpace, Predictor,
+                                         linear_policy)
+    from repro.runtime.trainer import OnlineTrainer, default_train_cfg
+
+    # --- cell i: device sample+update vs host export + numpy update -------
+    E, CAP, F, A, B = 256, 4096, 8, 4, 256
+    cfg_t = default_train_cfg()
+    rngn = np.random.RandomState(0)
+    pred = Predictor(linear_policy(F, A),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.full(A, -1.0), np.full(A, 1.0)),
+                     E, F, replay_capacity=CAP)
+    trainer = OnlineTrainer(pred, batch_size=B, train_cfg=cfg_t)
+    # fill the ring in one scatter (CAP ticks of E envs)
+    buf = rp.add_batch(
+        rp.init(E, CAP, F, A),
+        jnp.asarray(rngn.normal(0, 1, (CAP, E, F)), jnp.float32),
+        jnp.asarray(rngn.uniform(-1, 1, (CAP, E, A)), jnp.float32),
+        jnp.asarray(rngn.normal(0, 2, (CAP, E)), jnp.float32),
+        jnp.asarray(rngn.normal(0, 1, (CAP, E, F)), jnp.float32),
+        jnp.arange(CAP, dtype=jnp.int32))
+    jax.block_until_ready(buf.obs)
+
+    steps = 2 if quick else 4
+    dev = [pred.policy_params, trainer.train_state]
+    key = [jax.random.PRNGKey(0)]
+
+    def run_device():
+        t0 = time.time()
+        for _ in range(steps):
+            key[0], sub = jax.random.split(key[0])
+            p, st, loss, gn, hd = trainer.step_fn(dev[0], dev[1], buf, sub)
+            dev[0], dev[1] = p, st
+        jax.block_until_ready(dev[0]["w"])
+        return time.time() - t0
+
+    # numpy mirror of the SAME update: closed-form grads of td_loss
+    # (critic regression + 0.1 * policy-through-critic) + global-norm
+    # clip + AdamW with the same schedule (train/optimizer.py)
+    env_ids = [f"env-{i}" for i in range(E)]
+    hrng = np.random.RandomState(1)
+    h = {"w": np.asarray(pred.policy_params["w"], np.float32).copy(),
+         "qw": np.zeros(F + A, np.float32), "qb": np.float32(0.0)}
+    hm = {k: np.zeros_like(v) for k, v in h.items()}
+    hv = {k: np.zeros_like(v) for k, v in h.items()}
+    hstep = [0]
+
+    def run_host():
+        t0 = time.time()
+        for _ in range(steps):
+            exp = rp.export_for_training(buf, env_ids, "bench")
+            obs = np.asarray(exp["obs"]).reshape(-1, F)
+            acts = np.asarray(exp["actions"]).reshape(-1, A)
+            rews = np.asarray(exp["rewards"]).reshape(-1)
+            idx = hrng.randint(0, obs.shape[0], B)
+            o, a, r = obs[idx], acts[idx], rews[idx]
+            X = np.concatenate([o, a], 1)
+            e = X @ h["qw"] + h["qb"] - r
+            a_pi = np.tanh(o @ h["w"])
+            Xp = np.concatenate([o, a_pi], 1)
+            g = {"qw": 2.0 / B * X.T @ e - 0.1 / B * Xp.sum(0),
+                 "qb": np.float32(2.0 / B * e.sum() - 0.1),
+                 "w": -0.1 / B * o.T @ ((1 - a_pi ** 2)
+                                        * h["qw"][F:][None, :])}
+            gn = np.sqrt(sum(float((x ** 2).sum()) for x in g.values()))
+            scale = min(1.0, cfg_t.grad_clip / max(gn, 1e-12))
+            hstep[0] += 1
+            s = hstep[0]
+            t = np.clip((s - cfg_t.warmup_steps)
+                        / max(cfg_t.total_steps - cfg_t.warmup_steps, 1),
+                        0.0, 1.0)
+            lr = cfg_t.learning_rate * (0.1 + 0.9 * 0.5
+                                        * (1 + np.cos(np.pi * t)))
+            c1 = 1 - cfg_t.beta1 ** s
+            c2 = 1 - cfg_t.beta2 ** s
+            for k2 in h:
+                gk = g[k2] * scale
+                hm[k2] = cfg_t.beta1 * hm[k2] + (1 - cfg_t.beta1) * gk
+                hv[k2] = cfg_t.beta2 * hv[k2] + (1 - cfg_t.beta2) * gk ** 2
+                h[k2] = h[k2] - lr * ((hm[k2] / c1)
+                                      / (np.sqrt(hv[k2] / c2) + cfg_t.eps))
+        return time.time() - t0
+
+    run_device(), run_host()          # warmup (compile / first export)
+    pairs = 3 if quick else 5
+    t_dev = t_host = 0.0
+    ratios = []
+    for _pair in range(pairs):
+        th = run_host()
+        td = run_device()
+        t_host += th
+        t_dev += td
+        ratios.append(th / td)
+    speedup = float(np.median(ratios))
+    dev_ms = t_dev / (pairs * steps) * 1e3
+    host_ms = t_host / (pairs * steps) * 1e3
+    assert np.isfinite(h["w"]).all() and np.isfinite(
+        np.asarray(dev[0]["w"])).all()
+    SUMMARY["online_train"] = {
+        "cell": {"E": E, "capacity": CAP, "F": F, "A": A, "batch": B},
+        "device_step_ms": round(dev_ms, 2),
+        "host_export_step_ms": round(host_ms, 2),
+        "speedup": round(speedup, 2),
+        "pair_ratios": [round(r, 2) for r in ratios],
+    }
+    _row(f"online_train_sample_update_E{E}_C{CAP}", dev_ms * 1e3,
+         f"{dev_ms:.2f} ms device sample+update vs {host_ms:.1f} ms "
+         f"export+numpy | {speedup:.1f}x (median of {pairs} interleaved "
+         f"pair ratios) | acceptance >=3x")
+
+    # --- cell ii: serving windows/s with overlapped training on vs off ---
+    K, E2, S, T, M = 32, 256, 8, 8, 16
+    cfg = PipelineConfig(n_envs=E2, n_streams=S, n_ticks=T, tick_s=60.0,
+                         max_samples=M)
+    F2 = cfg.n_features
+    raws = make_raw_window(
+        rngn.normal(5, 2, (K, E2, S, M)).astype(np.float32),
+        rngn.uniform(0, T * 60, (K, E2, S, M)).astype(np.float32),
+        rngn.rand(K, E2, S, M) > 0.3)
+    starts = jnp.zeros((K, E2), jnp.float32)
+
+    def mk_leg(train):
+        p = Predictor(
+            linear_policy(F2, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            E2, F2, replay_capacity=4096)
+        engine = compat.jit_donated(
+            functools.partial(pl.run_many_decide, cfg, p.make_decide_fn()),
+            donate_argnums=(0, 1))
+        tr = OnlineTrainer(p, batch_size=B) if train else None
+        state = [pl.init_state(cfg), p.decide_state()]
+
+        def run():
+            # the system's batch-boundary protocol (runtime/trainer.py
+            # timeline): adopt the previous train result, serve, enqueue
+            # the next train step behind the decide dispatch
+            t0 = time.time()
+            if tr is not None:
+                state[1] = tr.apply_pending(state[1])
+            state[0], state[1], outs = engine(state[0], state[1], raws,
+                                              starts)
+            if tr is not None:
+                tr.dispatch(state[1])
+            jax.block_until_ready(outs.rewards)
+            # host consume of the small output leaves (fused-cell shape)
+            rews = np.asarray(outs.rewards)
+            _ = (np.asarray(outs.actions), np.asarray(outs.violated),
+                 [float(np.mean(rews[j])) for j in range(K)])
+            return time.time() - t0
+
+        return run, (lambda: tr.train_stats() if tr else None)
+
+    run_off, _ = mk_leg(train=False)
+    run_on, stats_on = mk_leg(train=True)
+    run_off(), run_on(), run_off(), run_on()     # warmup + donated redispatch
+    pairs2 = 4 if quick else 8
+    tot_off = tot_on = 0.0
+    oh_ratios = []
+    for _pair in range(pairs2):
+        a_t = run_off()
+        b_t = run_on()
+        tot_off += a_t
+        tot_on += b_t
+        oh_ratios.append(b_t / a_t)
+    wps_off = K * pairs2 / tot_off
+    wps_on = K * pairs2 / tot_on
+    overhead = float(np.median(oh_ratios))
+    st = stats_on()
+    SUMMARY["windows_per_s"]["fused_decide_train_off_E256"] = \
+        round(wps_off, 1)
+    SUMMARY["windows_per_s"]["fused_decide_train_on_E256"] = round(wps_on, 1)
+    SUMMARY["online_train"]["overlap"] = {
+        "overhead_ratio": round(overhead, 3),
+        "pair_ratios": [round(r, 2) for r in oh_ratios],
+        "train_steps_applied": st["applied"],
+        "policy_version": st["version"],
+    }
+    _row(f"online_train_overlap_K{K}_E{E2}", 1e6 / wps_on,
+         f"{wps_on:.0f} windows/s training-on vs {wps_off:.0f} off | "
+         f"overhead {overhead:.3f}x (median of {pairs2} interleaved pair "
+         f"ratios) | {st['applied']} updates applied, policy_version "
+         f"{st['version']} | acceptance <=1.10x")
+
+
 def bench_autotune(quick=False):
     import jax
 
@@ -1340,9 +1554,9 @@ def bench_roofline(quick=False):
 
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
        bench_scan_engine, bench_scan_sharded, bench_scan_async,
-       bench_predictor_batch, bench_fused_decide, bench_contract_check,
-       bench_autotune, bench_stage_breakdown, bench_deployment,
-       bench_serving, bench_kernels, bench_roofline]
+       bench_predictor_batch, bench_fused_decide, bench_online_train,
+       bench_contract_check, bench_autotune, bench_stage_breakdown,
+       bench_deployment, bench_serving, bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
 # tick-latency axes, the scan-engine acceptance cells (incl. the sharded
@@ -1351,7 +1565,8 @@ ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
 # autotuner grid, and the columnar-ingest cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
          bench_scan_async, bench_predictor_batch, bench_fused_decide,
-         bench_contract_check, bench_autotune, bench_columnar_ingest]
+         bench_online_train, bench_contract_check, bench_autotune,
+         bench_columnar_ingest]
 
 
 def main() -> None:

@@ -26,5 +26,5 @@ from repro.analysis.contracts import (  # noqa: F401
 )
 from repro.analysis.jaxpr_check import (  # noqa: F401
     Rules, check_fn, check_policy, check_reward_fn, check_reward_terms,
-    check_decide_fns, check_system, check_builtins,
+    check_decide_fns, check_system, check_train_step, check_builtins,
 )

@@ -629,6 +629,13 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
     s_tags = jax.tree.map(rank_env, s_avals)
     if hasattr(s_tags, "_replace") and hasattr(s_tags, "tick"):
         s_tags = s_tags._replace(tick="time")
+    if hasattr(s_tags, "_replace") and hasattr(s_tags, "policy"):
+        # policy weights are batch-global: a (F, A) leaf whose F happens to
+        # equal E must not be env-tagged (the rank heuristic can't tell),
+        # or the policy's own multiply+reduce over F would false-positive
+        # as an env reduction
+        s_tags = s_tags._replace(
+            policy=jax.tree.map(lambda _: "", s_avals.policy))
     frame = FeatureFrame(features=_sds((E, F)), raw=_sds((E, F)),
                          quality=_sds((E,)), tick_time=_sds((E,)))
     f_tags = FeatureFrame("env:0", "env:0", "env:0", "env:0")
@@ -639,16 +646,18 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
 
     # bank runs once per batch outside the scan: trace it on a K-stack of
     # the transition rows the traced step actually emits (step returns
-    # (new_state, outs, transition) — the transition is the trailing 6
-    # flat outputs by the DecideFns contract)
+    # (new_state, outs, transition) — the transition is the trailing 7
+    # flat outputs (obs, actions, reward, next_obs, tick, version,
+    # have_prev) by the DecideFns contract)
     K = 3
-    trans_flat = closed.out_avals[-6:]
+    trans_flat = closed.out_avals[-7:]
     trans_avals = [_sds((K,) + tuple(a.shape), a.dtype) for a in trans_flat]
     trans_tags = ["env:1" if len(a.shape) > 1 and a.shape[1] == E else ""
                   for a in trans_avals]
-    for i, a in enumerate(trans_flat):     # the tick column is int32 abs-time
-        if a.dtype == jnp.int32 and a.ndim == 0:
-            trans_tags[i] = "time"
+    # the tick column (position -3) is int32 abs-time; the version column
+    # beside it is an ordinal counter, NOT a time — it may narrow freely
+    if trans_flat[-3].dtype == jnp.int32 and trans_flat[-3].ndim == 0:
+        trans_tags[-3] = "time"
     replay_avals = jax.tree.map(
         lambda x: _sds(jnp.shape(x), jnp.asarray(x).dtype), dstate.replay)
     r_tags = jax.tree.map(rank_env, replay_avals)
@@ -656,6 +665,38 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
                     (replay_avals, trans_avals), (r_tags, trans_tags),
                     rules=rules, label=f"{label}.bank", scan_bound=False)
     _raise_if(v, f"{label}.bank")
+
+
+def check_train_step(fn: Callable, params, opt_state, replay, *,
+                     label: str = "train_step") -> None:
+    """Contract gate for the online policy-update step (run at
+    ``OnlineTrainer`` construction).
+
+    The loss MAY reduce over the sampled batch axis — a minibatch mean is
+    the whole point — so the env family is off (``Rules(env=False)``).
+    What must hold: no absolute-time float32 casts (the replay
+    ``tick_idx`` column enters tagged abs-time, so a loss that weights by
+    raw tick index is caught; rebase with a subtraction first) and no
+    host callbacks anywhere in the update (``scan_bound=True``: the step
+    overlaps the fused decide dispatch, and a hidden host sync inside it
+    re-serializes serving and training).
+
+    ``fn(params, opt_state, replay, rng)`` is traced on the real
+    arguments' shapes/dtypes; nothing executes.
+    """
+    to_aval = lambda t: jax.tree.map(
+        lambda x: _sds(jnp.shape(x), jnp.asarray(x).dtype), t)
+    blank = lambda t: jax.tree.map(lambda _: "", t)
+    p_avals, o_avals, r_avals = (to_aval(params), to_aval(opt_state),
+                                 to_aval(replay))
+    r_tags = blank(r_avals)
+    if hasattr(r_tags, "_replace") and hasattr(r_tags, "tick_idx"):
+        r_tags = r_tags._replace(tick_idx="time")
+    rng = _sds((2,), jnp.uint32)
+    v, _ = check_fn(fn, (p_avals, o_avals, r_avals, rng),
+                    (blank(p_avals), blank(o_avals), r_tags, ""),
+                    rules=Rules(env=False), label=label, scan_bound=True)
+    _raise_if(v, label)
 
 
 def check_system(predictor, decide=None, dstate=None, *, sharded: bool,

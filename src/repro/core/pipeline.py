@@ -345,8 +345,10 @@ def make_run_many_decide_sharded(cfg: PipelineConfig, decide, dstate,
     dim 0, the (K, ...) batch and stacked :class:`DecideBatch` outputs on
     dim 1, and every scalar (``tick_index``, ``have_prev``, the decide
     tick counter, the ring ``cursor``) replicated — ``sharding.env_specs``
-    resolves all of that by leaf rank. Policy weights enter as closure
-    constants of ``decide`` and are replicated by construction. The
+    resolves all of that by leaf rank. Policy weights ride the carry's
+    ``policy`` subtree (hot-swappable by the online trainer) and are
+    explicitly replicated by ``sharding.decide_specs`` — the rank rule
+    alone would mis-shard a weight whose leading dim divides E. The
     decision math must be per-env row-wise (builtin reward terms are;
     custom fns must not reduce across envs), which keeps the body
     collective-free and the outputs bit-identical to the unsharded
@@ -376,11 +378,11 @@ def make_run_many_decide_sharded(cfg: PipelineConfig, decide, dstate,
         fn, state_s, dstate_s, raw_s, starts_s)
     axis = mesh.axis_names[0]
     in_specs = (shard_lib.env_specs(state_s, 0, axis),
-                shard_lib.env_specs(dstate_s, 0, axis),
+                shard_lib.decide_specs(dstate_s, 0, axis),
                 shard_lib.env_specs(raw_s, 1, axis),
                 shard_lib.env_specs(starts_s, 1, axis))
     out_specs = (shard_lib.env_specs(out_state_s, 0, axis),
-                 shard_lib.env_specs(out_dstate_s, 0, axis),
+                 shard_lib.decide_specs(out_dstate_s, 0, axis),
                  shard_lib.env_specs(out_batch_s, 1, axis))
     sharded = compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                                out_specs=out_specs)

@@ -4,9 +4,12 @@
 anonymizing it and delivering it to the node responsible for training."
 
 The buffer is a fixed-capacity ring over (obs, action, reward, next_obs,
-tick_idx) batched across environments, living on device (shardable over the
-env dim). ``anonymize`` applies a salted hash to environment identities so
-exported datasets can't be joined back to buildings.
+tick_idx, policy_version) batched across environments, living on device
+(shardable over the env dim). ``anonymize`` applies a salted hash to
+environment identities so exported datasets can't be joined back to
+buildings. ``policy_version`` attributes every banked action to the policy
+that produced it (online retraining hot-swaps policies at batch
+boundaries; see ``runtime.trainer``).
 
 Long-horizon time rule: the device-side per-transition time is the EXACT
 int32 predictor tick index, never a float32 absolute timestamp — absolute
@@ -32,6 +35,9 @@ class ReplayBuffer(NamedTuple):
     rewards: jax.Array    # (E, C)
     next_obs: jax.Array   # (E, C, F)
     tick_idx: jax.Array   # (E, C) int32 — exact predictor tick index
+    version: jax.Array    # (E, C) int32 — policy_version that produced the
+                          # banked action (attribution column; monotone in
+                          # chronological order under online retraining)
     cursor: jax.Array     # () int32 — total ticks written (ring position)
 
     @property
@@ -49,16 +55,19 @@ def init(E, capacity, n_features, n_actions) -> ReplayBuffer:
         rewards=jnp.zeros((E, capacity), jnp.float32),
         next_obs=jnp.zeros((E, capacity, n_features), jnp.float32),
         tick_idx=jnp.zeros((E, capacity), jnp.int32),
+        version=jnp.zeros((E, capacity), jnp.int32),
         cursor=jnp.zeros((), jnp.int32),
     )
 
 
 def add(buf: ReplayBuffer, obs, actions, rewards, next_obs,
-        tick_idx) -> ReplayBuffer:
+        tick_idx, version=0) -> ReplayBuffer:
     """Write one tick for every env at the ring position (jit-safe).
 
     ``tick_idx`` is the integer tick index (scalar or (E,)), stored exactly
     as int32 — see the module docstring's long-horizon time rule.
+    ``version`` is the policy_version that produced the banked action
+    (scalar or (E,)), defaulting to 0 for callers without online training.
     """
     i = jnp.mod(buf.cursor, buf.capacity)
     upd = lambda b, x: b.at[:, i].set(jnp.asarray(x).astype(b.dtype))
@@ -68,12 +77,13 @@ def add(buf: ReplayBuffer, obs, actions, rewards, next_obs,
         rewards=upd(buf.rewards, rewards),
         next_obs=upd(buf.next_obs, next_obs),
         tick_idx=upd(buf.tick_idx, tick_idx),
+        version=upd(buf.version, version),
         cursor=buf.cursor + 1,
     )
 
 
 def add_many(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
-             mask=None) -> ReplayBuffer:
+             mask=None, version=None) -> ReplayBuffer:
     """Write K stacked ticks in ONE jit-safe call (leading K axis on every
     argument; ``tick_idx`` is (K,)).
 
@@ -86,19 +96,22 @@ def add_many(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
     K = obs.shape[0]
     if mask is None:
         mask = jnp.ones((K,), jnp.bool_)
+    if version is None:
+        version = jnp.zeros((K,), jnp.int32)
 
     def body(b, xs):
-        m, o, a, r, n, t = xs
+        m, o, a, r, n, t, ver = xs
         return jax.lax.cond(
-            m, lambda bb: add(bb, o, a, r, n, t), lambda bb: bb, b), None
+            m, lambda bb: add(bb, o, a, r, n, t, ver), lambda bb: bb, b), None
 
     out, _ = jax.lax.scan(body, buf,
-                          (mask, obs, actions, rewards, next_obs, tick_idx))
+                          (mask, obs, actions, rewards, next_obs, tick_idx,
+                           jnp.asarray(version, jnp.int32)))
     return out
 
 
 def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
-              mask=None) -> ReplayBuffer:
+              mask=None, version=None) -> ReplayBuffer:
     """Write K stacked ticks as ONE unique-indices scatter (jit-safe).
 
     Final buffer contents and cursor are bit-identical to K sequential
@@ -120,6 +133,8 @@ def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
     K = obs.shape[0]
     if mask is None:
         mask = jnp.ones((K,), jnp.bool_)
+    if version is None:
+        version = jnp.zeros((K,), jnp.int32)
     nm = mask.astype(jnp.int32)
     pos = buf.cursor + jnp.cumsum(nm) - 1      # write position per masked row
     total = buf.cursor + nm.sum()
@@ -138,12 +153,15 @@ def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
     E = buf.obs.shape[0]
     tick_b = jnp.broadcast_to(jnp.asarray(tick_idx, jnp.int32)[:, None],
                               (K, E))
+    ver_b = jnp.broadcast_to(jnp.asarray(version, jnp.int32)[:, None],
+                             (K, E))
     return ReplayBuffer(
         obs=upd(buf.obs, obs),
         actions=upd(buf.actions, actions),
         rewards=upd(buf.rewards, rewards),
         next_obs=upd(buf.next_obs, next_obs),
         tick_idx=upd(buf.tick_idx, tick_b),
+        version=upd(buf.version, ver_b),
         cursor=total,
     )
 
@@ -163,7 +181,38 @@ def sample(buf: ReplayBuffer, rng, batch: int):
     take = lambda x: x[es, ss]
     return {"obs": take(buf.obs), "actions": take(buf.actions),
             "rewards": take(buf.rewards), "next_obs": take(buf.next_obs),
-            "tick_idx": take(buf.tick_idx)}
+            "tick_idx": take(buf.tick_idx), "version": take(buf.version)}
+
+
+def sample_device(buf: ReplayBuffer, rng, batch: int):
+    """Jit-safe uniform minibatch draw FROM THE RING IN PLACE.
+
+    The device-side twin of :func:`sample` for the online training path:
+    no host transfer, no ``export_for_training`` round-trip — the gather
+    reads the live (donation-managed) ring storage directly, so a train
+    step jitted around this costs one dispatch and touches only
+    ``batch`` rows.
+
+    Where the host entry point RAISES on an empty buffer, a jitted fn
+    cannot branch on the traced ``cursor`` — instead the draw gates on
+    ``size == 0`` with a ``valid`` mask: slot indices are drawn uniformly
+    from ``[0, max(size, 1))`` (so a partially-filled ring only ever
+    yields live rows, and a wrapped ring samples every slot) and
+    ``valid`` is False for every row when the ring holds no transitions.
+    Consumers weight their loss by ``valid``; with the same threaded PRNG
+    ``rng`` and the same ring size the draw is bit-deterministic.
+    """
+    E = buf.obs.shape[0]
+    n = buf.size()
+    ke, ks = jax.random.split(rng)
+    es = jax.random.randint(ke, (batch,), 0, E)
+    ss = jax.random.randint(ks, (batch,), 0, jnp.maximum(n, 1))
+    valid = jnp.broadcast_to(n > 0, (batch,))
+    take = lambda x: x[es, ss]
+    return {"obs": take(buf.obs), "actions": take(buf.actions),
+            "rewards": take(buf.rewards), "next_obs": take(buf.next_obs),
+            "tick_idx": take(buf.tick_idx), "version": take(buf.version),
+            "valid": valid}
 
 
 def anonymize_env_ids(env_ids, salt: str) -> list:
@@ -221,5 +270,6 @@ def export_for_training(buf: ReplayBuffer, env_ids, salt: str,
         "rewards": take(buf.rewards),
         "next_obs": take(buf.next_obs),
         "tick_idx": tick_idx,
+        "version": take(buf.version),
         "times": times,
     }

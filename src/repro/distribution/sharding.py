@@ -76,6 +76,23 @@ def env_specs(shape_tree, env_axis: int, axis_name: str = ENV_AXIS):
                         is_leaf=lambda x: hasattr(x, "ndim"))
 
 
+def decide_specs(dstate_tree, env_axis: int, axis_name: str = ENV_AXIS):
+    """:func:`env_specs` for the fused decision carry, with the ``policy``
+    params subtree forced to replicate.
+
+    Policy weights are batch-global — a (F, A) weight has no env dim — but
+    the rank rule of :func:`env_specs` can't know that: any weight whose
+    leading dim happened to divide E would silently shard on the feature
+    dim and each device would run a different slice of the policy. The
+    carry travels as a ``DecideState`` NamedTuple, so the policy subtree's
+    specs are replaced wholesale with replicated ``P()``.
+    """
+    specs = env_specs(dstate_tree, env_axis, axis_name)
+    rep = jax.tree.map(lambda _: P(), dstate_tree.policy,
+                       is_leaf=lambda x: hasattr(x, "ndim"))
+    return specs._replace(policy=rep)
+
+
 def make_abstract_mesh(mesh_shape) -> "jax.sharding.AbstractMesh":
     """Planner-only mesh from ``((name, size), ...)`` — no devices needed.
 

@@ -71,19 +71,33 @@ class DecideState(NamedTuple):
     Lives inside the same donated/env-sharded carry pytree as the pipeline
     state: ``prev_obs``/``prev_actions`` and every replay-ring row shard on
     the env dim, the scalars (``have_prev``, ``tick``, the ring cursor)
-    replicate. ``tick`` is the EXACT int32 predictor tick index of the
-    next window — the long-horizon time rule's device half; absolute
-    float64 times are reconstructed host-side at export. Only the small
-    prev/tick part rides the per-window ``lax.scan`` carry; the replay
-    ring is written once per batch by the ``bank`` half of
+    replicate, and the ``policy`` params subtree replicates explicitly
+    (weights are batch-global, not per-env rows — see
+    ``sharding.decide_specs``). ``tick`` is the EXACT int32 predictor tick
+    index of the next window — the long-horizon time rule's device half;
+    absolute float64 times are reconstructed host-side at export. Only the
+    small prev/tick/policy part rides the per-window ``lax.scan`` carry;
+    the replay ring is written once per batch by the ``bank`` half of
     :class:`DecideFns` (threading the (E, C, F) storage through the scan
     carry measured a full ring copy per dispatch).
+
+    ``policy`` is the live policy-params pytree for parameterized models
+    (``{}`` for closure-only models), and ``version``/``prev_version``
+    carry the monotone policy_version attribution: ``version`` names the
+    policy producing THIS batch's actions, ``prev_version`` the one that
+    produced ``prev_actions`` (they differ exactly on the first window
+    after a hot-swap). Swaps happen host-side at batch boundaries only
+    (``runtime.trainer.OnlineTrainer``), so every K-batch is attributable
+    to exactly one policy.
     """
     prev_obs: jax.Array      # (E, F)
     prev_actions: jax.Array  # (E, A)
     have_prev: jax.Array     # () bool
     tick: jax.Array          # () int32
     replay: rp.ReplayBuffer
+    policy: dict             # params pytree ({} when not hot-swappable)
+    version: jax.Array       # () int32 — policy_version of ``policy``
+    prev_version: jax.Array  # () int32 — version that made prev_actions
 
 
 class DecideFns(NamedTuple):
@@ -93,24 +107,53 @@ class DecideFns(NamedTuple):
     per_term, violated), transition)`` runs one window's decision math
     inside the scan body (the carried ``replay`` field passes through
     untouched — it may be ``None`` there); ``transition`` is the
-    ``(prev_obs, prev_actions, reward, next_obs, tick, have_prev)`` row
-    the window banks. ``bank(ReplayBuffer, stacked transitions) ->
-    ReplayBuffer`` writes the whole batch after the scan in one exact
-    ring scatter (``replay.add_batch``).
+    ``(prev_obs, prev_actions, reward, next_obs, tick, version,
+    have_prev)`` row the window banks (7 flat trailing outputs — the
+    arity ``analysis.check_decide_fns`` keys on). ``bank(ReplayBuffer,
+    stacked transitions) -> ReplayBuffer`` writes the whole batch after
+    the scan in one exact ring scatter (``replay.add_batch``).
     """
     step: Callable
     bank: Callable
 
 
 class ModelAdapter:
-    """Wraps any policy fn(features (E,F)) -> actions (E,A)."""
+    """Wraps any policy fn(features (E,F)) -> actions (E,A).
 
-    def __init__(self, fn: Callable, name: str = "policy"):
+    Parameterized models additionally expose ``params`` (a trainable
+    pytree) and ``apply(params, features) -> actions``, with
+    ``fn == apply(params, .)``. The fused engine then threads the weights
+    as an EXPLICIT input (the ``DecideState.policy`` carry leaf) instead
+    of a traced-in closure constant, which is what makes race-free policy
+    hot-swap possible without retracing: the trainer replaces the carry
+    leaf at a batch boundary and the already-compiled scan runs the new
+    weights. Closure-only models (``params is None``) keep the old
+    behaviour and are not hot-swappable.
+    """
+
+    def __init__(self, fn: Callable, name: str = "policy",
+                 params=None, apply: Optional[Callable] = None):
         self.fn = fn
         self.name = name
+        self.params = params
+        self.apply = apply
 
     def __call__(self, features):
         return self.fn(features)
+
+
+def policy_call(model):
+    """``(apply_fn, params)`` view of a model, parameterized or not.
+
+    Parameterized adapters route their weights explicitly; closure-only
+    models get an empty params pytree and an apply that ignores it — both
+    shapes trace to the same per-window ops, so fused outputs stay
+    bit-identical to the reference paths either way.
+    """
+    if getattr(model, "apply", None) is not None \
+            and getattr(model, "params", None) is not None:
+        return model.apply, model.params
+    return (lambda params, feats: model(feats)), {}
 
 
 def linear_policy(n_features: int, n_actions: int, seed: int = 0,
@@ -129,13 +172,16 @@ def linear_policy(n_features: int, n_actions: int, seed: int = 0,
     """
     k = jax.random.PRNGKey(seed)
     W = jax.random.normal(k, (n_features, n_actions)) / jnp.sqrt(n_features)
+    params = {"w": W}
 
-    @jax.jit
-    def fn(feats):
-        logits = (feats[..., :, None] * W[None, :, :]).sum(-2)
+    def apply(params, feats):
+        logits = (feats[..., :, None] * params["w"][None, :, :]).sum(-2)
         return jnp.tanh(logits) * (high - low) / 2 + (high + low) / 2
 
-    return ModelAdapter(fn, "linear_policy")
+    # construction-time snapshot for direct ``model(feats)`` callers; the
+    # runtime paths route through (apply, params) and see hot-swapped weights
+    fn = jax.jit(lambda feats: apply(params, feats))
+    return ModelAdapter(fn, "linear_policy", params=params, apply=apply)
 
 
 class Predictor:
@@ -161,14 +207,23 @@ class Predictor:
             "obs": jnp.zeros((n_envs, n_features), jnp.float32),
             "actions": jnp.zeros((n_envs, action_space.n), jnp.float32),
             "have": False,
+            "version": 0,  # policy_version that produced prev_actions
         }
         self.stats = {"ticks": 0, "violations": 0}
+        # (apply, params) view: parameterized models thread weights as
+        # explicit jit inputs on EVERY consume path (reference and fused),
+        # so one calling convention traces everywhere and hot-swapped
+        # weights reuse the compiled programs without retracing
+        apply_fn, params0 = policy_call(model)
+        self._apply = apply_fn
+        self.policy_params = params0
+        self.policy_version = 0
         low = jnp.asarray(action_space.low, jnp.float32)
         high = jnp.asarray(action_space.high, jnp.float32)
 
         def _step(features, raw, prev_obs, prev_actions, replay, tick_idx,
-                  have_prev):
-            actions = self.model(features)
+                  have_prev, params, version):
+            actions = apply_fn(params, features)
             actions, violated = validate_actions(actions, low, high)
             # rewards are computed on engineering units, not z-scores
             reward, per_term = self.reward_spec.compute(
@@ -176,7 +231,7 @@ class Predictor:
             new_replay = jax.lax.cond(
                 have_prev,
                 lambda r: rp.add(r, prev_obs, prev_actions, reward, features,
-                                 tick_idx),
+                                 tick_idx, version),
                 lambda r: r,
                 replay)
             return actions, reward, per_term, violated, new_replay
@@ -184,7 +239,7 @@ class Predictor:
         self._step = jax.jit(_step)
 
         def _steps(features, raw, tick_idx, prev_obs, prev_actions,
-                   have_prev, replay):
+                   have_prev, replay, params, version, prev_version):
             """K windows in one dispatch. The policy/validate scan runs the
             SAME per-window (E, F) computation ``_step`` jits (a batched
             K-leading gemm could block/accumulate differently on some
@@ -193,7 +248,7 @@ class Predictor:
             below, so reward terms — elementwise over the stack — evaluate
             K-leading in one shot."""
             def body(carry, f):
-                actions = self.model(f)
+                actions = apply_fn(params, f)
                 actions, violated = validate_actions(actions, low, high)
                 return carry, (actions, violated)
 
@@ -204,13 +259,17 @@ class Predictor:
                                                          prev_act_seq)
             # transition j stores (obs/actions entering window j, reward j,
             # next_obs = window j's features); only the first row of the
-            # batch can lack a predecessor
+            # batch can lack a predecessor — and only row 0's banked action
+            # can carry a different (earlier) policy_version
             K = features.shape[0]
             prev_obs_seq = jnp.concatenate([prev_obs[None], features[:-1]], 0)
             mask = jnp.concatenate([have_prev[None],
                                     jnp.ones((K - 1,), jnp.bool_)])
+            ver_seq = jnp.concatenate(
+                [prev_version[None], jnp.full((K - 1,), version, jnp.int32)])
             new_replay = rp.add_many(replay, prev_obs_seq, prev_act_seq,
-                                     rewards, features, tick_idx, mask)
+                                     rewards, features, tick_idx, mask,
+                                     ver_seq)
             return (actions, rewards, per_term, violated, features[-1],
                     actions[-1], new_replay)
 
@@ -229,7 +288,20 @@ class Predictor:
             have_prev=jnp.asarray(bool(self._prev["have"])),
             tick=jnp.asarray(self.stats["ticks"], jnp.int32),
             replay=self.replay,
+            policy=self.policy_params,
+            version=jnp.asarray(self.policy_version, jnp.int32),
+            prev_version=jnp.asarray(self._prev["version"], jnp.int32),
         )
+
+    def adopt_policy(self, params, version: int) -> None:
+        """Sync the Predictor's host-side policy mirror after a fused-carry
+        hot-swap (the live weights travel in ``DecideState.policy``; this
+        keeps ``policy_params``/``policy_version`` — and any later
+        ``decide_state()`` rebuild — consistent with the device carry)."""
+        self.policy_params = params
+        if getattr(self.model, "params", None) is not None:
+            self.model.params = params
+        self.policy_version = int(version)
 
     def make_decide_fn(self) -> DecideFns:
         """Decision protocol for the fused pipeline scan (:class:`DecideFns`).
@@ -247,26 +319,32 @@ class Predictor:
         ``linear_policy`` for the shard-size-invariant dot phrasing)."""
         low = jnp.asarray(self.action_space.low, jnp.float32)
         high = jnp.asarray(self.action_space.high, jnp.float32)
-        model, spec = self.model, self.reward_spec
+        apply_fn, spec = self._apply, self.reward_spec
 
         def step(carry: DecideState, feats):
-            actions = model(feats.features)
+            actions = apply_fn(carry.policy, feats.features)
             actions, violated = validate_actions(actions, low, high)
             reward, per_term = spec.compute(feats.raw, actions,
                                             carry.prev_actions)
             # transition entering this window: only bankable once a
-            # predecessor exists (the mask the bank applies)
+            # predecessor exists (the mask the bank applies); it is
+            # attributed to the version that produced its ACTION —
+            # carry.prev_version, which trails carry.version by exactly the
+            # first window after a batch-boundary hot-swap
             transition = (carry.prev_obs, carry.prev_actions, reward,
-                          feats.features, carry.tick, carry.have_prev)
+                          feats.features, carry.tick, carry.prev_version,
+                          carry.have_prev)
             new = DecideState(prev_obs=feats.features, prev_actions=actions,
                               have_prev=jnp.ones((), jnp.bool_),
-                              tick=carry.tick + 1, replay=carry.replay)
+                              tick=carry.tick + 1, replay=carry.replay,
+                              policy=carry.policy, version=carry.version,
+                              prev_version=carry.version)
             return new, (actions, reward, per_term, violated), transition
 
         def bank(replay, transitions):
-            obs, actions, rewards, next_obs, tick, mask = transitions
+            obs, actions, rewards, next_obs, tick, version, mask = transitions
             return rp.add_batch(replay, obs, actions, rewards, next_obs,
-                                tick, mask)
+                                tick, mask, version)
 
         return DecideFns(step, bank)
 
@@ -302,9 +380,11 @@ class Predictor:
         actions, reward, per_term, violated, self.replay = self._step(
             features, raw, self._prev["obs"], self._prev["actions"],
             self.replay, jnp.asarray(idx, jnp.int32),
-            jnp.asarray(self._prev["have"]))
+            jnp.asarray(self._prev["have"]), self.policy_params,
+            jnp.asarray(self._prev["version"], jnp.int32))
         self._record_times(idx, [tick_time])
-        self._prev = {"obs": features, "actions": actions, "have": True}
+        self._prev = {"obs": features, "actions": actions, "have": True,
+                      "version": self.policy_version}
         self.stats["ticks"] += 1
         self.stats["violations"] += int(np.asarray(violated).sum())
         return np.asarray(actions), np.asarray(reward), np.asarray(per_term)
@@ -328,9 +408,12 @@ class Predictor:
          self.replay) = self._steps(
             features, raw, tick_idx, self._prev["obs"],
             self._prev["actions"], jnp.asarray(self._prev["have"]),
-            self.replay)
+            self.replay, self.policy_params,
+            jnp.asarray(self.policy_version, jnp.int32),
+            jnp.asarray(self._prev["version"], jnp.int32))
         self._record_times(base, tick_times)
-        self._prev = {"obs": last_obs, "actions": last_actions, "have": True}
+        self._prev = {"obs": last_obs, "actions": last_actions, "have": True,
+                      "version": self.policy_version}
         self.stats["ticks"] += K
         self.stats["violations"] += int(np.asarray(violated).sum())
         return np.asarray(actions), np.asarray(rewards), np.asarray(per_term)

@@ -78,6 +78,19 @@ of stream time — minutes of wall time at high ``speedup``). The seasonal
 tick-of-day phase survives via the exact integer ``PipelineConfig.tick0``
 offset derived from ``t0``.
 
+``train="online"`` (fused-decide modes only) attaches a
+``runtime.trainer.OnlineTrainer``: one jitted sample+AdamW update per
+K-window batch, enqueued right AFTER the fused decide dispatch so it runs
+in the dispatch bubble while the host consumes. Policy hot-swaps happen
+only at batch boundaries (``apply_pending`` swaps the carry's ``policy``/
+``version`` leaves before the next dispatch), ``policy_version`` increments
+monotonically per applied update, and every replay row / LogDB row is
+stamped with the version that produced its action — so each K-batch is
+attributable to exactly one policy. With training off (or an idle trainer
+on an empty ring) the decide path is bit-identical to the plain fused
+modes. Accessors: ``policy_version()``, ``snapshot_policy()``,
+``train_stats()``.
+
 ``ingest="columnar"`` (the default) moves record flow onto the
 structure-of-arrays fast path: Receivers hand whole polls to
 ``Translator.translate_batch`` which publishes one ``RecordBatch`` per
@@ -149,7 +162,9 @@ class PerceptaSystem:
                  scan_k=8, ingest: str = "columnar",
                  autotune: Optional[dict] = None,
                  batched_consume: bool = True,
-                 contract_check: bool = True):
+                 contract_check: bool = True,
+                 train: Optional[str] = None,
+                 train_cfg: Optional[dict] = None):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -241,6 +256,24 @@ class PerceptaSystem:
         self.state = self.pipeline.init_state()
         self._prefetcher: Optional[WindowPrefetcher] = None
         self.predictor = predictor
+        # train="online": device-resident retraining interleaved with the
+        # fused decide dispatches (runtime.trainer). The trainer needs the
+        # decision state in the device carry, so it composes only with the
+        # fused-decide modes; train_cfg kwargs pass through to OnlineTrainer
+        # (batch_size, train_cfg, seed, checkpoint_dir, checkpoint_every).
+        self.trainer = None
+        if train is not None:
+            if train != "online":
+                raise ValueError(f"unknown train mode {train!r} "
+                                 "(expected None or 'online')")
+            if not self.fused_decide:
+                raise ValueError(
+                    "train='online' rides the fused decide carry: use a "
+                    f"scan_fused_decide* mode, not {mode!r}")
+            from repro.runtime.trainer import OnlineTrainer
+            kw = dict(train_cfg or {})
+            kw.setdefault("contract_check", self.contract_check)
+            self.trainer = OnlineTrainer(predictor, **kw)
         self.forwarders = forwarders
         self.db = db
         self.speedup = speedup
@@ -305,6 +338,8 @@ class PerceptaSystem:
             r.stop()
         if self._prefetcher is not None:
             self._prefetcher.stop()
+        if self.trainer is not None:
+            self.trainer.close()
 
     # --- synchronous operation (benchmarks / tests) ---------------------------
     def pump_receivers(self):
@@ -346,9 +381,11 @@ class PerceptaSystem:
                 self.forwarders.dispatch(env, t_end, actions[i])
         if self.db is not None:
             obs = np.asarray(feats.features)
+            ver = int(self.predictor.policy_version)
             for i, env in enumerate(self.env_ids):
                 self.db.append(env, t_end, obs[i], actions[i],
-                               float(rewards[i]))
+                               float(rewards[i]),
+                               extra={"policy_version": ver})
 
         self.window_index += 1
         self.metrics["tick_latency_s"].append(latency)
@@ -410,8 +447,8 @@ class PerceptaSystem:
         bounds = [self.window_bounds(self.window_index + j) for j in range(k)]
         raw, counts = self.assemble_windows(bounds)
         if self.fused_decide:
-            outs, t_dispatch = self._dispatch_decide(raw, k)
-            return self._consume_decide(bounds, counts, outs, t_dispatch)
+            outs, t_dispatch, ver = self._dispatch_decide(raw, k)
+            return self._consume_decide(bounds, counts, outs, t_dispatch, ver)
         feats, frames, t_dispatch = self._dispatch_scan(raw, k)
         return self._consume_scan(bounds, counts, feats, frames, t_dispatch)
 
@@ -473,7 +510,9 @@ class PerceptaSystem:
                 self.forwarders.dispatch_window(t_end, actions)
             if self.db is not None:
                 self.db.append_many(self.env_ids, t_end, feat_np[j], actions,
-                                    rewards)
+                                    rewards,
+                                    extra={"policy_version":
+                                           int(self.predictor.policy_version)})
             self.window_index += 1
             # comparable to run_window's latency_s: amortized device +
             # predictor share of the batch plus this window's host work
@@ -497,14 +536,28 @@ class PerceptaSystem:
         K-window batch: features flow straight into the policy/validate/
         reward/replay step inside the scan, and BOTH carries (pipeline
         state + decide state) stay device-resident (donated in the sync
-        modes). No block — consumption blocks."""
+        modes). No block — consumption blocks.
+
+        With an attached trainer this is the batch boundary: the previous
+        train step's result hot-swaps the carry's policy/version leaves
+        BEFORE the dispatch (so the whole batch runs one policy), and a
+        new train step enqueues right AFTER it (so it fills the dispatch
+        bubble instead of delaying serving — the PR 3 priority-inversion
+        lesson). Returns ``(outs, t_dispatch, policy_version)`` with the
+        version that produced this batch's actions."""
+        if self.trainer is not None:
+            self._dstate = self.trainer.apply_pending(self._dstate)
+        ver = int(self.predictor.policy_version)
         t_dispatch = time.time()
         starts = jnp.zeros((k, self.cfg.n_envs), jnp.float32)
         self.state, self._dstate, outs = self.pipeline.run_many_decide(
             self.state, self._dstate, raw, starts)
-        return outs, t_dispatch
+        if self.trainer is not None:
+            self.trainer.dispatch(self._dstate)
+        return outs, t_dispatch, ver
 
-    def _consume_decide(self, bounds, counts, outs, t_dispatch) -> List[dict]:
+    def _consume_decide(self, bounds, counts, outs, t_dispatch,
+                        version: int = 0) -> List[dict]:
         """Drain host sinks from the SMALL fused outputs.
 
         The host fetches only actions (K, E, A), rewards (K, E), violation
@@ -532,7 +585,8 @@ class PerceptaSystem:
                 self.forwarders.dispatch_window(t_end, actions)
             if self.db is not None:
                 self.db.append_many(self.env_ids, t_end, feat_np[j], actions,
-                                    rewards)
+                                    rewards,
+                                    extra={"policy_version": version})
             self.window_index += 1
             latency = batch_latency / k + (time.time() - t_host0)
             self.metrics["tick_latency_s"].append(latency)
@@ -555,8 +609,8 @@ class PerceptaSystem:
         return the pending tuple ``_consume_batch`` expects."""
         k = len(batch.bounds)
         if self.fused_decide:
-            outs, td = self._dispatch_decide(batch.raw, k)
-            return (batch.bounds, batch.counts, outs, td)
+            outs, td, ver = self._dispatch_decide(batch.raw, k)
+            return (batch.bounds, batch.counts, outs, td, ver)
         feats, frames, td = self._dispatch_scan(batch.raw, k)
         return (batch.bounds, batch.counts, feats, frames, td)
 
@@ -602,6 +656,47 @@ class PerceptaSystem:
         buf = (self._dstate.replay if self.fused_decide
                else self.predictor.replay)
         return min(int(buf.cursor), buf.capacity)
+
+    def policy_version(self) -> int:
+        """Current monotone policy version (0 until a train step applies).
+
+        Every replay row and LogDB row carries the version that produced
+        its action, so exports are attributable per row; swaps land only
+        at batch boundaries, so all K windows of a batch share one
+        version."""
+        return int(self.predictor.policy_version)
+
+    def snapshot_policy(self):
+        """Donation-safe copy of the LIVE policy params (the device carry's
+        ``policy`` leaves in fused-decide modes, the predictor's host
+        mirror otherwise)."""
+        src = (self._dstate.policy if self.fused_decide
+               else self.predictor.policy_params)
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), src)
+
+    def train_stats(self) -> Optional[dict]:
+        """Trainer counters (dispatched/applied/skipped_empty, last loss
+        and grad norm, current version); None when training is off."""
+        return None if self.trainer is None else self.trainer.train_stats()
+
+    def restore_training(self):
+        """Crash recovery: restore the newest trainer checkpoint into the
+        LIVE serving path — trainer state, predictor host mirror, AND the
+        device carry's policy/version leaves (``trainer.restore_latest``
+        alone only covers the host side; the carry would keep serving the
+        construction-time weights). Returns ``(step, params, extra)`` or
+        ``None`` when no checkpoint exists."""
+        if self.trainer is None:
+            raise ValueError("restore_training: system built without "
+                             "train='online'")
+        out = self.trainer.restore_latest()
+        if out is None:
+            return None
+        _, params, _ = out
+        self._dstate = self._dstate._replace(
+            policy=jax.tree.map(jnp.asarray, params),
+            version=jnp.asarray(self.trainer.version, jnp.int32))
+        return out
 
     def export_replay(self, salt: str) -> dict:
         """Anonymized chronological replay export, any mode.

@@ -21,7 +21,7 @@ from repro import compat
 from repro.analysis import (
     ContractViolation, JAXPR_RULES, LINT_RULES, Rules,
     check_builtins, check_decide_fns, check_fn, check_policy,
-    check_reward_fn, check_reward_terms, check_system,
+    check_reward_fn, check_reward_terms, check_system, check_train_step,
 )
 from repro.analysis import lint as lint_mod
 from repro.core.reward import RewardSpec, RewardTerm, energy_reward_spec
@@ -195,6 +195,80 @@ def test_decide_fns_with_bad_custom_reward_rejected():
     with pytest.raises(ContractViolation) as ei:
         check_decide_fns(pred.make_decide_fn(), pred.decide_state(), E, F)
     assert "env-reduce" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr checker: the online train step (OnlineTrainer's construction gate)
+# ---------------------------------------------------------------------------
+
+def _train_fixture():
+    from repro.core import replay as rp
+    buf = rp.init(E, 8, F, A)
+    params = {"w": jnp.zeros((F, A), jnp.float32)}
+    tstate = {"m": {"w": jnp.zeros((F, A), jnp.float32)},
+              "step": jnp.zeros((), jnp.int32)}
+    return rp, buf, params, tstate
+
+
+def test_train_step_raw_tick_weighting_rejected():
+    """The bad fixture: a loss that weights transitions by the RAW tick
+    index casts absolute time to float32 — the t~2^24 collapse class, now
+    inside the update. The replay ``tick_idx`` column enters tagged, and
+    the tag must survive the minibatch gather."""
+    rp_mod, buf, params, tstate = _train_fixture()
+
+    def bad(params, tstate, replay, rng):
+        batch = rp_mod.sample_device(replay, rng, 8)
+        w = batch["tick_idx"].astype(jnp.float32)     # absolute-time cast
+        return jnp.sum(w * batch["rewards"]) + jnp.sum(params["w"])
+
+    with pytest.raises(ContractViolation) as ei:
+        check_train_step(bad, params, tstate, buf)
+    assert "time-cast" in str(ei.value)
+
+
+def test_train_step_rebased_tick_weighting_and_batch_reduce_accepted():
+    """The good twin: rebase tick_idx to a relative age FIRST (subtracting
+    two absolute times clears the tag), then narrow — and reduce freely
+    over the sampled batch axis (a minibatch mean is the point; the env
+    family is off for the train step)."""
+    rp_mod, buf, params, tstate = _train_fixture()
+
+    def good(params, tstate, replay, rng):
+        batch = rp_mod.sample_device(replay, rng, 8)
+        age = (batch["tick_idx"] - batch["tick_idx"][0]).astype(jnp.float32)
+        w = jnp.exp(-jnp.abs(age) / 100.0) * batch["valid"]
+        err = jnp.sum(jnp.square(batch["actions"]), axis=-1)
+        return jnp.mean(w * err) + jnp.sum(params["w"])
+
+    check_train_step(good, params, tstate, buf)   # must not raise
+
+
+def test_train_step_host_callback_rejected():
+    """A host callback anywhere in the update re-serializes serving and
+    training (the step overlaps the fused decide dispatch)."""
+    rp_mod, buf, params, tstate = _train_fixture()
+
+    def chatty(params, tstate, replay, rng):
+        batch = rp_mod.sample_device(replay, rng, 8)
+        jax.debug.callback(lambda r: None, batch["rewards"])
+        return jnp.sum(batch["rewards"] * batch["valid"])
+
+    with pytest.raises(ContractViolation) as ei:
+        check_train_step(chatty, params, tstate, buf)
+    assert "callback-in-scan" in str(ei.value)
+
+
+def test_real_trainer_step_accepted():
+    """The shipped OnlineTrainer step passes its own construction gate
+    (contract_check=True is the default — this builds one for real)."""
+    from repro.core.reward import energy_reward_spec as _ers
+    from repro.runtime.trainer import OnlineTrainer
+    pred = Predictor(linear_policy(F, A),
+                     _ers(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.full(A, -1.0), np.full(A, 1.0)),
+                     E, F, replay_capacity=8)
+    OnlineTrainer(pred, batch_size=4, contract_check=True)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,261 @@
+"""Device-resident online retraining (``runtime/trainer.py``).
+
+Three layers: ``replay.sample_device`` (the jit-safe in-place minibatch
+draw — masked on empty rings, live-slots-only when partially filled,
+whole-ring after wraparound, bit-deterministic under a threaded PRNG),
+the ``OnlineTrainer`` unit protocol (empty-ring exact no-op, applied
+updates move weights and bump ``policy_version``, host mirror and carry
+stay in sync), and the system-level guarantees: training disabled is
+bit-identical to the PR 5 fused path, every LogDB row and replay export
+row is stamped with the policy version that PRODUCED its action, and the
+checkpoint save -> restore cycle round-trips policy + train state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import replay as rp
+from repro.core.reward import energy_reward_spec
+from repro.runtime.predictor import (ActionSpace, ModelAdapter, Predictor,
+                                     linear_policy)
+from repro.runtime.trainer import OnlineTrainer, default_train_cfg
+
+from test_fused_decide import _system, _rows, _strip
+
+E, F, A = 2, 2, 2
+
+
+def _filled(cap, n, seed=0):
+    """Ring with n sequential adds of recognisable rows: obs[:, 0] ==
+    reward == tick index, so any sampled row can be cross-checked."""
+    r = np.random.RandomState(seed)
+    buf = rp.init(E, cap, F, A)
+    for j in range(n):
+        buf = rp.add(buf, jnp.full((E, F), float(j)),
+                     jnp.asarray(r.normal(0, 1, (E, A)), jnp.float32),
+                     jnp.full((E,), float(j)), jnp.zeros((E, F)),
+                     jnp.int32(j), version=jnp.int32(j % 3))
+    return buf
+
+
+def _pred(cap=16, seed=3):
+    return Predictor(linear_policy(F, A, seed=seed),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     E, F, replay_capacity=cap)
+
+
+# --------------------------------------------------------------------------
+# sample_device: the masked in-place minibatch draw
+# --------------------------------------------------------------------------
+
+def test_sample_device_empty_ring_masks_where_host_raises():
+    buf = rp.init(E, 8, F, A)
+    batch = rp.sample_device(buf, jax.random.PRNGKey(0), 16)
+    assert not np.asarray(batch["valid"]).any()
+    # rows are in-range garbage (slot 0), never NaN/OOB — safe to compute on
+    assert np.isfinite(np.asarray(batch["obs"])).all()
+    with pytest.raises(ValueError, match="empty"):
+        rp.sample(buf, jax.random.PRNGKey(0), 16)
+
+
+def test_sample_device_partial_ring_samples_live_slots_only():
+    buf = _filled(cap=8, n=3)
+    batch = rp.sample_device(buf, jax.random.PRNGKey(1), 64)
+    ticks = np.asarray(batch["tick_idx"])
+    assert np.asarray(batch["valid"]).all()
+    assert set(ticks.tolist()) == {0, 1, 2}      # no dead slots, all live
+    # row coherence: every column gathered from the SAME (env, slot)
+    assert (np.asarray(batch["obs"])[:, 0] == ticks).all()
+    assert (np.asarray(batch["rewards"]) == ticks).all()
+    assert (np.asarray(batch["version"]) == ticks % 3).all()
+
+
+def test_sample_device_post_wraparound_reaches_every_slot():
+    buf = _filled(cap=4, n=7)                    # live ticks: 3, 4, 5, 6
+    batch = rp.sample_device(buf, jax.random.PRNGKey(2), 64)
+    ticks = np.asarray(batch["tick_idx"])
+    assert set(ticks.tolist()) == {3, 4, 5, 6}
+    assert (np.asarray(batch["rewards"]) == ticks).all()
+
+
+def test_sample_device_bit_deterministic_and_jit_stable():
+    buf = _filled(cap=8, n=5)
+    key = jax.random.PRNGKey(7)
+    a = rp.sample_device(buf, key, 32)
+    b = rp.sample_device(buf, key, 32)
+    c = jax.jit(rp.sample_device, static_argnums=2)(buf, key, 32)
+    for k in a:
+        assert (np.asarray(a[k]) == np.asarray(b[k])).all(), k
+        assert (np.asarray(a[k]) == np.asarray(c[k])).all(), k
+
+
+# --------------------------------------------------------------------------
+# OnlineTrainer unit protocol
+# --------------------------------------------------------------------------
+
+def test_trainer_rejects_model_without_params():
+    pred = Predictor(ModelAdapter(lambda f: jnp.zeros(f.shape[:-1] + (A,)),
+                                  "opaque"),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     E, F)
+    with pytest.raises(ValueError, match="parameterized"):
+        OnlineTrainer(pred)
+
+
+def test_trainer_empty_ring_step_is_exact_noop():
+    pred = _pred()
+    tr = OnlineTrainer(pred, batch_size=8)
+    ds = pred.decide_state()
+    before = jax.tree.map(np.asarray, ds.policy)
+    tr.dispatch(ds)
+    ds2 = tr.apply_pending(ds)
+    assert tr.stats["skipped_empty"] == 1 and tr.stats["applied"] == 0
+    assert tr.version == 0 and pred.policy_version == 0
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(ds2.policy)):
+        assert (np.asarray(y) == x).all()       # no AdamW drift, bit-exact
+
+
+def test_trainer_applied_step_moves_weights_and_syncs_mirror():
+    pred = _pred()
+    tr = OnlineTrainer(pred, batch_size=16,
+                       train_cfg=default_train_cfg(learning_rate=1e-2))
+    ds = pred.decide_state()._replace(replay=_filled(cap=16, n=6))
+    w0 = np.asarray(ds.policy["w"]).copy()
+    tr.dispatch(ds)
+    ds = tr.apply_pending(ds)
+    assert tr.stats["applied"] == 1 and tr.version == 1
+    assert int(ds.version) == 1
+    assert np.isfinite(tr.stats["last_loss"]) and tr.stats["last_loss"] > 0
+    # step 1 fits the critic against the banked rewards (the policy term's
+    # gradient is zero while the critic is zero) ...
+    assert np.abs(np.asarray(tr.train_state["critic"]["qw"])).max() > 0
+    # ... so the policy moves from step 2 onward
+    tr.dispatch(ds)
+    ds = tr.apply_pending(ds)
+    assert tr.stats["applied"] == 2 and tr.version == 2
+    assert np.abs(np.asarray(ds.policy["w"]) - w0).max() > 0
+    # host mirror adopted the SAME weights (own buffer, not the carry's)
+    assert pred.policy_version == 2
+    assert (np.asarray(pred.policy_params["w"])
+            == np.asarray(ds.policy["w"])).all()
+
+
+def test_trainer_requires_fused_mode():
+    with pytest.raises(ValueError, match="fused"):
+        _system("scan", train="online")
+
+
+# --------------------------------------------------------------------------
+# System level: attribution + training-off bit-identity
+# --------------------------------------------------------------------------
+
+def test_training_disabled_bit_identical_and_version_zero(tmp_path):
+    """With no trainer attached the fused path must not move: results, DB
+    rows and replay export stay bit-identical to the PR 4/5 reference, and
+    every row carries policy_version 0 (attribution is total, not
+    training-gated)."""
+    ref = _system("scan", tmp_db=str(tmp_path / "ref"), batched_consume=True)
+    off = _system("scan_fused_decide", tmp_db=str(tmp_path / "off"))
+    rr, ro = ref.run_windows(7), off.run_windows(7)
+    ref.stop(), off.stop()
+    assert _strip(rr) == _strip(ro)
+    rows_ref, rows_off = _rows(ref.db), _rows(off.db)
+    assert rows_ref == rows_off
+    assert all(row["policy_version"] == 0 for row in rows_off)
+    exp = off.export_replay("s")
+    assert (np.asarray(exp["version"]) == 0).all()
+    ref.db.close(), off.db.close()
+
+
+def test_policy_version_attribution_rides_rows_and_replay(tmp_path):
+    """9 windows / scan_k=3 -> 3 batches. The trainer applies at each
+    boundary after the first, so batches serve versions 0, 1, 2; every
+    LogDB row is stamped with the version that served its window, and the
+    replay version column follows ACTION-producer semantics: the
+    transition banked at tick t carries the version that produced the
+    action at t-1, so only the first row of a batch carries the previous
+    batch's version."""
+    sys = _system("scan_fused_decide", tmp_db=str(tmp_path / "db"),
+                  train="online", train_cfg={"batch_size": 16})
+    sys.run_windows(9)
+    sys.stop()
+    assert sys.policy_version() == 2
+    st = sys.train_stats()
+    assert st["dispatched"] == 3 and st["applied"] == 2
+    rows = _rows(sys.db)
+    assert len(rows) == 9 * E
+    served = [row["policy_version"] for row in rows]
+    assert served == [0] * 6 + [1] * 6 + [2] * 6   # E rows per window
+    exp = sys.export_replay("s")
+    ver = np.asarray(exp["version"])
+    # ticks 1..8 (tick 0 has no predecessor); actions at ticks 0-2 came
+    # from v0, 3-5 from v1 (but tick 3's action is tick 2's successor ...
+    # the banked ACTION at tick t is the PREVIOUS action, hence the shift)
+    expect = np.array([0, 0, 0, 1, 1, 1, 2, 2], np.int32)
+    assert (ver == expect[None, :]).all()
+    # attribution is monotone in time for every env
+    assert (np.diff(ver, axis=1) >= 0).all()
+    sys.db.close()
+
+
+def test_training_on_matches_training_off_until_first_swap(tmp_path):
+    """The first served batch predates any applied update: its results and
+    rows must be bit-identical with training on vs off (the train step
+    overlaps serving but cannot perturb it)."""
+    on = _system("scan_fused_decide", tmp_db=str(tmp_path / "on"),
+                 train="online", train_cfg={"batch_size": 16})
+    off = _system("scan_fused_decide", tmp_db=str(tmp_path / "off"))
+    r_on, r_off = on.run_windows(3), off.run_windows(3)   # one K=3 batch
+    on.stop(), off.stop()
+    assert _strip(r_on) == _strip(r_off)
+    assert _rows(on.db) == _rows(off.db)
+    on.db.close(), off.db.close()
+
+
+# --------------------------------------------------------------------------
+# Checkpoint cycle: save -> fresh system -> restore
+# --------------------------------------------------------------------------
+
+def test_checkpoint_restore_roundtrips_policy_and_version(tmp_path):
+    ck = str(tmp_path / "ck")
+    sys1 = _system("scan_fused_decide", train="online",
+                   train_cfg={"batch_size": 16, "checkpoint_dir": ck,
+                              "checkpoint_every": 1})
+    sys1.run_windows(9)
+    sys1.stop()
+    v1 = sys1.policy_version()
+    w1 = np.asarray(sys1.predictor.policy_params["w"]).copy()
+    assert v1 == 2
+
+    sys2 = _system("scan_fused_decide", train="online",
+                   train_cfg={"batch_size": 16, "checkpoint_dir": ck})
+    assert sys2.policy_version() == 0
+    restored = sys2.restore_training()
+    assert restored is not None
+    step, params, extra = restored
+    assert step == 2 and extra["policy_version"] == v1
+    assert sys2.policy_version() == v1
+    assert (np.asarray(sys2.predictor.policy_params["w"]) == w1).all()
+    # the LIVE carry serves the restored weights, not construction-time ones
+    assert (np.asarray(sys2.snapshot_policy()["w"]) == w1).all()
+    # trainer bookkeeping resumed too: next applied step numbers from here
+    assert sys2.trainer.stats["applied"] == 2
+    # ... and the FIRST post-restore batch is stamped with the restored
+    # version (the stale-carry bug the carry swap above prevents)
+    sys2.run_windows(3)
+    exp2 = sys2.export_replay("s")
+    assert (np.asarray(exp2["version"]) == v1).all()
+    sys2.stop()
+
+
+def test_save_checkpoint_explicit(tmp_path):
+    pred = _pred()
+    tr = OnlineTrainer(pred, batch_size=8, checkpoint_dir=str(tmp_path))
+    step = tr.save_checkpoint(block=True)
+    assert step == 0
+    out = tr.restore_latest()
+    assert out is not None and out[0] == 0
+    tr.close()
