@@ -13,17 +13,21 @@
 PY ?= python
 
 .PHONY: test lint train-smoke bench-smoke bench-pr2 bench-pr3 bench-pr4 \
-	bench-pr5 bench-pr6 bench-pr7 ci
+	bench-pr5 bench-pr6 bench-pr7 bench-pr8 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# invariant gate (PR 6): the AST lint over src/examples/benchmarks plus the
-# jaxpr contract checker over every builtin policy/reward/decide path; rule
-# catalog in ROADMAP.md ("Invariant catalog") and
-# `python -m repro.analysis.lint --list-rules`
+# invariant gate (PR 6, extended PR 8): the AST lint over
+# src/examples/benchmarks, the jaxpr contract checker over every builtin
+# policy/reward/decide path, AND certification of every registered policy
+# (runtime.policies) against the full rule catalog; rule catalog in
+# ROADMAP.md ("Invariant catalog") and
+# `python -m repro.analysis.lint --list-rules`. Under GitHub Actions the
+# findings surface as per-line ::error annotations on the PR diff.
 lint:
-	PYTHONPATH=src $(PY) -m repro.analysis.lint --jaxpr-builtins
+	PYTHONPATH=src $(PY) -m repro.analysis.lint --jaxpr-builtins \
+		$(if $(GITHUB_ACTIONS),--format=github,)
 
 # online-retraining smoke (PR 7): the end-to-end
 # sample -> update -> hot-swap -> checkpoint -> restore chain via the
@@ -78,5 +82,12 @@ bench-pr7:
 	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
 		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|autotune|columnar|contract_check" \
 		--json BENCH_pr7.json
+
+# PR 8: the policy-certification cells (cold certify of the full registry
+# vs the cached path riding a fused standup) next to the trajectory cells
+bench-pr8:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|autotune|columnar|contract_check|certify" \
+		--json BENCH_pr8.json
 
 ci: lint test train-smoke bench-smoke

@@ -1023,6 +1023,105 @@ def bench_contract_check(quick=False):
         "1% budget")
 
 
+def bench_certify(quick=False):
+    """Certification-cost cells for the PR 8 policy registry gate
+    (``runtime.policies`` -> ``analysis.certify``):
+
+    * cold — ``certify_policy`` over every registered policy with a
+      cleared cache: trace + full rule walk (recurrent-carry fixed point,
+      pallas BlockSpec recursion) + the two-env-count param-replication
+      probe, per policy. This is the one-time cost a registry policy pays
+      the FIRST time it is stood up in a process.
+    * cached — the certificate-cache hit every repeated standup of the
+      same policy pays instead (the construction path of
+      ``PerceptaSystem(..., policy=...)``), measured against the fused
+      acceptance-regime standup (K=32, E=256, construction through the
+      first K-batch dispatch): must add <1% (asserted — mirroring the
+      PR 6 contract-check budget).
+    """
+    import time as _time
+
+    from repro.analysis import certify
+    from repro.core import PipelineConfig
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.policies import POLICIES
+    from repro.runtime.predictor import ActionSpace, Predictor
+    from repro.runtime.receivers import SimulatedDevice
+    from repro.runtime.system import PerceptaSystem, SourceSpec
+
+    # cold path: full-catalog certification of the whole registry
+    certify.clear_cache()
+    cold = {}
+    for key, builder in POLICIES.items():
+        t0 = _time.perf_counter()
+        certify.certify_policy(builder, name=key)
+        cold[key] = (_time.perf_counter() - t0) * 1e3
+    cold_ms = sum(cold.values())
+
+    # cached path: populate once, then time the hits (the repeated-standup
+    # cost — certify_policy returns the stored certificate by key)
+    for key, builder in POLICIES.items():
+        certify.certify_policy(builder, name=key, cache_key=("bench", key))
+    t0 = _time.perf_counter()
+    for key, builder in POLICIES.items():
+        certify.certify_policy(builder, name=key, cache_key=("bench", key))
+    cached_ms = (_time.perf_counter() - t0) * 1e3
+
+    # denominator: standing up a REAL registry policy ("rglru", stateful
+    # carry in the fused scan) at the fused acceptance regime; the
+    # predictor resolves the name through build_policy, so construction
+    # itself exercises the cached certification path after the warmup
+    K, E, S, T, M, CAP = 32, 256, 8, 8, 16, 4096
+
+    def stand_up():
+        srcs = [SourceSpec(f"s{i}", "mqtt",
+                           SimulatedDevice(f"st{i}", 60.0, base=3.0, seed=i))
+                for i in range(S)]
+        cfg = PipelineConfig(n_envs=E, n_streams=S, n_ticks=T, tick_s=60.0,
+                             max_samples=M)
+        pred = Predictor(
+            "rglru",
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            E, cfg.n_features, replay_capacity=CAP)
+        t0 = _time.perf_counter()
+        s = PerceptaSystem([f"b{i}" for i in range(E)], srcs, cfg, pred,
+                           speedup=1e9, manual_time=True,
+                           mode="scan_fused_decide", scan_k=K)
+        s.run_windows(K)
+        return s, _time.perf_counter() - t0
+
+    stand_up()[0].stop()          # warmup (jit plumbing + the F-probe cache)
+    reps = 1 if quick else 2
+    standups = []
+    for _ in range(reps):
+        s, dt = stand_up()
+        standups.append(dt)
+        s.stop()
+    base_s = min(standups)
+    pct = 100.0 * (cached_ms / 1e3) / base_s
+    cold_pct = 100.0 * (cold_ms / 1e3) / base_s
+    SUMMARY["certify"] = {
+        "cold_ms": {k: round(v, 1) for k, v in cold.items()},
+        "cold_total_ms": round(cold_ms, 1),
+        "cached_ms": round(cached_ms, 3),
+        "standup_s": round(base_s, 3),
+        "cached_overhead_pct": round(pct, 4),
+        "cold_overhead_pct": round(cold_pct, 2),
+    }
+    _row(f"certify_cold_{len(POLICIES)}policies", cold_ms * 1e3,
+         " | ".join(f"{k} {v:.0f} ms" for k, v in cold.items())
+         + " | full catalog, cleared cache")
+    _row(f"certify_cached_K{K}_E{E}", cached_ms * 1e3,
+         f"{cached_ms:.2f} ms for all {len(POLICIES)} cache hits | "
+         f"{pct:.3f}% of the {base_s:.2f}s rglru fused standup "
+         f"(cold would be {cold_pct:.1f}%) | budget <1%")
+    assert pct < 1.0, (
+        f"cached policy certification costs {pct:.3f}% of fused-mode "
+        f"system standup ({cached_ms:.2f} ms / {base_s:.2f} s) — over the "
+        "1% budget")
+
+
 def bench_online_train(quick=False):
     """Two cells for the device-resident online retraining path (PR 7):
 
@@ -1555,7 +1654,8 @@ def bench_roofline(quick=False):
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
        bench_scan_engine, bench_scan_sharded, bench_scan_async,
        bench_predictor_batch, bench_fused_decide, bench_online_train,
-       bench_contract_check, bench_autotune, bench_stage_breakdown,
+       bench_contract_check, bench_certify, bench_autotune,
+       bench_stage_breakdown,
        bench_deployment, bench_serving, bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
@@ -1565,8 +1665,8 @@ ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
 # autotuner grid, and the columnar-ingest cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
          bench_scan_async, bench_predictor_batch, bench_fused_decide,
-         bench_online_train, bench_contract_check, bench_autotune,
-         bench_columnar_ingest]
+         bench_online_train, bench_contract_check, bench_certify,
+         bench_autotune, bench_columnar_ingest]
 
 
 def main() -> None:

@@ -1,32 +1,44 @@
 """END-TO-END DRIVER (the paper's kind: real-time inference support).
 
-Percepta at the edge feeding a REAL transformer policy with batched
-requests: simulated MQTT/HTTP/AMQP devices -> Receivers -> Translators ->
-env queues -> Accumulator -> fused device tick (harmonize/gap-fill/de-spike/
-normalize) -> TokenCodec -> qwen3-family LM (reduced config) -> decisions ->
-reward -> replay + LogDB -> Forwarders. Also serves ad-hoc batched text
-requests through the continuous-batching engine between ticks.
+Percepta at the edge with a CERTIFIED registry policy driving decisions
+and a real transformer serving ad-hoc requests: simulated MQTT/HTTP/AMQP
+devices -> Receivers -> Translators -> env queues -> Accumulator -> fused
+device tick (harmonize/gap-fill/de-spike/normalize) -> rg-LRU recurrent
+policy -> decisions -> reward -> replay + LogDB -> Forwarders, while a
+qwen3-family LM (reduced config) answers batched text requests through
+the continuous-batching engine between ticks.
 
-The Percepta tick runs in ``scan`` mode: the Manager batches ``SCAN_K``
-windows per device dispatch (``PerceptaPipeline.run_many`` — one
-``lax.scan`` with the state carried on device) instead of dispatching one
-jitted tick per window; pass ``--mode fused`` for the one-dispatch-per-
-window behaviour, ``--mode scan_sharded`` to run the same scan under
-``shard_map`` with envs sharded over the local device mesh (on one CPU
-device it degenerates to ``scan``; force a multi-device CPU mesh with
-``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before launch), or
-``--mode scan_async`` to overlap host ingest with device compute (a pump
-thread assembles window batch j+1 while batch j executes — bit-identical
-outputs, higher sustained windows/s when ingest is a meaningful fraction
-of the loop). ``--mode scan_fused_decide`` (and its ``_sharded`` /
-``_async`` / ``_async_sharded`` compositions) goes one step further and
-fuses the DECISION path into the same dispatch: policy, action
-validation, rewards and the replay-ring write execute inside the window
-scan, so the whole ingest->decide->bank loop costs one device dispatch
-per batch and only the small per-window outputs come back to the host.
-Ingest is columnar (RecordBatch) throughout, and in the non-fused scan
-modes the Predictor consumes each K-window stack in ONE jitted dispatch
-(``Predictor.on_windows``) instead of one ``_step`` per window.
+The decision model comes from the policy registry
+(``repro.runtime.policies``): ``PerceptaSystem(..., policy="rglru")``
+resolves the name to a builder at the system's env/feature/action shapes
+and statically CERTIFIES it at registration (``repro.analysis.certify``)
+— row-wise env math, recurrent-carry row stability across the decide-step
+fixed point, pallas BlockSpec env routing, param replication — before the
+fused/sharded engines will accept it. The rg-LRU's recurrent state rides
+the donated device carry (``DecideState.carry``) through the fused scan,
+env-sharded on the mesh in the ``_sharded`` compositions. Pass a
+``PolicyConfig`` to override builder kwargs, e.g.
+``PolicyConfig("rglru", {"hidden": 32, "use_pallas": True})`` to run the
+hidden-state update through the pallas kernel (``kernels/rglru_scan``) —
+bit-identical to the ``lax.scan`` reference, and certifiable because the
+checker recurses into ``pallas_call``.
+
+The Percepta tick runs in ``scan`` mode by default: the Manager batches
+``SCAN_K`` windows per device dispatch (``PerceptaPipeline.run_many`` —
+one ``lax.scan`` with the state carried on device). ``--mode fused``
+dispatches one jitted tick per window; ``--mode scan_sharded`` runs the
+same scan under ``shard_map`` with envs sharded over the local device
+mesh (on one CPU device it degenerates to ``scan``; force a multi-device
+CPU mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+before launch); ``--mode scan_async`` overlaps host ingest with device
+compute. ``--mode scan_fused_decide`` (and its ``_sharded`` / ``_async``
+/ ``_async_sharded`` compositions) fuses the DECISION path into the same
+dispatch: policy, action validation, rewards and the replay-ring write
+execute inside the window scan, so the whole ingest->decide->bank loop
+costs one device dispatch per batch. Unlike the LM-decides variant of
+this example (pre-registry), the rg-LRU policy is per-env row-wise, so
+the fused ``_sharded`` compositions work here too — that is exactly what
+its certificate proves.
 
 Accessor rules in scan modes: hold pipeline state only through the
 donation-safe ``system.snapshot_state()`` / ``snapshot_norm()`` copies,
@@ -36,75 +48,49 @@ indices (float32 absolute seconds would collapse consecutive window ends
 past t~2^24 s), and in the fused-decide modes the ring itself lives in
 the DONATED device carry, so ``pred.replay`` is a stale construction-time
 snapshot there; the system export snapshots the live carry without
-donating it and reconstructs exact float64 absolute times (from the
-host mirror in on_tick/on_windows modes, from the stored tick indices in
-fused-decide modes).
-
-Note on fused-decide + this LM policy: the decide step is traced once
-into the scan, so a policy closing over host state (here: the norm
-snapshot the TokenCodec reads) keeps the traced constant — exactly like
-``Predictor.on_windows`` already does — and the sharded build probes
-shapes at CONSTRUCTION time, so that state must be populated before the
-system is created. The fused ``_sharded`` compositions additionally
-require the model to be per-env row-wise; this policy's per-env norm
-lookup is not, so those modes are exercised by the tests/benchmarks
-(row-wise ``linear_policy``) rather than this example.
+donating it and reconstructs exact float64 absolute times.
 
 Run: PYTHONPATH=src python examples/serve_edge.py \
-         [--mode scan|scan_async|scan_sharded|scan_fused_decide|fused]
+         [--mode scan|scan_async|scan_sharded|scan_fused_decide|\
+          scan_fused_decide_sharded|...|fused]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core import PipelineConfig
-from repro.core.codec import TokenCodec
 from repro.core.reward import energy_reward_spec
 from repro.models import LM
 from repro.runtime.db import LogDB
 from repro.runtime.forwarder import Forwarder, ForwarderHub
-from repro.runtime.predictor import ActionSpace, ModelAdapter, Predictor
+from repro.runtime.predictor import ActionSpace, Predictor
 from repro.runtime.receivers import SimulatedDevice
 from repro.runtime.system import PerceptaSystem, SourceSpec
 from repro.serve.engine import Request, ServeEngine
 
-# --- the deployed model: a real (reduced-config) transformer ---------------
+# --- the ad-hoc serving model: a real (reduced-config) transformer ---------
 cfg_lm = get_config("qwen3-0.6b:smoke")
 model = LM(cfg_lm, remat_policy="none")
 params = model.init(jax.random.PRNGKey(0))
-codec = TokenCodec(n_features=3, bins=64, clip=4.0)
-assert codec.vocab_needed <= cfg_lm.vocab_size
-
-prefill = jax.jit(model.prefill)
-norm_state = {"s": None}
-
-
-def lm_policy(feats):
-    toks = codec.encode(norm_state["s"], feats)
-    logits, _ = prefill(params, {"tokens": toks})
-    return jnp.tanh(logits[:, :2])  # 2 setpoints (hvac, charger)
-
 
 # --- Percepta wiring ---------------------------------------------------------
 ap = argparse.ArgumentParser()
 ap.add_argument("--mode", default="scan",
                 choices=["scan", "scan_async", "scan_sharded",
                          "scan_async_sharded", "scan_fused_decide",
-                         "scan_fused_decide_async", "fused"],
+                         "scan_fused_decide_sharded",
+                         "scan_fused_decide_async",
+                         "scan_fused_decide_async_sharded", "fused"],
                 help="device execution mode; the scan_fused_decide modes "
                      "fuse the policy/reward/replay step into the window "
                      "scan (one dispatch per batch, device-resident replay "
-                     "ring). The fused *_sharded compositions are omitted "
-                     "here: this example's LM policy pairs feature row i "
-                     "with row i of the captured norm snapshot, which is "
-                     "not per-env row-wise, so it cannot split across the "
-                     "env mesh (see the DecideFns sharding contract; the "
-                     "sharded fused engine runs in tests/benchmarks with "
-                     "row-wise policies)")
+                     "ring + recurrent policy carry). The *_sharded "
+                     "compositions split envs over the device mesh — "
+                     "admissible because the registry rg-LRU policy is "
+                     "certified per-env row-wise at registration")
 args = ap.parse_args()
 SCAN_K = 2  # windows per scan-fused dispatch
 E = 4
@@ -118,16 +104,15 @@ sources = [
 ]
 pcfg = PipelineConfig(n_envs=E, n_streams=3, n_ticks=8, tick_s=60.0,
                       max_samples=32)
-# seed the codec's norm snapshot BEFORE the system exists: the sharded
-# fused-decide build traces the decide step (and so this policy) at
-# construction time to probe output shapes, and the policy must be
-# traceable from the start — the fresh-state norm is the correct t=0 value
-from repro.core import init_state as _pl_init_state
-norm_state["s"] = _pl_init_state(pcfg).norm
-pred = Predictor(ModelAdapter(lm_policy, "lm_policy"),
+# the registry policy: Predictor accepts the registry NAME (or a
+# PolicyConfig) and resolves it at its own (n_features, n_actions, n_envs)
+# — build_policy certifies the builder before the adapter is returned, and
+# the certificate travels on the model for the system's fused-mode gate
+pred = Predictor("rglru",
                  energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=2),
                  ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
                  E, pcfg.n_features, db=None, replay_capacity=256)
+print(f"decision policy: {pred.model.certificate.describe()}")
 db = LogDB("/tmp/percepta_serve_db", salt="opeva")
 hub = ForwarderHub([Forwarder("hvac", "mqtt", [0]),
                     Forwarder("ev-charger", "amqp", [1])])
@@ -145,7 +130,6 @@ print(f"=== Percepta edge serving: 6 windows ({args.mode} mode, "
 t_start = time.time()
 tok_count = 0
 for w in range(0, 6, batch):
-    norm_state["s"] = system.snapshot_norm()
     results = system.run_windows(batch)
     # serve batched ad-hoc requests while streams accumulate (2 per window
     # regardless of dispatch batching, so both modes serve 12 total)

@@ -15,7 +15,16 @@ Two engines, one registry:
 
   * :mod:`repro.analysis.lint` — an AST lint over the repo source enforcing
     the host-side invariants (compat routing, snapshot accessors, async
-    donation, one-lock-per-call).  CLI: ``python -m repro.analysis.lint``.
+    donation, one-lock-per-call).  CLI: ``python -m repro.analysis.lint``
+    (``--format=json|github`` for machine-readable findings / CI per-line
+    annotations).
+
+On top of the per-fn checks, :mod:`repro.analysis.certify` runs the FULL
+catalog over a policy builder — recurrent-carry fixed point
+(``carry-env-mix``), pallas BlockSpec env routing (``pallas-env-block``)
+and the two-env-count param-replication probe — and emits a cached
+:class:`~repro.analysis.certify.PolicyCertificate` that the fused/sharded
+system modes demand at construction (``runtime.policies`` registry).
 
 The rule catalog lives in :mod:`repro.analysis.contracts` and is mirrored in
 ROADMAP.md ("Invariant catalog").
@@ -27,4 +36,7 @@ from repro.analysis.contracts import (  # noqa: F401
 from repro.analysis.jaxpr_check import (  # noqa: F401
     Rules, check_fn, check_policy, check_reward_fn, check_reward_terms,
     check_decide_fns, check_system, check_train_step, check_builtins,
+)
+from repro.analysis.certify import (  # noqa: F401
+    CERTIFY_RULES, PolicyCertificate, certify_policy,
 )

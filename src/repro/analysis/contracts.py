@@ -45,6 +45,24 @@ JAXPR_RULES = {
     "reward-shape":
         "custom reward fns return one reward per env row: (E,) for (E, F) "
         "features",
+    "carry-env-mix":
+        "a recurrent policy carry must keep env row i's state in row i: no "
+        "rev/roll/concat/narrowing-slice/gather along an env-tagged axis, "
+        "and at the cross-step tag fixed point every carry leaf is either "
+        "env-tagged exactly on dim 0 or fully env-free — a carry that mixes "
+        "rows crosses shard boundaries without a collective under the "
+        "env-sharded fused scan",
+    "pallas-env-block":
+        "pallas_call operands with an env-tagged dim must block it size-1 "
+        "with input and output BlockSpec index maps agreeing on the env "
+        "block per grid instance — a kernel instance that reads env block "
+        "g but writes env block f(g) moves rows across environments (and "
+        "across devices under the env mesh)",
+    "param-replication":
+        "policy params are replicated on the env mesh "
+        "(sharding.decide_specs): no param leaf may carry an env-sized dim "
+        "that scales with E — a builder that bakes per-env weights into "
+        "params silently mis-broadcasts under replication",
 }
 
 # --- AST lint rules (host-code invariants) ----------------------------------

@@ -51,13 +51,19 @@ class Rules(NamedTuple):
 
     ``env`` is the shard-invariance family — enforced for the ``*_sharded``
     modes (the fused non-sharded engine may legally run a non-row-wise
-    model, e.g. examples/serve_edge.py's LM policy).  The other families
-    hold for every checked fn.
+    model, e.g. examples/serve_edge.py's LM policy).  ``carry`` enables the
+    ``carry-env-mix`` row-movement checks (rev/roll/narrowing-slice/gather
+    along an env-tagged axis) — on for policy certification
+    (:mod:`repro.analysis.certify`), where a recurrent carry rides the
+    fused scan and a row permutation would silently cross shard boundaries;
+    off by default so pre-certification callers keep their exact rule set.
+    The other families hold for every checked fn.
     """
     env: bool = True
     collectives: bool = True
     callbacks: bool = True
     time: bool = True
+    carry: bool = False
 
 
 class Prov(NamedTuple):
@@ -247,6 +253,77 @@ def _check_eqn(eqn, name, ins, ctx: _Ctx, loop_depth: int):
             ctx.add("env-reduce",
                     "'top_k' selects along the env axis: rows mix across "
                     "environments", name, _src_of(eqn))
+    if rules.carry:
+        _check_row_moves(eqn, name, ins, ctx)
+
+
+def _check_row_moves(eqn, name, ins, ctx: _Ctx):
+    """``carry-env-mix`` eqn checks: primitives that MOVE rows along an
+    env-tagged axis (reverse/roll/subset-slice/gather).  Elementwise math
+    keeps row i's data in row i, so the base rules let these pass; for a
+    recurrent carry they re-route state across environments — and across
+    shard boundaries, without a collective, under the env mesh."""
+    def flag(detail):
+        ctx.add("carry-env-mix",
+                f"{detail} — a recurrent carry (and everything feeding it) "
+                "must keep env row i's state in row i; under the "
+                "env-sharded fused scan this crosses shard boundaries "
+                "without a collective", name, _src_of(eqn))
+
+    if name == "rev":
+        bad = [d for d in eqn.params["dimensions"]
+               if d < len(ins[0].dims) and TAG_ENV in ins[0].dims[d]]
+        if bad:
+            flag(f"'rev' reverses the env axis (dim {bad[0]})")
+    elif name == "concatenate":
+        d = eqn.params["dimension"]
+        if any(len(p.dims) > d and TAG_ENV in p.dims[d] for p in ins):
+            flag(f"'concatenate' stacks along the env axis (dim {d}): "
+                 "row order/count changes (the jnp.roll lowering)")
+    elif name == "slice":
+        starts = eqn.params["start_indices"]
+        limits = eqn.params["limit_indices"]
+        strides = eqn.params["strides"] or (1,) * len(starts)
+        shape = tuple(eqn.invars[0].aval.shape)
+        for d, t in enumerate(ins[0].dims):
+            if TAG_ENV in t and (starts[d] != 0 or limits[d] != shape[d]
+                                 or strides[d] != 1):
+                flag(f"'slice' selects a subset of env rows (dim {d}: "
+                     f"[{starts[d]}:{limits[d]}:{strides[d]}] of "
+                     f"{shape[d]})")
+                break
+    elif name == "dynamic_slice":
+        sizes = eqn.params["slice_sizes"]
+        shape = tuple(eqn.invars[0].aval.shape)
+        for d, t in enumerate(ins[0].dims):
+            if TAG_ENV in t and sizes[d] != shape[d]:
+                flag(f"'dynamic_slice' narrows the env axis (dim {d}: "
+                     f"{sizes[d]} of {shape[d]} rows)")
+                break
+    elif name == "dynamic_update_slice":
+        op_shape = tuple(eqn.invars[0].aval.shape)
+        upd_shape = tuple(eqn.invars[1].aval.shape)
+        for d, t in enumerate(ins[0].dims):
+            if TAG_ENV in t and d < len(upd_shape) \
+                    and upd_shape[d] != op_shape[d]:
+                flag(f"'dynamic_update_slice' writes a subset of env rows "
+                     f"(dim {d}: {upd_shape[d]} of {op_shape[d]})")
+                break
+    elif name == "gather":
+        sizes = eqn.params.get("slice_sizes", ())
+        shape = tuple(eqn.invars[0].aval.shape)
+        for d, t in enumerate(ins[0].dims):
+            if TAG_ENV in t and d < len(sizes) and sizes[d] != shape[d]:
+                flag(f"'gather' indexes along the env axis (dim {d}: "
+                     f"slice size {sizes[d]} of {shape[d]} rows)")
+                break
+    elif name == "pad":
+        cfg = eqn.params["padding_config"]
+        for d, t in enumerate(ins[0].dims):
+            if TAG_ENV in t and d < len(cfg) and any(cfg[d]):
+                flag(f"'pad' shifts row alignment on the env axis (dim "
+                     f"{d}: padding {cfg[d]})")
+                break
 
 
 # --- propagation --------------------------------------------------------------
@@ -303,6 +380,138 @@ def _prop_scanlike(body, ins, n_consts, n_carry, ctx, loop_depth,
             break
     ys = [Prov((EMPTY,) + p.dims, p.val) for p in outs[n_carry:]]
     return outs[:n_carry] + ys
+
+
+_PALLAS_GRID_CAP = 4096  # max grid points to evaluate index maps over
+
+
+def _eval_index_map(bm, point):
+    """Evaluate one BlockSpec index map at a concrete grid point."""
+    cj = bm.index_map_jaxpr
+    from jax._src.core import eval_jaxpr as _eval
+    res = _eval(cj.jaxpr, cj.consts, *(np.int32(i) for i in point))
+    return tuple(int(np.asarray(r)) for r in res)
+
+
+def _prop_pallas(eqn, ins, ctx, loop_depth):
+    """Descend into a ``pallas_call``: map BlockSpec index maps onto the env
+    tag instead of conservatively poisoning the outputs.
+
+    Per grid instance, an env-tagged operand dim must be blocked size-1
+    (each kernel instance sees exactly one env row), and every env-tagged
+    input and output must agree on WHICH env block the instance touches —
+    an input map reading env block ``g(i)`` while the output writes block
+    ``i`` routes rows across environments (``pallas-env-block``).  The
+    kernel jaxpr is then walked with the env dim dropped (a size-1 block
+    carries no cross-env structure) so callback/time/collective rules see
+    inside the kernel.  Any unexpected structure raises, which the caller
+    turns into the conservative spread-all fallback.
+    """
+    params = eqn.params
+    gm = params["grid_mapping"]
+    kernel = _open(params["jaxpr"])
+    grid = tuple(gm.grid)
+    nouts = _out_ndims(eqn)
+    if (getattr(gm, "num_dynamic_grid_bounds", 0)
+            or not all(isinstance(g, (int, np.integer)) for g in grid)
+            or int(np.prod(grid, dtype=np.int64) if grid else 1)
+            > _PALLAS_GRID_CAP):
+        raise NotImplementedError("dynamic or oversized pallas grid")
+    n_in, n_out = gm.num_inputs, gm.num_outputs
+    mappings = list(gm.block_mappings)
+    assert len(mappings) == n_in + n_out, (len(mappings), n_in, n_out)
+    # eqn.invars may lead with scalar-prefetch/index operands; the block
+    # operands are the trailing n_in
+    off = len(ins) - n_in
+    assert off >= 0, (len(ins), n_in)
+    points = list(np.ndindex(*grid)) if grid else [()]
+
+    def block_size(bm, d):
+        b = bm.block_shape[d]
+        return 1 if b is None else int(b)
+
+    # the env-block index function each instance must agree on, from the
+    # env-tagged inputs
+    env_fn = None          # tuple of per-point env block indices
+    env_extent = None
+    for i in range(n_in):
+        p = ins[off + i]
+        bm = mappings[i]
+        shape = tuple(eqn.invars[off + i].aval.shape)
+        for d, t in enumerate(p.dims):
+            if TAG_ENV not in t:
+                continue
+            if block_size(bm, d) != 1:
+                if ctx.rules.env:
+                    ctx.add("pallas-env-block",
+                            f"input {i} blocks its env axis (dim {d}) with "
+                            f"size {block_size(bm, d)}: each kernel "
+                            "instance sees multiple env rows, so the "
+                            "kernel body can mix them; block env dims "
+                            "size-1", "pallas_call", _src_of(eqn))
+                raise NotImplementedError("env dim not size-1 blocked")
+            fn = tuple(_eval_index_map(bm, pt)[d] for pt in points)
+            if env_fn is None:
+                env_fn, env_extent = fn, shape[d]
+            elif fn != env_fn:
+                if ctx.rules.env:
+                    ctx.add("pallas-env-block",
+                            f"input {i}'s env-axis index map (dim {d}) "
+                            "disagrees with another env-tagged operand's: "
+                            "one kernel instance combines rows of "
+                            "different environments", "pallas_call",
+                            _src_of(eqn))
+                raise NotImplementedError("env index maps disagree")
+
+    if env_fn is None:
+        # no env-tagged operands: nothing shard-shaped to track precisely
+        raise NotImplementedError("no env-tagged pallas operands")
+
+    # outputs: an output dim matching (extent, size-1 block, same index
+    # function) inherits the env tag; an output with a candidate env dim
+    # whose index function DIFFERS is cross-env routing
+    out_provs = []
+    in_val = frozenset().union(EMPTY, *(p.val for p in ins))
+    for o in range(n_out):
+        bm = mappings[n_in + o]
+        shape = tuple(eqn.outvars[o].aval.shape)
+        dims = [EMPTY] * nouts[o]
+        matched = False
+        mismatched = None
+        for d in range(len(shape)):
+            if shape[d] != env_extent or block_size(bm, d) != 1:
+                continue
+            fn = tuple(_eval_index_map(bm, pt)[d] for pt in points)
+            if fn == env_fn:
+                dims[d] = frozenset({TAG_ENV})
+                matched = True
+            else:
+                mismatched = d
+        if not matched and mismatched is not None:
+            if ctx.rules.env:
+                ctx.add("pallas-env-block",
+                        f"output {o}'s index map routes env blocks "
+                        f"differently from the inputs' (dim {mismatched}): "
+                        "a kernel instance reading env block g writes a "
+                        "different env block — rows cross environments",
+                        "pallas_call", _src_of(eqn))
+            dims = [frozenset({TAG_ENV})] * nouts[o]   # poison, it's wrong
+        elif not matched:
+            dims = [frozenset({TAG_ENV})] * nouts[o]   # conservative
+        out_provs.append(Prov(tuple(dims), in_val))
+
+    # walk the kernel body with env dims dropped (size-1 blocks): the
+    # callback/time/collective rules apply inside the kernel too
+    k_provs = []
+    for j, v in enumerate(kernel.invars):
+        knd = getattr(v.aval, "ndim", 0)
+        i = j - (len(kernel.invars) - n_in - n_out - (
+            getattr(gm, "num_scratch_operands", 0)))
+        src = ins[off + i] if 0 <= i < n_in else _empty(knd)
+        p = _fit(src, knd)
+        k_provs.append(Prov(tuple(t - {TAG_ENV} for t in p.dims), p.val))
+    _run(kernel, k_provs, ctx, loop_depth + 1)
+    return out_provs
 
 
 def _propagate(eqn, name, ins, ctx, loop_depth):
@@ -405,6 +614,9 @@ def _propagate(eqn, name, ins, ctx, loop_depth):
 
     if name == "top_k":
         return [_fit(ins[0], n) for n in nouts]
+
+    if name == "pallas_call":
+        return _prop_pallas(eqn, ins, ctx, loop_depth)
 
     if name == "scan":
         return _prop_scanlike(params["jaxpr"], ins, params["num_consts"],
@@ -538,6 +750,60 @@ def _raise_if(violations, label):
         raise ContractViolation(violations, label)
 
 
+def _run_to_fixed_point(jaxpr, in_provs, ctx, loop_depth, pairs,
+                        max_iter: int = 8):
+    """Run ``_run`` with output->input carry links propagated to a tag
+    fixed point (``pairs``: (out_idx, in_idx) leaf links).  The same
+    mechanism scan bodies use, lifted one level: a decide step / stateful
+    policy runs once per window, so tags its carry picks up in step t must
+    be visible to the rule checks of step t+1.  ``ctx`` dedups violations
+    across re-runs."""
+    in_provs = list(in_provs)
+    outs = _run(jaxpr, in_provs, ctx, loop_depth)
+    for _ in range(max_iter):
+        changed = False
+        for oi, ii in pairs:
+            if oi >= len(outs) or ii >= len(in_provs):
+                continue
+            old = in_provs[ii]
+            new = _fit(outs[oi], len(old.dims))
+            merged = Prov(tuple(a | b for a, b in zip(old.dims, new.dims)),
+                          old.val | new.val)
+            if merged != old:
+                changed = True
+                in_provs[ii] = merged
+        if not changed or not pairs:
+            break
+        outs = _run(jaxpr, in_provs, ctx, loop_depth)
+    return outs
+
+
+def _check_carry_structure(carry_tree, provs, n_envs, ctx, what="carry"):
+    """Fixed-point structural half of ``carry-env-mix``: every carry leaf
+    is either env-tagged exactly on its leading dim (a per-env (E, ...)
+    row block the mesh shards on dim 0) or fully env-free (identical on
+    every shard).  Anything else — env tags on a trailing dim, or an
+    env-tagged leaf whose dim 0 isn't E — cannot shard consistently and
+    diverges per device."""
+    from jax import tree_util as jtu
+
+    flat, _ = jtu.tree_flatten_with_path(carry_tree)
+    for (path, leaf), p in zip(flat, provs):
+        shape = tuple(getattr(leaf, "shape", ()))
+        env_dims = [d for d, t in enumerate(p.dims) if TAG_ENV in t]
+        ok = (not env_dims) or (env_dims == [0] and shape
+                                and shape[0] == n_envs)
+        if not ok:
+            ctx.add(
+                "carry-env-mix",
+                f"{what} leaf '{jtu.keystr(path)}' (shape {shape}) picks "
+                f"up env tags on dims {env_dims} across decide steps: a "
+                "carry leaf must be env-tagged exactly on dim 0 (a per-env "
+                f"(E={n_envs}, ...) block) or fully env-free, or its "
+                "sharded and unsharded fixed points diverge",
+                "", "")
+
+
 def _sds(shape, dtype=jnp.float32):
     return jax.ShapeDtypeStruct(shape, dtype)
 
@@ -640,9 +906,31 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
                          quality=_sds((E,)), tick_time=_sds((E,)))
     f_tags = FeatureFrame("env:0", "env:0", "env:0", "env:0")
 
-    v, closed = check_fn(decide.step, (s_avals, frame), (s_tags, f_tags),
-                         rules=rules, label=f"{label}.step")
-    _raise_if(v, f"{label}.step")
+    # trace once, then run the rule walk with the state->state carry links
+    # propagated to a fixed point: the fused scan feeds step t's new state
+    # to step t+1, so tags a recurrent model carry acquires in one window
+    # must be visible to the next window's checks (the ``carry-env-mix``
+    # structural rule keys on the fixed-point tags)
+    closed = jax.make_jaxpr(decide.step)(s_avals, frame)
+    state_leaves = jax.tree.leaves(s_avals)
+    n_state = len(state_leaves)
+    flat_args = jax.tree.leaves((s_avals, frame))
+    flat_tags = jax.tree.leaves((s_tags, f_tags))
+    in_provs = [_parse_tag(t, len(a.shape))
+                for a, t in zip(flat_args, flat_tags)]
+    ctx = _Ctx(rules, f"{label}.step")
+    # step returns (new_state, outs, transition): the new state's leaves
+    # flatten first, aligning 1:1 with the state input leaves
+    out_provs = _run_to_fixed_point(
+        closed.jaxpr, in_provs, ctx, 1, [(i, i) for i in range(n_state)])
+    mcarry = getattr(small, "carry", None)
+    n_mcarry = len(jax.tree.leaves(mcarry))
+    if rules.env and n_mcarry:
+        # the model carry is DecideState's trailing field, so its leaves
+        # are the trailing n_mcarry of the state flatten
+        _check_carry_structure(mcarry, out_provs[n_state - n_mcarry:n_state],
+                               E, ctx, what=f"{label}.step carry")
+    _raise_if(ctx.violations, f"{label}.step")
 
     # bank runs once per batch outside the scan: trace it on a K-stack of
     # the transition rows the traced step actually emits (step returns
@@ -763,6 +1051,15 @@ def check_builtins(verbose: bool = False) -> int:
     check_decide_fns(pred.make_decide_fn(), pred.decide_state(), E, F,
                      label="builtin DecideFns")
     n += 2
+
+    # every registered policy certifies against the FULL rule catalog
+    # (carry fixed point, pallas recursion, param replication) — a registry
+    # model that stops certifying fails CI here, not a user's standup
+    from repro.analysis.certify import certify_policy
+    from repro.runtime.policies import POLICIES
+    for key, builder in POLICIES.items():
+        certify_policy(builder, name=key, cache_key=("builtin", key))
+        n += 1
     if verbose:
         print(f"jaxpr contract check: {n} builtin fns clean")
     return n

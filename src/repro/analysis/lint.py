@@ -405,7 +405,14 @@ def main(argv=None) -> int:
     ap.add_argument("--list-rules", action="store_true")
     ap.add_argument("--jaxpr-builtins", action="store_true",
                     help="also run the jaxpr contract checker over every "
-                         "builtin policy/reward/decide path")
+                         "builtin policy/reward/decide path and certify "
+                         "the policy registry")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text",
+                    help="finding output: human text (default), a "
+                         "machine-readable JSON document (rule, file, "
+                         "line, fingerprint per finding), or GitHub "
+                         "Actions ::error per-line annotations")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -428,24 +435,61 @@ def main(argv=None) -> int:
         new, old = violations, []
     else:
         new, old = apply_baseline(violations, args.baseline)
-    for v in new:
-        print(f"{v.source}: {v.format()}")
+
+    if args.format == "github":
+        # GitHub Actions workflow-command annotations: CI surfaces each
+        # finding on its source line in the PR diff
+        for v in new:
+            fname, _, lineno = v.source.rpartition(":")
+            msg = v.format().replace("%", "%25").replace("\n", "%0A")
+            print(f"::error file={fname},line={lineno or 1},"
+                  f"title=lint {v.rule}::{msg}")
+    elif args.format == "text":
+        for v in new:
+            print(f"{v.source}: {v.format()}")
 
     n_builtin = 0
+    builtin_error = None
     if args.jaxpr_builtins:
         from repro.analysis.jaxpr_check import check_builtins
         try:
             n_builtin = check_builtins()
         except Exception as e:
-            print(f"jaxpr builtin check FAILED:\n{e}")
-            return 1
+            builtin_error = str(e)
+            if args.format == "text":
+                print(f"jaxpr builtin check FAILED:\n{e}")
+            elif args.format == "github":
+                print("::error title=jaxpr builtin check::"
+                      + builtin_error.replace("%", "%25").replace("\n",
+                                                                  "%0A"))
 
     dt = time.perf_counter() - t0
     files = len(list(iter_py_files(paths)))
-    extra = f", {n_builtin} builtin fns jaxpr-checked" if n_builtin else ""
-    print(f"lint: {files} files, {len(new)} new finding(s), "
-          f"{len(old)} baselined{extra} [{dt:.1f}s]")
-    return 1 if new else 0
+
+    if args.format == "json":
+        cache: Dict[str, List[str]] = {}
+
+        def entry(v, baselined):
+            fname, _, lineno = v.source.rpartition(":")
+            return {"rule": v.rule, "file": fname.replace(os.sep, "/"),
+                    "line": int(lineno) if lineno.isdigit() else 0,
+                    "message": v.message, "baselined": baselined,
+                    "fingerprint": _fingerprint(v, cache)}
+
+        doc = {"files": files, "new": len(new), "baselined": len(old),
+               "elapsed_s": round(dt, 3),
+               "findings": [entry(v, False) for v in new]
+               + [entry(v, True) for v in old]}
+        if args.jaxpr_builtins:
+            doc["jaxpr_builtins"] = {"checked": n_builtin,
+                                     "error": builtin_error}
+        print(json.dumps(doc, indent=2, sort_keys=True))
+    else:
+        extra = (f", {n_builtin} builtin fns jaxpr-checked"
+                 if n_builtin else "")
+        print(f"lint: {files} files, {len(new)} new finding(s), "
+              f"{len(old)} baselined{extra} [{dt:.1f}s]")
+    return 1 if new or builtin_error is not None else 0
 
 
 if __name__ == "__main__":

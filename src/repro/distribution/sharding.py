@@ -86,6 +86,14 @@ def decide_specs(dstate_tree, env_axis: int, axis_name: str = ENV_AXIS):
     dim and each device would run a different slice of the policy. The
     carry travels as a ``DecideState`` NamedTuple, so the policy subtree's
     specs are replaced wholesale with replicated ``P()``.
+
+    The model's recurrent carry (``DecideState.carry``, PR 8) is NOT
+    special-cased: its leaves are per-env ``(E, ...)`` by the certified
+    registry contract (``analysis/certify.py``'s carry structural check),
+    so the plain rank rule shards them on dim 0 like every other env
+    buffer — and ``certify_policy``'s ``param-replication`` probe is what
+    guarantees per-env state never hides in the replicated params subtree
+    instead.
     """
     specs = env_specs(dstate_tree, env_axis, axis_name)
     rep = jax.tree.map(lambda _: P(), dstate_tree.policy,

@@ -1,4 +1,12 @@
-"""Jit'd public wrapper for the RG-LRU scan kernel."""
+"""Jit'd public wrapper for the RG-LRU scan kernel.
+
+When reached from the decision path (the registry's ``policy="rglru"``
+with ``use_pallas=True``, B = n_envs, T = 1), the ``pallas_call`` here is
+statically certifiable: ``analysis/jaxpr_check`` evaluates the BlockSpec
+index maps over the grid and checks the env-tagged batch axis is tiled
+in size-1 blocks routed identically across inputs and outputs
+(``pallas-env-block``), then walks the kernel body itself.
+"""
 from __future__ import annotations
 
 import functools

@@ -13,6 +13,14 @@ Train/prefill uses ``jax.lax.associative_scan`` over time (the linear
 recurrence (a, b) ∘ (a', b') = (a a', a' b + b') is associative) — O(log T)
 depth instead of O(T); decode is a single fused update. A Pallas kernel
 (kernels/rglru_scan) implements the same recurrence VMEM-tiled for TPU.
+
+A single-step per-env variant of this recurrence also drives the
+Percepta decision path: ``runtime/policies.py``'s ``policy="rglru"``
+builder applies the gate math row-wise per env with the hidden state
+riding the fused-scan carry (``DecideState.carry``), statically
+certified for the env-sharded engines by ``analysis/certify.py`` —
+including through the ``kernels/rglru_scan`` pallas path
+(``use_pallas=True``).
 """
 from __future__ import annotations
 

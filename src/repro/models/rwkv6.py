@@ -15,6 +15,12 @@ Two execution paths:
     exp(+big)), and chunks are stitched with the carried state. This is the
     flash-linear-attention idea adapted to stay overflow-free; it is the
     §Perf hillclimb lever for the rwkv6 cells.
+
+A single-step per-env cell of this recurrence (token-shift mix + wkv
+state update, phrased row-wise) also serves as the ``policy="rwkv6"``
+decision model in ``runtime/policies.py``, with ``{shift, wkv}`` riding
+the fused-scan carry and the env-mesh safety of the carry update
+statically certified by ``analysis/certify.py``.
 """
 from __future__ import annotations
 

@@ -89,6 +89,16 @@ class DecideState(NamedTuple):
     after a hot-swap). Swaps happen host-side at batch boundaries only
     (``runtime.trainer.OnlineTrainer``), so every K-batch is attributable
     to exactly one policy.
+
+    ``carry`` is the OPTIONAL recurrent model state of a stateful policy
+    (``ModelAdapter.apply_carry``/``init_carry`` — e.g. the registry's
+    ``rglru``/``rwkv6`` models): ``None`` (a leafless pytree — invisible
+    to the scan carry, donation and the spec trees) for stateless
+    policies, otherwise a pytree of per-env ``(E, ...)`` leaves the env
+    mesh shards on dim 0 by the ``env_specs`` rank rule.  The
+    certification pass (``repro.analysis.certify``) proves every carry
+    leaf is env-row-stable (``carry-env-mix``) before a stateful policy
+    may ride the fused/sharded engines.
     """
     prev_obs: jax.Array      # (E, F)
     prev_actions: jax.Array  # (E, A)
@@ -98,6 +108,7 @@ class DecideState(NamedTuple):
     policy: dict             # params pytree ({} when not hot-swappable)
     version: jax.Array       # () int32 — policy_version of ``policy``
     prev_version: jax.Array  # () int32 — version that made prev_actions
+    carry: object = None     # recurrent model state (None = stateless)
 
 
 class DecideFns(NamedTuple):
@@ -129,31 +140,87 @@ class ModelAdapter:
     leaf at a batch boundary and the already-compiled scan runs the new
     weights. Closure-only models (``params is None``) keep the old
     behaviour and are not hot-swappable.
+
+    RECURRENT models (the registry's ``rglru``/``rwkv6``) instead expose
+    ``apply_carry(params, features, carry) -> (actions, new_carry)`` plus
+    ``init_carry(n_envs) -> carry`` (a pytree of per-env ``(E, ...)``
+    leaves). Their state threads through every consume path's scan carry
+    (and ``DecideState.carry`` on the fused engines); ``fn`` may be
+    ``None`` — there is no stateless view to call.
     """
 
-    def __init__(self, fn: Callable, name: str = "policy",
-                 params=None, apply: Optional[Callable] = None):
+    def __init__(self, fn: Optional[Callable], name: str = "policy",
+                 params=None, apply: Optional[Callable] = None,
+                 apply_carry: Optional[Callable] = None,
+                 init_carry: Optional[Callable] = None):
+        if apply_carry is not None and init_carry is None:
+            raise ValueError(
+                f"stateful policy '{name}': apply_carry requires "
+                "init_carry(n_envs) so every consume path can materialize "
+                "the recurrent state at the system's env count")
         self.fn = fn
         self.name = name
         self.params = params
         self.apply = apply
+        self.apply_carry = apply_carry
+        self.init_carry = init_carry
 
     def __call__(self, features):
+        if self.fn is None:
+            raise TypeError(
+                f"policy '{self.name}' is stateful (apply_carry) and has "
+                "no stateless fn view — call apply_carry(params, features, "
+                "carry) or route it through a Predictor consume path")
         return self.fn(features)
 
 
 def policy_call(model):
-    """``(apply_fn, params)`` view of a model, parameterized or not.
+    """``(apply_fn, params)`` view of a STATELESS model.
 
     Parameterized adapters route their weights explicitly; closure-only
     models get an empty params pytree and an apply that ignores it — both
     shapes trace to the same per-window ops, so fused outputs stay
     bit-identical to the reference paths either way.
+
+    Stateful (``apply_carry``) models are rejected here: callers of this
+    view (e.g. ``runtime.trainer.OnlineTrainer``'s train step) cannot
+    thread a recurrent carry, so offering them a carry-less apply would
+    silently re-run the policy from blank state every call.
     """
+    if getattr(model, "apply_carry", None) is not None:
+        raise ValueError(
+            f"policy '{getattr(model, 'name', model)}' is stateful "
+            "(apply_carry): the stateless (apply, params) view cannot "
+            "thread its recurrent carry — use policy_call2 / the decide "
+            "paths; online retraining (train='online') supports stateless "
+            "policies only")
     if getattr(model, "apply", None) is not None \
             and getattr(model, "params", None) is not None:
         return model.apply, model.params
     return (lambda params, feats: model(feats)), {}
+
+
+def policy_call2(model):
+    """``(apply2, params, init_carry)`` view — the carry-capable calling
+    convention every Predictor consume path traces.
+
+    ``apply2(params, features, carry) -> (actions, new_carry)``. Stateless
+    models wrap with a pass-through carry (``None`` in, ``None`` out, a
+    leafless pytree — invisible to scans/donation/spec trees) and
+    ``init_carry is None``; stateful adapters pass their ``apply_carry``
+    through unchanged. One convention means one trace shape everywhere,
+    so stateless policies cost nothing for the generality.
+    """
+    if getattr(model, "apply_carry", None) is not None:
+        params = getattr(model, "params", None)
+        return model.apply_carry, ({} if params is None else params), \
+            model.init_carry
+    apply_fn, params = policy_call(model)
+
+    def apply2(p, feats, carry):
+        return apply_fn(p, feats), carry
+
+    return apply2, params, None
 
 
 def linear_policy(n_features: int, n_actions: int, seed: int = 0,
@@ -185,10 +252,9 @@ def linear_policy(n_features: int, n_actions: int, seed: int = 0,
 
 
 class Predictor:
-    def __init__(self, model: ModelAdapter, reward_spec: RewardSpec,
+    def __init__(self, model, reward_spec: RewardSpec,
                  action_space: ActionSpace, n_envs: int, n_features: int,
                  db=None, replay_capacity: int = 4096):
-        self.model = model
         self.reward_spec = reward_spec
         self.action_space = action_space
         # recorded so the construction-time contract checker
@@ -210,20 +276,45 @@ class Predictor:
             "version": 0,  # policy_version that produced prev_actions
         }
         self.stats = {"ticks": 0, "violations": 0}
-        # (apply, params) view: parameterized models thread weights as
-        # explicit jit inputs on EVERY consume path (reference and fused),
-        # so one calling convention traces everywhere and hot-swapped
-        # weights reuse the compiled programs without retracing
-        apply_fn, params0 = policy_call(model)
-        self._apply = apply_fn
-        self.policy_params = params0
         self.policy_version = 0
-        low = jnp.asarray(action_space.low, jnp.float32)
-        high = jnp.asarray(action_space.high, jnp.float32)
+        self.set_model(model)
+
+    def set_model(self, model) -> None:
+        """Bind (or rebind) the decision model and (re)build the jitted
+        consume paths around it.
+
+        ``model`` may be a prebuilt :class:`ModelAdapter`, a registry name
+        (``"linear" | "mlp" | "rglru" | "rwkv6"``) or a
+        ``runtime.policies.PolicyConfig`` — names/configs resolve through
+        the certified registry (``runtime.policies.build_policy``), so a
+        registry policy arrives with its
+        :class:`~repro.analysis.certify.PolicyCertificate` attached.
+        Rebinding resets the recurrent model carry (if any) to its
+        ``init_carry`` state; replay/stats/prev are untouched.
+        """
+        if isinstance(model, str) or type(model).__name__ == "PolicyConfig":
+            from repro.runtime.policies import build_policy
+            model = build_policy(model, self.n_features,
+                                 self.action_space.n, self.n_envs)
+        self.model = model
+        # (apply2, params, init_carry) view: parameterized models thread
+        # weights as explicit jit inputs on EVERY consume path (reference
+        # and fused) — one calling convention traces everywhere, hot-swapped
+        # weights reuse the compiled programs without retracing, and
+        # stateful models thread their recurrent carry the same way
+        apply2, params0, init_carry = policy_call2(model)
+        self._apply2 = apply2
+        self.policy_params = params0
+        # host mirror of the recurrent model state (None for stateless
+        # policies); the fused engines carry it in DecideState.carry
+        self._model_carry = (init_carry(self.n_envs)
+                             if init_carry is not None else None)
+        low = jnp.asarray(self.action_space.low, jnp.float32)
+        high = jnp.asarray(self.action_space.high, jnp.float32)
 
         def _step(features, raw, prev_obs, prev_actions, replay, tick_idx,
-                  have_prev, params, version):
-            actions = apply_fn(params, features)
+                  have_prev, params, version, mcarry):
+            actions, new_mcarry = apply2(params, features, mcarry)
             actions, violated = validate_actions(actions, low, high)
             # rewards are computed on engineering units, not z-scores
             reward, per_term = self.reward_spec.compute(
@@ -234,25 +325,27 @@ class Predictor:
                                  tick_idx, version),
                 lambda r: r,
                 replay)
-            return actions, reward, per_term, violated, new_replay
+            return actions, reward, per_term, violated, new_replay, new_mcarry
 
         self._step = jax.jit(_step)
 
         def _steps(features, raw, tick_idx, prev_obs, prev_actions,
-                   have_prev, replay, params, version, prev_version):
+                   have_prev, replay, params, version, prev_version, mcarry):
             """K windows in one dispatch. The policy/validate scan runs the
             SAME per-window (E, F) computation ``_step`` jits (a batched
             K-leading gemm could block/accumulate differently on some
-            backends, breaking bit-identity with the reference path); the
-            carried prev obs/actions materialize as the shifted stacks
-            below, so reward terms — elementwise over the stack — evaluate
-            K-leading in one shot."""
-            def body(carry, f):
-                actions = apply_fn(params, f)
+            backends, breaking bit-identity with the reference path) and
+            threads the recurrent model carry exactly as K sequential
+            steps would; the carried prev obs/actions materialize as the
+            shifted stacks below, so reward terms — elementwise over the
+            stack — evaluate K-leading in one shot."""
+            def body(mc, f):
+                actions, mc = apply2(params, f, mc)
                 actions, violated = validate_actions(actions, low, high)
-                return carry, (actions, violated)
+                return mc, (actions, violated)
 
-            _, (actions, violated) = jax.lax.scan(body, 0, features)
+            mcarry_out, (actions, violated) = jax.lax.scan(
+                body, mcarry, features)
             prev_act_seq = jnp.concatenate([prev_actions[None], actions[:-1]],
                                            0)
             rewards, per_term = self.reward_spec.compute(raw, actions,
@@ -271,7 +364,7 @@ class Predictor:
                                      rewards, features, tick_idx, mask,
                                      ver_seq)
             return (actions, rewards, per_term, violated, features[-1],
-                    actions[-1], new_replay)
+                    actions[-1], new_replay, mcarry_out)
 
         self._steps = jax.jit(_steps)
 
@@ -280,8 +373,9 @@ class Predictor:
         """Materialize the current decision state as the device carry the
         fused scan engine threads (and donates) between batches. Taking it
         hands ownership to the caller: from here on the Predictor's own
-        ``replay``/``_prev`` references are a stale snapshot of this
-        moment — export through the system's non-donating snapshot."""
+        ``replay``/``_prev``/``_model_carry`` references are a stale
+        snapshot of this moment — export through the system's non-donating
+        snapshot."""
         return DecideState(
             prev_obs=jnp.asarray(self._prev["obs"], jnp.float32),
             prev_actions=jnp.asarray(self._prev["actions"], jnp.float32),
@@ -291,6 +385,7 @@ class Predictor:
             policy=self.policy_params,
             version=jnp.asarray(self.policy_version, jnp.int32),
             prev_version=jnp.asarray(self._prev["version"], jnp.int32),
+            carry=self._model_carry,
         )
 
     def adopt_policy(self, params, version: int) -> None:
@@ -319,10 +414,11 @@ class Predictor:
         ``linear_policy`` for the shard-size-invariant dot phrasing)."""
         low = jnp.asarray(self.action_space.low, jnp.float32)
         high = jnp.asarray(self.action_space.high, jnp.float32)
-        apply_fn, spec = self._apply, self.reward_spec
+        apply2, spec = self._apply2, self.reward_spec
 
         def step(carry: DecideState, feats):
-            actions = apply_fn(carry.policy, feats.features)
+            actions, new_mcarry = apply2(carry.policy, feats.features,
+                                         carry.carry)
             actions, violated = validate_actions(actions, low, high)
             reward, per_term = spec.compute(feats.raw, actions,
                                             carry.prev_actions)
@@ -338,7 +434,7 @@ class Predictor:
                               have_prev=jnp.ones((), jnp.bool_),
                               tick=carry.tick + 1, replay=carry.replay,
                               policy=carry.policy, version=carry.version,
-                              prev_version=carry.version)
+                              prev_version=carry.version, carry=new_mcarry)
             return new, (actions, reward, per_term, violated), transition
 
         def bank(replay, transitions):
@@ -377,11 +473,13 @@ class Predictor:
         bit-identical to K calls of this."""
         raw = features if raw is None else raw
         idx = self.stats["ticks"]
-        actions, reward, per_term, violated, self.replay = self._step(
+        (actions, reward, per_term, violated, self.replay,
+         self._model_carry) = self._step(
             features, raw, self._prev["obs"], self._prev["actions"],
             self.replay, jnp.asarray(idx, jnp.int32),
             jnp.asarray(self._prev["have"]), self.policy_params,
-            jnp.asarray(self._prev["version"], jnp.int32))
+            jnp.asarray(self._prev["version"], jnp.int32),
+            self._model_carry)
         self._record_times(idx, [tick_time])
         self._prev = {"obs": features, "actions": actions, "have": True,
                       "version": self.policy_version}
@@ -405,12 +503,13 @@ class Predictor:
         base = self.stats["ticks"]
         tick_idx = jnp.asarray(base + np.arange(K), jnp.int32)
         (actions, rewards, per_term, violated, last_obs, last_actions,
-         self.replay) = self._steps(
+         self.replay, self._model_carry) = self._steps(
             features, raw, tick_idx, self._prev["obs"],
             self._prev["actions"], jnp.asarray(self._prev["have"]),
             self.replay, self.policy_params,
             jnp.asarray(self.policy_version, jnp.int32),
-            jnp.asarray(self._prev["version"], jnp.int32))
+            jnp.asarray(self._prev["version"], jnp.int32),
+            self._model_carry)
         self._record_times(base, tick_times)
         self._prev = {"obs": last_obs, "actions": last_actions, "have": True,
                       "version": self.policy_version}

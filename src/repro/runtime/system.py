@@ -164,7 +164,8 @@ class PerceptaSystem:
                  batched_consume: bool = True,
                  contract_check: bool = True,
                  train: Optional[str] = None,
-                 train_cfg: Optional[dict] = None):
+                 train_cfg: Optional[dict] = None,
+                 policy=None):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -182,6 +183,12 @@ class PerceptaSystem:
         self.mode = mode
         pipe_mode = _PIPELINE_MODE.get(mode, mode)
         self.fused_decide = mode in _FUSED_DECIDE_MODES
+        # policy: a registry name ("linear"|"mlp"|"rglru"|"rwkv6") or
+        # runtime.policies.PolicyConfig — rebinds the predictor's model
+        # through the certified registry (runtime.policies.build_policy),
+        # so the adapter arrives with its PolicyCertificate attached
+        if policy is not None:
+            predictor.set_model(policy)
         # fused-decide: the decision step is traced into the pipeline scan
         # and the decision state (prev obs/actions, tick, replay ring)
         # becomes part of the device carry — the Predictor hands both over
@@ -208,6 +215,29 @@ class PerceptaSystem:
                 sharded=(self.fused_decide
                          and pipe_mode in _SHARDED_PIPE_MODES),
                 label=f"PerceptaSystem(mode={mode!r})")
+        # fused/sharded modes additionally demand a valid PolicyCertificate
+        # for the model itself (repro.analysis.certify): registry policies
+        # arrive with one attached (cached — repeated standups skip the
+        # trace entirely); an ad-hoc adapter is certified here at the true
+        # (E, F, A) shapes, with the env/carry families binding only under
+        # the env-sharded dispatch (a fused non-sharded build may legally
+        # run a non-row-wise model, e.g. examples/serve_edge.py's LM).
+        self.policy_certificate = None
+        if self.contract_check and self.fused_decide:
+            cert = getattr(predictor.model, "certificate", None)
+            if cert is None:
+                from repro.analysis import certify
+                sharded = pipe_mode in _SHARDED_PIPE_MODES
+                cert = certify.certify_policy(
+                    predictor.model,
+                    ((predictor.n_envs, predictor.n_features,
+                      predictor.action_space.n),),
+                    name=getattr(predictor.model, "name", None),
+                    rules=certify.Rules(env=sharded, collectives=True,
+                                        callbacks=True, time=True,
+                                        carry=sharded))
+                predictor.model.certificate = cert
+            self.policy_certificate = cert
         # predictor tick index of this system's window 0: export-time
         # reconstruction maps tick idx -> window (idx - base); ticks issued
         # BEFORE this system keep their host-mirror times

@@ -173,8 +173,9 @@ def test_reward_shape_rule():
 
 def test_all_builtins_accepted():
     """linear_policy, every RewardTerm kind (through RewardSpec.compute),
-    energy_reward_spec, validate_actions, the builtin DecideFns pair."""
-    assert check_builtins() == 12
+    energy_reward_spec, validate_actions, the builtin DecideFns pair, and
+    the four registry policies (certified against the full catalog)."""
+    assert check_builtins() == 16
 
 
 def test_real_predictor_decide_fns_accepted():
@@ -510,7 +511,8 @@ def test_rule_catalogs_cover_engines():
     catalog the ROADMAP table and --list-rules mirror)."""
     assert set(JAXPR_RULES) == {
         "env-contraction", "env-gemm-rows", "env-reduce", "collective",
-        "time-cast", "callback-in-scan", "reward-shape"}
+        "time-cast", "callback-in-scan", "reward-shape", "carry-env-mix",
+        "pallas-env-block", "param-replication"}
     assert set(LINT_RULES) == {
         "jax-version-branch", "jax-experimental-outside-compat",
         "mesh-outside-compat", "donate-outside-compat", "state-leaf-alias",
