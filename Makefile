@@ -13,7 +13,7 @@
 PY ?= python
 
 .PHONY: test lint train-smoke bench-smoke bench-pr2 bench-pr3 bench-pr4 \
-	bench-pr5 bench-pr6 bench-pr7 bench-pr8 ci
+	bench-pr5 bench-pr6 bench-pr7 bench-pr8 bench-pr9 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -37,11 +37,12 @@ train-smoke:
 
 # CI pass: writes BENCH_smoke.json (untracked scratch) so repeated CI runs
 # never clobber the committed BENCH_prN.json trajectory records, then
-# reports >10% throughput regressions vs the committed BENCH_pr7.json
+# reports >10% throughput regressions vs the NEWEST committed
+# BENCH_pr<N>.json (compare.py picks it — the baseline can't go stale)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --host-devices 8 \
 		--json BENCH_smoke.json
-	$(PY) -m benchmarks.compare BENCH_pr7.json BENCH_smoke.json
+	$(PY) -m benchmarks.compare latest BENCH_smoke.json
 
 # regenerate the committed perf-trajectory artifacts (run manually per PR)
 bench-pr2:
@@ -89,5 +90,13 @@ bench-pr8:
 	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
 		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|autotune|columnar|contract_check|certify" \
 		--json BENCH_pr8.json
+
+# PR 9: the elastic-membership cells (masked slot-pool overhead at 75%
+# occupancy vs a dense fixed-E baseline, one timed pool regrow) next to
+# the trajectory cells
+bench-pr9:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|elastic|autotune|columnar|contract_check|certify" \
+		--json BENCH_pr9.json
 
 ci: lint test train-smoke bench-smoke

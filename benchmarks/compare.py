@@ -13,12 +13,17 @@ numbers on shared boxes drift — the report is the signal, the committed
 BENCH_prN.json trajectory is the record.
 
 Run: ``python -m benchmarks.compare OLD.json NEW.json [--threshold 0.1]
-[--strict]``
+[--strict]``.  Pass ``latest`` as OLD to diff against the newest committed
+``BENCH_pr<N>.json`` (highest N, not mtime) — the CI target uses this so
+the baseline can never go stale when a new trajectory record lands.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
+import re
 import sys
 
 # path components that hold raw measurement noise, not comparable metrics
@@ -68,10 +73,26 @@ def compare(old: dict, new: dict, threshold: float = 0.1):
     return rows, regressions, only_old, only_new
 
 
+def latest_baseline(directory: str = ".") -> str:
+    """Newest committed ``BENCH_pr<N>.json`` by PR number (NOT mtime: a
+    fresh checkout gives every artifact the same mtime)."""
+    best, best_n = None, -1
+    for p in glob.glob(os.path.join(directory, "BENCH_pr*.json")):
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", os.path.basename(p))
+        if m and int(m.group(1)) > best_n:
+            best, best_n = p, int(m.group(1))
+    if best is None:
+        raise FileNotFoundError(
+            f"no BENCH_pr<N>.json baseline in {os.path.abspath(directory)}")
+    return best
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="diff two BENCH artifacts, flag >threshold regressions")
-    ap.add_argument("old")
+    ap.add_argument("old",
+                    help="baseline artifact, or 'latest' for the newest "
+                         "committed BENCH_pr<N>.json")
     ap.add_argument("new")
     ap.add_argument("--threshold", type=float, default=0.1,
                     help="relative drop that counts as a regression "
@@ -79,6 +100,9 @@ def main(argv=None) -> int:
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 when regressions are found")
     args = ap.parse_args(argv)
+    if args.old == "latest":
+        args.old = latest_baseline()
+        print(f"# baseline: {args.old} (newest committed BENCH_pr<N>.json)")
     with open(args.old) as f:
         old = json.load(f)
     with open(args.new) as f:

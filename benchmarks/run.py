@@ -1336,6 +1336,129 @@ def bench_online_train(quick=False):
          f"{st['version']} | acceptance <=1.10x")
 
 
+# --------------------------------------------------------------------------
+# Table 2h — elastic slot pool: masked overhead at 75% occupancy + regrow
+# --------------------------------------------------------------------------
+
+def bench_elastic(quick=False):
+    """Three cells for the elastic env-slot pool (PR 9):
+
+    * identity: an elastic system holding 6 live envs in an 8-slot pool is
+      bit-identical (per-window results + replay export) to a dense E=6
+      fixed system over the same envs/streams;
+    * overhead: interleaved batch pairs, elastic-under-churn vs the dense
+      baseline — each pair the elastic system detaches one env and
+      re-attaches it into the recycled slot (membership churn at a batch
+      boundary, no retrace), and the MEDIAN per-pair wall ratio must stay
+      <=1.10x (the 2 masked dead rows + mask select cost <10%);
+    * regrow: one timed :meth:`resize` (8 -> 16 slots — pad, re-place,
+      the single allowed retrace), then a post-regrow batch must produce
+      finite stats on the surviving rows.
+    """
+    from repro.core import PipelineConfig
+    from repro.core.reward import energy_reward_spec
+    from repro.runtime.predictor import (ActionSpace, Predictor,
+                                         linear_policy)
+    from repro.runtime.receivers import SimulatedDevice
+    from repro.runtime.system import PerceptaSystem, SourceSpec
+
+    SLOTS, ACTIVE, K = 8, 6, 8
+
+    def mk(env_ids, slots=None, elastic=False):
+        # off-tick intervals (9.7 / 31.3 s) so no reading lands exactly on
+        # a window boundary (the float-boundary hazard the tests avoid too)
+        srcs = [SourceSpec("grid_kw", "mqtt",
+                           SimulatedDevice("grid", 9.7, base=3.0, seed=1)),
+                SourceSpec("price_eur", "http",
+                           SimulatedDevice("price", 31.3, base=0.2, seed=2))]
+        n = slots if slots is not None else len(env_ids)
+        cfg = PipelineConfig(n_envs=n, n_streams=2, n_ticks=8, tick_s=60.0,
+                             max_samples=32)
+        pred = Predictor(
+            linear_policy(cfg.n_features, 2),
+            energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+            ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+            n, cfg.n_features, replay_capacity=64)
+        return PerceptaSystem(list(env_ids), srcs, cfg, pred,
+                              speedup=5000.0, manual_time=True,
+                              mode="scan_fused_decide", scan_k=K,
+                              env_slots=slots, elastic=elastic)
+
+    ids = [f"e{i}" for i in range(ACTIVE)]
+    dense = mk(ids)
+    el = mk(ids, slots=SLOTS, elastic=True)
+
+    # --- identity: 6 live rows of 8 vs a dense E=6 system -----------------
+    nwin = 2 * K if quick else 4 * K
+    strip = lambda rs: [{k: v for k, v in r.items() if k != "latency_s"}
+                        for r in rs]
+    ident = strip(dense.run_windows(nwin)) == strip(el.run_windows(nwin))
+    ea, eb = dense.export_replay("bench"), el.export_replay("bench")
+    for key in ("obs", "actions", "rewards", "next_obs", "tick_idx"):
+        ident = ident and bool(
+            (np.asarray(ea[key])[:ACTIVE]
+             == np.asarray(eb[key])[:ACTIVE]).all())
+    SUMMARY["elastic_bit_identical"] = bool(ident)
+    _row(f"elastic_identity_E{ACTIVE}_of_{SLOTS}", 0.0,
+         f"bit_identical {ident} over {nwin} windows "
+         f"(results + replay export, dense E={ACTIVE} reference)")
+
+    # --- overhead under churn: interleaved pairs, median ratio ------------
+    pairs = 3 if quick else 6
+    tot_d = tot_e = 0.0
+    ratios = []
+    for p in range(pairs):
+        t0 = time.time()
+        dense.run_windows(K)
+        d_t = time.time() - t0
+        t0 = time.time()
+        el.run_windows(K)
+        e_t = time.time() - t0
+        tot_d += d_t
+        tot_e += e_t
+        ratios.append(e_t / d_t)
+        # churn at the batch boundary: detach one env, re-attach it into
+        # the recycled slot (occupancy stays at ACTIVE/SLOTS, no retrace)
+        victim = ids[p % ACTIVE]
+        el.detach_env(victim)
+        el.attach_env(victim)
+    overhead = float(np.median(ratios))
+    wps_d = K * pairs / tot_d
+    wps_e = K * pairs / tot_e
+    assert overhead <= 1.10, \
+        f"masked slot-pool overhead {overhead:.3f}x > 1.10x acceptance"
+    SUMMARY["windows_per_s"][f"elastic_E{ACTIVE}_of_{SLOTS}"] = \
+        round(wps_e, 1)
+    SUMMARY["windows_per_s"][f"elastic_dense_ref_E{ACTIVE}"] = \
+        round(wps_d, 1)
+
+    # --- regrow: one timed resize (8 -> 16), finite stats after -----------
+    t0 = time.time()
+    new_slots = el.resize()
+    regrow_s = time.time() - t0
+    post = el.run_windows(K)
+    finite = all(np.isfinite(r["mean_reward"]) for r in post)
+    dense.stop(), el.stop()
+    SUMMARY["elastic"] = {
+        "cell": {"slots": SLOTS, "active": ACTIVE, "K": K,
+                 "occupancy": round(ACTIVE / SLOTS, 2)},
+        "overhead_ratio": round(overhead, 3),
+        "pair_ratios": [round(r, 2) for r in ratios],
+        "churn_ops_per_pair": 2,
+        "regrow_ms": round(regrow_s * 1e3, 1),
+        "regrow_slots": [SLOTS, new_slots],
+        "finite_after_regrow": bool(finite),
+    }
+    _row(f"elastic_overhead_E{ACTIVE}_of_{SLOTS}", 1e6 / wps_e,
+         f"{wps_e:.0f} windows/s masked pool vs {wps_d:.0f} dense | "
+         f"overhead {overhead:.3f}x (median of {pairs} interleaved pair "
+         f"ratios, 1 detach+reattach churn per pair) | acceptance <=1.10x")
+    _row(f"elastic_regrow_{SLOTS}_to_{new_slots}", regrow_s * 1e6,
+         f"pool regrow {SLOTS} -> {new_slots} slots in "
+         f"{regrow_s * 1e3:.0f} ms (pad + re-place + 1 retrace) | "
+         f"finite_after_regrow {finite}")
+
+
 def bench_autotune(quick=False):
     import jax
 
@@ -1654,19 +1777,20 @@ def bench_roofline(quick=False):
 ALL = [bench_ingest, bench_columnar_ingest, bench_tick_latency,
        bench_scan_engine, bench_scan_sharded, bench_scan_async,
        bench_predictor_batch, bench_fused_decide, bench_online_train,
-       bench_contract_check, bench_certify, bench_autotune,
+       bench_elastic, bench_contract_check, bench_certify, bench_autotune,
        bench_stage_breakdown,
        bench_deployment, bench_serving, bench_kernels, bench_roofline]
 
 # --smoke: the CI-sized subset (Makefile `bench-smoke`) — quick settings:
 # tick-latency axes, the scan-engine acceptance cells (incl. the sharded
 # mode on the forced host-device mesh, the async overlap cell, the
-# batched-Predictor identity cell and the fused-decide cells), the
-# autotuner grid, and the columnar-ingest cell
+# batched-Predictor identity cell, the fused-decide cells and the
+# elastic slot-pool cells), the autotuner grid, and the columnar-ingest
+# cell
 SMOKE = [bench_tick_latency, bench_scan_engine, bench_scan_sharded,
          bench_scan_async, bench_predictor_batch, bench_fused_decide,
-         bench_online_train, bench_contract_check, bench_certify,
-         bench_autotune, bench_columnar_ingest]
+         bench_online_train, bench_elastic, bench_contract_check,
+         bench_certify, bench_autotune, bench_columnar_ingest]
 
 
 def main() -> None:

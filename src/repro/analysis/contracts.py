@@ -17,6 +17,9 @@ from dataclasses import dataclass
 TAG_ENV = "env"        # dimension tag: this axis indexes environments
 TAG_TIME = "abs-time"  # value tag: absolute time (seconds since epoch /
                        # exact tick index), quantizes in float32 past ~2^24
+TAG_MASK = "env-mask"  # value tag: derived from the elastic active mask;
+                       # may gate values (where/select/multiply), never
+                       # drive row compaction or index math
 
 # --- jaxpr contract rules (traced-program invariants) -----------------------
 JAXPR_RULES = {
@@ -58,6 +61,14 @@ JAXPR_RULES = {
         "block per grid instance — a kernel instance that reads env block "
         "g but writes env block f(g) moves rows across environments (and "
         "across devices under the env mesh)",
+    "env-mask-gate":
+        "the elastic active mask combines only multiplicatively or via "
+        "select/where (row i's output depends on row i's mask bit alone): "
+        "no mask-derived value may feed sort/top_k, a cumulative scan or "
+        "argmax/argmin along the env axis, or gather/scatter/dynamic_slice "
+        "INDEX operands — compaction/index math changes row placement with "
+        "membership and breaks the no-retrace, bit-exact-active-rows "
+        "contract",
     "param-replication":
         "policy params are replicated on the env mesh "
         "(sharding.decide_specs): no param leaf may carry an env-sized dim "

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.contracts import (
-    ContractViolation, Violation, TAG_ENV, TAG_TIME,
+    ContractViolation, Violation, TAG_ENV, TAG_MASK, TAG_TIME,
 )
 
 logger = logging.getLogger(__name__)
@@ -57,13 +57,18 @@ class Rules(NamedTuple):
     (:mod:`repro.analysis.certify`), where a recurrent carry rides the
     fused scan and a row permutation would silently cross shard boundaries;
     off by default so pre-certification callers keep their exact rule set.
-    The other families hold for every checked fn.
+    ``mask`` enables the ``env-mask-gate`` family (elastic slot pools):
+    mask-derived values must combine multiplicatively/by-select and never
+    drive compaction or index math — auto-enabled by
+    :func:`check_decide_fns` when the decide state carries an ``active``
+    mask leaf.  The other families hold for every checked fn.
     """
     env: bool = True
     collectives: bool = True
     callbacks: bool = True
     time: bool = True
     carry: bool = False
+    mask: bool = False
 
 
 class Prov(NamedTuple):
@@ -201,6 +206,8 @@ def _check_eqn(eqn, name, ins, ctx: _Ctx, loop_depth: int):
                     "reduce_precision narrows an absolute-time value below "
                     "float64 mantissa; rebase to window-relative first",
                     name, _src_of(eqn))
+    if rules.mask:
+        _check_mask_gate(eqn, name, ins, ctx)
     if not rules.env:
         return
     if name == "dot_general":
@@ -255,6 +262,56 @@ def _check_eqn(eqn, name, ins, ctx: _Ctx, loop_depth: int):
                     "environments", name, _src_of(eqn))
     if rules.carry:
         _check_row_moves(eqn, name, ins, ctx)
+
+
+def _check_mask_gate(eqn, name, ins, ctx: _Ctx):
+    """``env-mask-gate`` eqn checks: a mask-derived value (the elastic
+    ``active``/``prev_ok`` carry leaves and anything computed from them)
+    may GATE values — multiply/AND/where — but must never DRIVE structure:
+    row-compaction offsets (a cumsum of the mask along the env axis),
+    ordering (sort/top_k), or index math (gather/scatter/dynamic_slice
+    start operands).  Structural use changes row placement with membership
+    — exactly what the no-retrace, bit-exact-active-rows contract
+    forbids."""
+    def flag(detail):
+        ctx.add("env-mask-gate",
+                f"{detail} — the elastic active mask combines only "
+                "multiplicatively or via select/where (row i's output "
+                "depends on row i's mask bit alone); mask-derived "
+                "compaction/ordering/index math moves rows with membership "
+                "and breaks the no-retrace, bit-exact-active-rows contract",
+                name, _src_of(eqn))
+
+    if name in ("sort", "top_k"):
+        if any(TAG_MASK in p.val for p in ins):
+            flag(f"'{name}' orders by a mask-derived value")
+    elif name in _CUMULATIVE:
+        ax = eqn.params.get("axis", 0)
+        if TAG_MASK in ins[0].val and ax < len(ins[0].dims) \
+                and TAG_ENV in ins[0].dims[ax]:
+            flag(f"'{name}' scans a mask-derived value along the env axis "
+                 "(the row-compaction-offset pattern)")
+    elif name in ("argmax", "argmin"):
+        axes = eqn.params.get("axes", ())
+        if TAG_MASK in ins[0].val and any(
+                a < len(ins[0].dims) and TAG_ENV in ins[0].dims[a]
+                for a in axes):
+            flag(f"'{name}' picks a row position from a mask-derived value "
+                 "along the env axis")
+    elif name == "gather":
+        if len(ins) > 1 and TAG_MASK in ins[1].val:
+            flag("'gather' indexes with a mask-derived value")
+    elif name.startswith("scatter"):
+        if len(ins) > 1 and TAG_MASK in ins[1].val:
+            flag("'scatter' indexes with a mask-derived value (masking "
+                 "belongs in the UPDATE values, not the indices)")
+    elif name == "dynamic_slice":
+        if any(TAG_MASK in p.val for p in ins[1:]):
+            flag("'dynamic_slice' start indices derive from the mask")
+    elif name == "dynamic_update_slice":
+        if any(TAG_MASK in p.val for p in ins[2:]):
+            flag("'dynamic_update_slice' start indices derive from the "
+                 "mask")
 
 
 def _check_row_moves(eqn, name, ins, ctx: _Ctx):
@@ -521,6 +578,15 @@ def _propagate(eqn, name, ins, ctx, loop_depth):
     if name in _ELEMENTWISE or name in _CUMULATIVE or name == "select_n" \
             or name == "clamp" or name == "reduce_precision":
         out = _align_union(ins, nouts[0])
+        if name == "select_n" and len(ins) >= 2 \
+                and TAG_MASK in ins[0].val:
+            # the predicate only GATES a select: the output's VALUES come
+            # from the branches, so the mask tag does not leak through a
+            # where/select — the sanctioned mask combinator stays clean
+            branch_val = frozenset().union(EMPTY,
+                                           *(p.val for p in ins[1:]))
+            if TAG_MASK not in branch_val:
+                out = Prov(out.dims, out.val - {TAG_MASK})
         if name == "sub" and len(ins) == 2 \
                 and TAG_TIME in ins[0].val and TAG_TIME in ins[1].val:
             # t_a - t_b is a relative duration: the abs-time tag clears,
@@ -535,6 +601,11 @@ def _propagate(eqn, name, ins, ctx, loop_depth):
     if name == "convert_element_type" or name == "copy" \
             or name == "device_put":
         return [_fit(ins[0], nouts[0])]
+
+    if name == "optimization_barrier":
+        # identity per operand (out i is in i, fusion-sealed) — the elastic
+        # mask discipline barriers decision math before its gating selects
+        return [_fit(p, n) for p, n in zip(ins, nouts)]
 
     if name == "broadcast_in_dim":
         bd = params["broadcast_dimensions"]
@@ -704,11 +775,13 @@ def _run(jaxpr, in_provs, ctx: _Ctx, loop_depth: int):
 # --- public API ----------------------------------------------------------------
 
 def _parse_tag(tag: str, ndim: int) -> Prov:
-    """Tag spec -> Prov.  '' | 'env:0' | 'time' | 'env:0,time'."""
+    """Tag spec -> Prov.  '' | 'env:0' | 'time' | 'mask' | 'env:0,mask'."""
     dims = [EMPTY] * ndim
     val = EMPTY
     for part in filter(None, (tag or "").split(",")):
-        if part.startswith("env"):
+        if part == "mask":
+            val = val | {TAG_MASK}
+        elif part.startswith("env"):
             d = int(part.split(":")[1]) if ":" in part else 0
             if d < ndim:
                 dims[d] = dims[d] | {TAG_ENV}
@@ -879,11 +952,17 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
     Env tags resolve by leaf rank exactly like ``sharding.env_specs``
     (leading dim == E ⇒ env axis); the int32 tick counter carries the
     abs-time tag, so a ``tick.astype(float32)`` anywhere in a custom step
-    is caught here.
+    is caught here.  An elastic decide state (``dstate.active`` is not
+    None) auto-enables the ``env-mask-gate`` family: the ``active``/
+    ``prev_ok`` leaves enter mask-tagged, and the bank half is traced with
+    the (K, E) ``env_mask`` the fused scan hands it.
     """
     from repro.core.frame import FeatureFrame   # lazy: keep import graph flat
 
     E, F = n_envs, n_features
+    elastic = getattr(dstate, "active", None) is not None
+    if elastic:
+        rules = rules._replace(mask=True)
 
     def rank_env(x):
         nd = len(getattr(x, "shape", ()))
@@ -895,6 +974,9 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
     s_tags = jax.tree.map(rank_env, s_avals)
     if hasattr(s_tags, "_replace") and hasattr(s_tags, "tick"):
         s_tags = s_tags._replace(tick="time")
+    if elastic and hasattr(s_tags, "_replace"):
+        s_tags = s_tags._replace(active="env:0,mask",
+                                 prev_ok="env:0,mask")
     if hasattr(s_tags, "_replace") and hasattr(s_tags, "policy"):
         # policy weights are batch-global: a (F, A) leaf whose F happens to
         # equal E must not be env-tagged (the rank heuristic can't tell),
@@ -949,9 +1031,22 @@ def check_decide_fns(decide, dstate, n_envs: int, n_features: int, *,
     replay_avals = jax.tree.map(
         lambda x: _sds(jnp.shape(x), jnp.asarray(x).dtype), dstate.replay)
     r_tags = jax.tree.map(rank_env, replay_avals)
-    v, _ = check_fn(lambda r, tr: decide.bank(r, tuple(tr)),
-                    (replay_avals, trans_avals), (r_tags, trans_tags),
-                    rules=rules, label=f"{label}.bank", scan_bound=False)
+    if elastic:
+        # trace bank exactly as the elastic fused scan calls it: with the
+        # (K, E) per-row validity mask, mask-tagged so structural use of
+        # it inside the ring write is caught (it may only land in the
+        # ``valid`` column's VALUES)
+        m_aval = _sds((K, E), jnp.bool_)
+        v, _ = check_fn(
+            lambda r, tr, m: decide.bank(r, tuple(tr), env_mask=m),
+            (replay_avals, trans_avals, m_aval),
+            (r_tags, trans_tags, "env:1,mask"),
+            rules=rules, label=f"{label}.bank", scan_bound=False)
+    else:
+        v, _ = check_fn(lambda r, tr: decide.bank(r, tuple(tr)),
+                        (replay_avals, trans_avals), (r_tags, trans_tags),
+                        rules=rules, label=f"{label}.bank",
+                        scan_bound=False)
     _raise_if(v, f"{label}.bank")
 
 
@@ -1051,6 +1146,15 @@ def check_builtins(verbose: bool = False) -> int:
     check_decide_fns(pred.make_decide_fn(), pred.decide_state(), E, F,
                      label="builtin DecideFns")
     n += 2
+
+    # the elastic masked decide path: active/prev_ok enter mask-tagged and
+    # the env-mask-gate family is auto-enabled — the shipped masked step/
+    # bank must stay select-only clean
+    el_state = pred.decide_state()._replace(
+        active=jnp.arange(E) < 2, prev_ok=jnp.zeros((E,), bool))
+    check_decide_fns(pred.make_decide_fn(), el_state, E, F,
+                     label="builtin elastic DecideFns")
+    n += 1
 
     # every registered policy certifies against the FULL rule catalog
     # (carry fixed point, pallas recursion, param replication) — a registry

@@ -249,8 +249,38 @@ def tick(cfg: PipelineConfig, state: PipelineState, raw: RawWindow,
     return new_state, features, frame
 
 
+def mask_env_rows(tree, active):
+    """Zero every env row of ``tree``'s leaves where ``active`` is False.
+
+    The elastic engine's ONLY sanctioned way of combining the slot mask
+    with data: a ``select`` per leaf (broadcast over trailing dims). Active
+    rows pass through untouched — ``where(True, x, 0) == x`` bit for bit —
+    and inactive rows become deterministic zeros of the leaf dtype (the
+    select also kills any NaN/Inf garbage a cold slot computed). Never
+    compact, sort, or index by the mask; the ``env-mask-gate`` contract
+    rule rejects that shape (rows would cross shards under the env mesh).
+
+    The selects are fenced by ``lax.optimization_barrier`` on BOTH sides:
+    XLA otherwise fuses them into the producing computation's epilogue
+    (or into a downstream consumer's kernel — in the fused decide scan
+    the masked raw feeds the reward reduction in the same body), and the
+    changed fusion shape can re-contract multiply-add chains (1-ulp
+    drift vs the dense build — observed on the reward reduction on
+    XLA:CPU). The fences pin the surrounding math to compile exactly as
+    it does without the mask, which is what makes "active rows
+    bit-identical to a dense system over the same envs" hold, not just
+    "close".
+    """
+    tree = jax.lax.optimization_barrier(tree)
+
+    def leaf(x):
+        m = active.reshape((active.shape[0],) + (1,) * (jnp.ndim(x) - 1))
+        return jnp.where(m, x, jnp.zeros((), jnp.asarray(x).dtype))
+    return jax.lax.optimization_barrier(jax.tree.map(leaf, tree))
+
+
 def run_many(cfg: PipelineConfig, state: PipelineState, raws: RawWindow,
-             window_starts):
+             window_starts, active=None):
     """K windows as ONE ``lax.scan`` over :func:`tick`.
 
     ``raws`` is a RawWindow whose leaves carry a leading K axis
@@ -258,10 +288,20 @@ def run_many(cfg: PipelineConfig, state: PipelineState, raws: RawWindow,
     ``(final_state, FeatureFrame, TickFrame)`` with the frame leaves stacked
     along a leading K axis — window k's outputs are exactly what K
     sequential ``tick`` calls would have produced (same math, same order).
+
+    ``active`` (E,) bool is the elastic slot mask: a traced input (attach/
+    detach between batches never retraces), masking the stacked per-window
+    outputs to garbage-free zeros on inactive rows. State updates need no
+    gating — the host feeds inactive slots all-invalid raw windows, under
+    which every stage's update is a natural no-op — so active-row outputs
+    and the carried state stay bit-identical to the dense engine.
     """
     def body(carry, xs):
         raw, ws = xs
         new_state, feats, frame = tick(cfg, carry, raw, ws)
+        if active is not None:
+            feats = mask_env_rows(feats, active)
+            frame = mask_env_rows(frame, active)
         return new_state, (feats, frame)
 
     final_state, (feats, frames) = jax.lax.scan(body, state,
@@ -306,13 +346,29 @@ def run_many_decide(cfg: PipelineConfig, decide, state: PipelineState,
     a scan carry measured a full copy per dispatch — as a plain donated
     input updated by one scatter, XLA aliases it in place). Returns
     ``(final_state, final_dcarry, DecideBatch)``.
+
+    Elastic slot pools ride the decide carry: when ``dstate.active`` is
+    set (an (E,) bool carry leaf — membership changes between batches
+    re-dispatch with new mask VALUES, no retrace), the per-window pipeline
+    outputs are masked to zeros on inactive rows (the decide step masks
+    its own outputs — see ``runtime.predictor.make_decide_fn``), and the
+    post-scan bank marks ring rows valid per env: window 0's transition
+    closes a pair begun LAST batch, so it is valid only for envs with
+    ``prev_ok & active`` (a slot attached this batch has no previous
+    window; ``prev_ok`` is the per-env twin of the scalar ``have_prev``
+    chain), later windows for every active env. The scalar cursor chain —
+    and therefore ring positions — stays exactly the dense engine's.
     """
     step, bank = decide
+    elastic = getattr(dstate, "active", None) is not None
 
     def body(carry, xs):
         pstate, dcarry = carry
         raw, ws = xs
         new_state, feats, frame = tick(cfg, pstate, raw, ws)
+        if elastic:
+            feats = mask_env_rows(feats, dcarry.active)
+            frame = mask_env_rows(frame, dcarry.active)
         new_dcarry, (actions, reward, per_term, violated), trans = step(
             dcarry, feats)
         out = DecideBatch(
@@ -331,7 +387,17 @@ def run_many_decide(cfg: PipelineConfig, decide, state: PipelineState,
     small = dstate._replace(replay=None)
     (final_state, final_small), (outs, trans) = jax.lax.scan(
         body, (state, small), (raws, window_starts))
-    final_dcarry = final_small._replace(replay=bank(dstate.replay, trans))
+    if elastic:
+        K = jnp.shape(window_starts)[0]
+        E = dstate.active.shape[0]
+        rows = jnp.broadcast_to(dstate.active[None, :], (K, E))
+        row0 = (dstate.active & dstate.prev_ok)[None, :]
+        env_mask = jnp.concatenate([row0, rows[1:]], axis=0)
+        final_dcarry = final_small._replace(
+            replay=bank(dstate.replay, trans, env_mask=env_mask),
+            prev_ok=dstate.prev_ok | dstate.active)
+    else:
+        final_dcarry = final_small._replace(replay=bank(dstate.replay, trans))
     return final_state, final_dcarry, outs
 
 
@@ -389,7 +455,7 @@ def make_run_many_decide_sharded(cfg: PipelineConfig, decide, dstate,
     return sharded, mesh
 
 
-def make_run_many_sharded(cfg: PipelineConfig, mesh=None):
+def make_run_many_sharded(cfg: PipelineConfig, mesh=None, elastic=False):
     """Env-sharded scan engine: :func:`run_many` under ``shard_map``.
 
     Returns ``(fn, mesh)`` where ``fn(state, raws, window_starts)`` has the
@@ -401,6 +467,11 @@ def make_run_many_sharded(cfg: PipelineConfig, mesh=None):
     the body needs no collectives and outputs are bit-identical to
     :func:`run_many`. ``mesh`` defaults to ``sharding.env_mesh(cfg.n_envs)``
     (largest device count dividing E; 1-device meshes degenerate cleanly).
+
+    ``elastic=True`` builds the masked-slot-pool variant, whose ``fn``
+    takes a trailing ``active`` (E,) bool argument sharded on the env axis
+    like every other per-env row block (each shard masks only its own
+    rows; the mask combines by select, so no collectives appear).
     """
     from repro.distribution import sharding as shard_lib
 
@@ -415,12 +486,16 @@ def make_run_many_sharded(cfg: PipelineConfig, mesh=None):
                       jax.ShapeDtypeStruct((1, E, S, M), jnp.float32),
                       jax.ShapeDtypeStruct((1, E, S, M), jnp.bool_))
     starts_s = jax.ShapeDtypeStruct((1, E), jnp.float32)
-    out_state_s, out_feats_s, out_frames_s = jax.eval_shape(
-        fn, state_s, raw_s, starts_s)
+    probe = (state_s, raw_s, starts_s)
+    if elastic:
+        probe = probe + (jax.ShapeDtypeStruct((E,), jnp.bool_),)
+    out_state_s, out_feats_s, out_frames_s = jax.eval_shape(fn, *probe)
     axis = mesh.axis_names[0]
     in_specs = (shard_lib.env_specs(state_s, 0, axis),
                 shard_lib.env_specs(raw_s, 1, axis),
                 shard_lib.env_specs(starts_s, 1, axis))
+    if elastic:
+        in_specs = in_specs + (shard_lib.env_specs(probe[3], 0, axis),)
     out_specs = (shard_lib.env_specs(out_state_s, 0, axis),
                  shard_lib.env_specs(out_feats_s, 1, axis),
                  shard_lib.env_specs(out_frames_s, 1, axis))
@@ -441,15 +516,19 @@ class PerceptaPipeline:
 
     def __init__(self, cfg: PipelineConfig, mode: str = "fused",
                  donate: bool = False, mesh=None, decide=None,
-                 decide_state=None):
+                 decide_state=None, elastic: bool = False):
         # donate=True requires the caller to treat the passed-in state as
         # consumed (the engine hands back the new state); it is how the
         # scan engine keeps exactly one live state pytree on device. The
         # fused-decide modes donate BOTH carries (pipeline state + decide
         # carry) so the replay ring never gets copied between batches.
+        # elastic=True marks the env axis a masked slot pool: the plain
+        # scan engines take a trailing (E,) active mask (fused-decide
+        # modes carry it inside decide_state instead).
         self.cfg = cfg
         self.mode = mode
         self.donate = donate
+        self.elastic = elastic
         tickf = functools.partial(tick, cfg)
         # both paths go through compat.jit_donated: fresh init_state leaves
         # alias their zero buffers, which raw donate_argnums rejects
@@ -467,7 +546,8 @@ class PerceptaPipeline:
                 scan_fn = functools.partial(run_many_decide, cfg, decide)
                 self.mesh = None
         elif mode == "scan_sharded":
-            scan_fn, self.mesh = make_run_many_sharded(cfg, mesh)
+            scan_fn, self.mesh = make_run_many_sharded(cfg, mesh,
+                                                       elastic=elastic)
         else:
             scan_fn, self.mesh = functools.partial(run_many, cfg), None
         self._scan = compat.jit_donated(scan_fn, donate_argnums=donate_scan)
@@ -482,11 +562,21 @@ class PerceptaPipeline:
     def init_state(self):
         return init_state(self.cfg)
 
-    def run_many(self, state, raws: RawWindow, window_starts):
-        """Scan-fused execution of K pre-batched windows (one dispatch)."""
+    def run_many(self, state, raws: RawWindow, window_starts, active=None):
+        """Scan-fused execution of K pre-batched windows (one dispatch).
+
+        ``active`` (E,) bool is the elastic slot mask (required iff the
+        pipeline was built with ``elastic=True``; a traced value, so
+        membership changes never retrace)."""
         if self.mode in ("scan_fused_decide", "scan_fused_decide_sharded"):
             raise RuntimeError("fused-decide modes carry a decide state: "
                                "use run_many_decide(state, dstate, ...)")
+        if self.elastic:
+            assert active is not None, \
+                "elastic pipelines need the (E,) active mask per batch"
+            return self._scan(state, raws, window_starts, active)
+        assert active is None, \
+            "active mask passed to a pipeline built with elastic=False"
         return self._scan(state, raws, window_starts)
 
     def run_many_decide(self, state, dstate, raws: RawWindow, window_starts):

@@ -4,12 +4,24 @@
 anonymizing it and delivering it to the node responsible for training."
 
 The buffer is a fixed-capacity ring over (obs, action, reward, next_obs,
-tick_idx, policy_version) batched across environments, living on device
-(shardable over the env dim). ``anonymize`` applies a salted hash to
+tick_idx, policy_version, valid) batched across environments, living on
+device (shardable over the env dim). ``anonymize`` applies a salted hash to
 environment identities so exported datasets can't be joined back to
 buildings. ``policy_version`` attributes every banked action to the policy
 that produced it (online retraining hot-swaps policies at batch
 boundaries; see ``runtime.trainer``).
+
+Elastic slot pools: under ``PerceptaSystem(elastic=True)`` the env axis is
+a padded slot pool and only a masked subset of rows is live. The ring keeps
+ONE scalar cursor — the write chain is per-window, shared by every slot, so
+the slot-pool ring stays bit-identical to the dense ring on the surviving
+rows — and records liveness per cell in the ``valid`` (E, C) column: a
+write with ``env_mask`` still materializes every env row of the window
+(garbage rows are cheaper than a row-compacting scatter, which would break
+the env-mask-gate contract) but marks only the active rows valid.
+``sample_device`` ANDs cell validity into its ``valid`` output so masked
+garbage never weights a loss; dense writes mark every row valid, keeping
+the non-elastic path's outputs unchanged.
 
 Long-horizon time rule: the device-side per-transition time is the EXACT
 int32 predictor tick index, never a float32 absolute timestamp — absolute
@@ -38,6 +50,10 @@ class ReplayBuffer(NamedTuple):
     version: jax.Array    # (E, C) int32 — policy_version that produced the
                           # banked action (attribution column; monotone in
                           # chronological order under online retraining)
+    valid: jax.Array      # (E, C) bool — cell liveness: True iff the env
+                          # row was ACTIVE when its window was banked
+                          # (always True for dense writes; the elastic slot
+                          # pool gates garbage rows out of sampling here)
     cursor: jax.Array     # () int32 — total ticks written (ring position)
 
     @property
@@ -56,21 +72,27 @@ def init(E, capacity, n_features, n_actions) -> ReplayBuffer:
         next_obs=jnp.zeros((E, capacity, n_features), jnp.float32),
         tick_idx=jnp.zeros((E, capacity), jnp.int32),
         version=jnp.zeros((E, capacity), jnp.int32),
+        valid=jnp.zeros((E, capacity), jnp.bool_),
         cursor=jnp.zeros((), jnp.int32),
     )
 
 
 def add(buf: ReplayBuffer, obs, actions, rewards, next_obs,
-        tick_idx, version=0) -> ReplayBuffer:
+        tick_idx, version=0, env_mask=None) -> ReplayBuffer:
     """Write one tick for every env at the ring position (jit-safe).
 
     ``tick_idx`` is the integer tick index (scalar or (E,)), stored exactly
     as int32 — see the module docstring's long-horizon time rule.
     ``version`` is the policy_version that produced the banked action
     (scalar or (E,)), defaulting to 0 for callers without online training.
+    ``env_mask`` (E,) bool marks which rows are live this tick (elastic
+    slot pools); None means every row (the dense contract).
     """
     i = jnp.mod(buf.cursor, buf.capacity)
     upd = lambda b, x: b.at[:, i].set(jnp.asarray(x).astype(b.dtype))
+    E = buf.obs.shape[0]
+    live = (jnp.ones((E,), jnp.bool_) if env_mask is None
+            else jnp.broadcast_to(jnp.asarray(env_mask, jnp.bool_), (E,)))
     return ReplayBuffer(
         obs=upd(buf.obs, obs),
         actions=upd(buf.actions, actions),
@@ -78,12 +100,13 @@ def add(buf: ReplayBuffer, obs, actions, rewards, next_obs,
         next_obs=upd(buf.next_obs, next_obs),
         tick_idx=upd(buf.tick_idx, tick_idx),
         version=upd(buf.version, version),
+        valid=upd(buf.valid, live),
         cursor=buf.cursor + 1,
     )
 
 
 def add_many(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
-             mask=None, version=None) -> ReplayBuffer:
+             mask=None, version=None, env_mask=None) -> ReplayBuffer:
     """Write K stacked ticks in ONE jit-safe call (leading K axis on every
     argument; ``tick_idx`` is (K,)).
 
@@ -91,27 +114,34 @@ def add_many(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
     the ring semantics — write order, cursor advance, wraparound, even
     K > capacity overwrites — are bit-identical to K sequential ``add``
     calls. ``mask`` (K,) bool skips rows without advancing the cursor
-    (scan-safe replacement for the host-side have-prev ``cond``).
+    (scan-safe replacement for the host-side have-prev ``cond``);
+    ``env_mask`` (K, E) bool marks per-window row liveness (the ``valid``
+    column), None meaning every row live.
     """
     K = obs.shape[0]
+    E = buf.obs.shape[0]
     if mask is None:
         mask = jnp.ones((K,), jnp.bool_)
     if version is None:
         version = jnp.zeros((K,), jnp.int32)
+    if env_mask is None:
+        env_mask = jnp.ones((K, E), jnp.bool_)
 
     def body(b, xs):
-        m, o, a, r, n, t, ver = xs
+        m, o, a, r, n, t, ver, em = xs
         return jax.lax.cond(
-            m, lambda bb: add(bb, o, a, r, n, t, ver), lambda bb: bb, b), None
+            m, lambda bb: add(bb, o, a, r, n, t, ver, em),
+            lambda bb: bb, b), None
 
     out, _ = jax.lax.scan(body, buf,
                           (mask, obs, actions, rewards, next_obs, tick_idx,
-                           jnp.asarray(version, jnp.int32)))
+                           jnp.asarray(version, jnp.int32),
+                           jnp.asarray(env_mask, jnp.bool_)))
     return out
 
 
 def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
-              mask=None, version=None) -> ReplayBuffer:
+              mask=None, version=None, env_mask=None) -> ReplayBuffer:
     """Write K stacked ticks as ONE unique-indices scatter (jit-safe).
 
     Final buffer contents and cursor are bit-identical to K sequential
@@ -129,12 +159,20 @@ def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
     out-of-range slots and dropped by the scatter (``mode="drop"``) —
     every surviving slot is written exactly once, so ``unique_indices``
     holds and no ordering ambiguity exists.
+
+    ``env_mask`` (K, E) bool is per-window row liveness: slot positions
+    stay a function of the SCALAR chain ``mask`` alone (the cursor is
+    shared by every slot), and ``env_mask`` lands only in the ``valid``
+    column's scatter VALUES — never in index math, which is exactly the
+    combining discipline the ``env-mask-gate`` contract rule enforces.
     """
     K = obs.shape[0]
     if mask is None:
         mask = jnp.ones((K,), jnp.bool_)
     if version is None:
         version = jnp.zeros((K,), jnp.int32)
+    if env_mask is None:
+        env_mask = jnp.ones((K, buf.obs.shape[0]), jnp.bool_)
     nm = mask.astype(jnp.int32)
     pos = buf.cursor + jnp.cumsum(nm) - 1      # write position per masked row
     total = buf.cursor + nm.sum()
@@ -162,6 +200,7 @@ def add_batch(buf: ReplayBuffer, obs, actions, rewards, next_obs, tick_idx,
         next_obs=upd(buf.next_obs, next_obs),
         tick_idx=upd(buf.tick_idx, tick_b),
         version=upd(buf.version, ver_b),
+        valid=upd(buf.valid, jnp.asarray(env_mask, jnp.bool_)),
         cursor=total,
     )
 
@@ -181,7 +220,8 @@ def sample(buf: ReplayBuffer, rng, batch: int):
     take = lambda x: x[es, ss]
     return {"obs": take(buf.obs), "actions": take(buf.actions),
             "rewards": take(buf.rewards), "next_obs": take(buf.next_obs),
-            "tick_idx": take(buf.tick_idx), "version": take(buf.version)}
+            "tick_idx": take(buf.tick_idx), "version": take(buf.version),
+            "valid": take(buf.valid)}
 
 
 def sample_device(buf: ReplayBuffer, rng, batch: int):
@@ -201,14 +241,20 @@ def sample_device(buf: ReplayBuffer, rng, batch: int):
     ``valid`` is False for every row when the ring holds no transitions.
     Consumers weight their loss by ``valid``; with the same threaded PRNG
     ``rng`` and the same ring size the draw is bit-deterministic.
+
+    Under an elastic slot pool the per-cell ``valid`` column ANDs into the
+    returned ``valid`` — the draw itself stays the SAME (es, ss) gather
+    for the same rng (no mask-dependent index math), so a masked pool and
+    the dense reference consume identical PRNG streams; rows that landed
+    on an inactive slot simply weight to zero.
     """
     E = buf.obs.shape[0]
     n = buf.size()
     ke, ks = jax.random.split(rng)
     es = jax.random.randint(ke, (batch,), 0, E)
     ss = jax.random.randint(ks, (batch,), 0, jnp.maximum(n, 1))
-    valid = jnp.broadcast_to(n > 0, (batch,))
     take = lambda x: x[es, ss]
+    valid = jnp.broadcast_to(n > 0, (batch,)) & take(buf.valid)
     return {"obs": take(buf.obs), "actions": take(buf.actions),
             "rewards": take(buf.rewards), "next_obs": take(buf.next_obs),
             "tick_idx": take(buf.tick_idx), "version": take(buf.version),
@@ -271,5 +317,6 @@ def export_for_training(buf: ReplayBuffer, env_ids, salt: str,
         "next_obs": take(buf.next_obs),
         "tick_idx": tick_idx,
         "version": take(buf.version),
+        "valid": take(buf.valid),
         "times": times,
     }

@@ -117,12 +117,27 @@ class RewardSpec:
 
         Leading batch axes (e.g. a K-window stack) are supported directly:
         every term is elementwise over the leading dims, so the stacked
-        result is bit-identical to per-window calls."""
+        result is bit-identical to per-window calls.
+
+        The total is NOT a ``per.sum(-1)``: the term stack is sealed
+        behind ``lax.optimization_barrier`` and totalled by an explicit
+        left-fold of adds. Without the barrier XLA rematerializes the
+        total from the term EXPRESSIONS and contracts their
+        multiply-adds into FMAs, and a reduce's association order is
+        itself a codegen choice — both depend on what else fused into
+        the kernel, so the same spec could total to different bits in
+        different builds (dense vs elastic-masked was 1 ulp apart on
+        XLA:CPU). Explicit adds over sealed term bits are order-fixed by
+        HLO semantics in every build."""
         if prev_actions is None:
             prev_actions = jnp.zeros_like(actions)
         per = jnp.stack([t.evaluate(features, actions, prev_actions)
                          for t in self.terms], axis=-1)
-        return per.sum(-1), per
+        per = jax.lax.optimization_barrier(per)
+        total = per[..., 0]
+        for i in range(1, len(self.terms)):
+            total = total + per[..., i]
+        return total, per
 
 
 def energy_reward_spec(price_idx: int, grid_idx: int, temp_idx: int,

@@ -1,97 +1,108 @@
-"""Elastic scaling + straggler mitigation (host-level policies).
+"""Elastic env-slot pool growth.
 
-Elastic re-meshing: on restart after losing/gaining hosts, pick the largest
-(data', model) mesh that the surviving device count supports, keeping the
-model axis fixed (it must match the weight sharding factors) and shrinking
-the data axis — the checkpoint restores onto the new mesh because
-Checkpointer.restore re-places GLOBAL arrays with the new shardings. At
-1000+ node scale this is the "drain, re-mesh, resume from step N" recovery
-path; the batch size per step stays constant by raising grad-accumulation
-microbatches to cover the lost data-parallel rows.
+The engine allocates a *slot pool* of ``E`` env rows and threads an
+``active: (E,) bool`` mask through the scan carry, so envs can attach and
+detach between window batches with no retrace.  This module owns the one
+operation that DOES retrace: growing the pool when it fills.
 
-Straggler mitigation: a deadline monitor around the synchronous step. On
-TPU pods a straggling host stalls the collective; the mitigation at the
-framework level is (a) detect (step time > k x EWMA), (b) after M
-consecutive detections, treat the host as failed: checkpoint, drop it from
-the mesh (elastic path), resume. Both pieces are implemented host-side and
-unit-tested with a simulated slow worker.
+Protocol (driven by ``runtime.system.PerceptaSystem.resize``):
+
+1. ``next_pool_size`` picks the new capacity (doubling, device-aligned so
+   the env mesh can still split the slot axis evenly).
+2. ``grow_env_tree`` pads every env-leading leaf of the state / decide-carry
+   / replay pytrees from ``old_e`` to the new capacity, taking the fresh
+   rows from a template built at the new size (templates carry the correct
+   init values — e.g. ``prev_ts=-inf`` sentinels, ``NormState`` min=+inf —
+   and any leaves that do not carry an env axis, such as policy params,
+   pass through from the template untouched).
+3. The caller re-chooses the env mesh for the new slot count, re-places the
+   grown trees via ``sharding.place_env_tree``, and rebuilds the pipeline —
+   the only allowed retrace point.  Surviving rows are copied bit-exactly,
+   so active envs resume as if nothing happened.
+
+``reset_env_rows`` is the attach/detach half: it rewrites individual slot
+rows from a fresh init template between dispatches (out-of-place ``.at[]``
+updates; donation-safe because it runs on the host between batches).
 """
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
-from typing import Optional
-
 import jax
+import jax.numpy as jnp
 
 
-def best_mesh_shape(n_devices: int, model_parallel: int,
-                    multi_pod_at: int = 512) -> tuple:
-    """Largest usable (pod, data, model) given surviving devices."""
-    if n_devices < model_parallel:
+def next_pool_size(n_active: int, current_slots: int,
+                   n_devices: int = 1) -> int:
+    """Smallest doubled, device-aligned capacity holding ``n_active`` envs.
+
+    Doubles ``current_slots`` until it fits ``n_active``, then rounds up to
+    a multiple of ``n_devices`` so ``sharding.env_mesh`` can split the slot
+    axis evenly across the env mesh.
+    """
+    if n_active <= current_slots:
+        return current_slots
+    slots = max(1, current_slots)
+    while slots < n_active:
+        slots *= 2
+    if n_devices > 1 and slots % n_devices:
+        slots += n_devices - slots % n_devices
+    return slots
+
+
+def grow_env_tree(tree, template, old_e: int):
+    """Pad env-leading leaves of ``tree`` to the template's slot capacity.
+
+    For each leaf pair ``(x, t)``: if their shapes differ *only* in the
+    leading (env) dim, the result is ``concat([x, t[old_e:]], axis=0)`` —
+    the surviving ``old_e`` rows are carried over bit-exactly and the new
+    rows take the template's fresh init values.  Leaves with identical
+    shapes (policy params, scalar cursors, version counters) pass through
+    from ``tree`` unchanged.  Any other shape mismatch is an error.
+
+    Works on single arrays as well as arbitrary pytrees.
+    """
+    def leaf(x, t):
+        x = jnp.asarray(x)
+        t = jnp.asarray(t)
+        if x.shape == t.shape:
+            return x
+        if (x.ndim == t.ndim and x.ndim >= 1 and x.shape[1:] == t.shape[1:]
+                and x.shape[0] == old_e and t.shape[0] > old_e):
+            return jnp.concatenate([x, t[old_e:]], axis=0)
         raise ValueError(
-            f"cannot keep model sharding {model_parallel} with {n_devices} devices")
-    data = n_devices // model_parallel
-    if n_devices >= multi_pod_at and data % 2 == 0:
-        return (2, data // 2, model_parallel)
-    return (data, model_parallel)
+            f"grow_env_tree: leaf shape {x.shape} does not match template "
+            f"{t.shape} (expected equal, or env-dim growth from {old_e})")
+
+    return jax.tree.map(leaf, tree, template)
 
 
-def rescale_microbatches(global_batch: int, old_data: int, new_data: int,
-                         old_micro: int) -> int:
-    """Keep the global batch constant when data-parallel width changes."""
-    per_row = global_batch // (old_data * old_micro)
-    need = global_batch // (new_data * per_row)
-    return max(1, need)
+def reset_env_rows(tree, template, slots):
+    """Rewrite slot rows of env-leading leaves from a fresh init template.
 
+    ``slots`` is a sequence of slot indices being attached (or detached);
+    every leaf whose leading dim matches the template's env dim gets those
+    rows replaced by the template's rows.  Leaves without an env axis
+    (shape mismatch in dim 0) pass through unchanged.  Out-of-place
+    (``.at[].set``), so it is safe between donated dispatches.
+    """
+    idx = jnp.asarray(list(slots), jnp.int32)
+    if idx.size == 0:
+        return tree
+    env_dim = None
 
-@dataclass
-class StragglerPolicy:
-    """EWMA step-time deadline detector."""
-    k: float = 3.0                 # deadline = k * ewma
-    alpha: float = 0.2
-    consecutive_to_fail: int = 3
-    min_steps: int = 5
-    ewma: float = 0.0
-    steps: int = 0
-    strikes: int = 0
-    slow_events: int = 0
+    def probe(t):
+        nonlocal env_dim
+        t = jnp.asarray(t)
+        if env_dim is None and t.ndim >= 1:
+            env_dim = t.shape[0]
+        return t
 
-    def observe(self, step_time_s: float) -> str:
-        """Returns 'ok' | 'slow' | 'fail' (fail => trigger elastic restart)."""
-        self.steps += 1
-        if self.steps <= self.min_steps:
-            self.ewma = step_time_s if self.ewma == 0.0 else \
-                (1 - self.alpha) * self.ewma + self.alpha * step_time_s
-            return "ok"
-        verdict = "ok"
-        if step_time_s > self.k * max(self.ewma, 1e-9):
-            self.strikes += 1
-            self.slow_events += 1
-            verdict = "slow"
-            if self.strikes >= self.consecutive_to_fail:
-                verdict = "fail"
-        else:
-            self.strikes = 0
-            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time_s
-        return verdict
+    jax.tree.map(probe, template)
 
+    def leaf(x, t):
+        x = jnp.asarray(x)
+        t = jnp.asarray(t)
+        if x.ndim >= 1 and x.shape == t.shape and x.shape[0] == env_dim:
+            return x.at[idx].set(t[idx])
+        return x
 
-@dataclass
-class PreemptionGuard:
-    """SIGTERM-aware: cloud preemption sends SIGTERM before the kill."""
-    triggered: bool = False
-
-    def install(self):
-        import signal
-
-        def handler(signum, frame):
-            self.triggered = True
-
-        try:
-            signal.signal(signal.SIGTERM, handler)
-            signal.signal(signal.SIGINT, handler)
-        except ValueError:
-            pass  # not main thread (tests)
-        return self
+    return jax.tree.map(leaf, tree, template)

@@ -76,6 +76,25 @@ def env_specs(shape_tree, env_axis: int, axis_name: str = ENV_AXIS):
                         is_leaf=lambda x: hasattr(x, "ndim"))
 
 
+def place_env_tree(tree, env_axis: int, mesh: Mesh,
+                   axis_name: str = ENV_AXIS, specs=None):
+    """Device-put a pytree onto the env mesh with :func:`env_specs` layout.
+
+    The elastic regrow path uses this after ``elastic.grow_env_tree``: the
+    grown host-side state / decide-carry / replay trees are re-placed on
+    the (possibly re-chosen) env mesh before the rebuilt pipeline's first
+    dispatch, so surviving rows land on their new owner devices without a
+    layout-change inside jit. Scalars (rank <= env_axis) replicate, per the
+    same rank rule that places the carries. ``specs`` overrides the spec
+    tree — the decide carry passes :func:`decide_specs` so policy weights
+    replicate instead of rank-rule sharding."""
+    if specs is None:
+        specs = env_specs(tree, env_axis, axis_name)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: hasattr(x, "ndim"))
+
+
 def decide_specs(dstate_tree, env_axis: int, axis_name: str = ENV_AXIS):
     """:func:`env_specs` for the fused decision carry, with the ``policy``
     params subtree forced to replicate.

@@ -87,6 +87,12 @@ class Accumulator:
             self.stats["records"] += int(sid.shape[0])
             self._chunks.append((sid, ts, vs))
 
+    def reset(self) -> int:
+        """Discard pending records (elastic detach); returns the count."""
+        n = sum(int(c[0].shape[0]) for c in self._chunks)
+        self._chunks = []
+        return n
+
     def _pending(self) -> Chunk:
         if not self._chunks:
             z = np.empty(0)

@@ -99,6 +99,16 @@ class DecideState(NamedTuple):
     certification pass (``repro.analysis.certify``) proves every carry
     leaf is env-row-stable (``carry-env-mix``) before a stateful policy
     may ride the fused/sharded engines.
+
+    ``active``/``prev_ok`` are the ELASTIC slot-pool mask leaves: ``None``
+    (leafless — dense pytrees, traces, specs and donation are unchanged)
+    for fixed-E systems; under ``PerceptaSystem(elastic=True)`` they are
+    (E,) bool carry leaves sharded on the env axis like every row block.
+    ``active`` marks which slots are live THIS batch (the decide step
+    gates its outputs on it by select; the host flips values between
+    batches — no retrace); ``prev_ok`` is the per-env twin of the scalar
+    ``have_prev`` chain — True once a slot has produced a window since it
+    last attached — gating the batch's first banked transition per row.
     """
     prev_obs: jax.Array      # (E, F)
     prev_actions: jax.Array  # (E, A)
@@ -109,6 +119,8 @@ class DecideState(NamedTuple):
     version: jax.Array       # () int32 — policy_version of ``policy``
     prev_version: jax.Array  # () int32 — version that made prev_actions
     carry: object = None     # recurrent model state (None = stateless)
+    active: object = None    # (E,) bool slot mask (None = dense fixed-E)
+    prev_ok: object = None   # (E,) bool per-env have-prev (None = dense)
 
 
 class DecideFns(NamedTuple):
@@ -121,8 +133,10 @@ class DecideFns(NamedTuple):
     ``(prev_obs, prev_actions, reward, next_obs, tick, version,
     have_prev)`` row the window banks (7 flat trailing outputs — the
     arity ``analysis.check_decide_fns`` keys on). ``bank(ReplayBuffer,
-    stacked transitions) -> ReplayBuffer`` writes the whole batch after
-    the scan in one exact ring scatter (``replay.add_batch``).
+    stacked transitions, env_mask=None) -> ReplayBuffer`` writes the
+    whole batch after the scan in one exact ring scatter
+    (``replay.add_batch``); ``env_mask`` (K, E) bool is the elastic
+    per-row liveness landing in the ring's ``valid`` column.
     """
     step: Callable
     bank: Callable
@@ -313,16 +327,28 @@ class Predictor:
         high = jnp.asarray(self.action_space.high, jnp.float32)
 
         def _step(features, raw, prev_obs, prev_actions, replay, tick_idx,
-                  have_prev, params, version, mcarry):
+                  have_prev, params, version, mcarry, active=None,
+                  prev_ok=None):
             actions, new_mcarry = apply2(params, features, mcarry)
             actions, violated = validate_actions(actions, low, high)
             # rewards are computed on engineering units, not z-scores
             reward, per_term = self.reward_spec.compute(
                 raw, actions, prev_actions)
+            if active is not None:
+                # elastic slot pool: gate outputs by select (active rows
+                # bit-exact, inactive rows deterministic zeros) and mark
+                # only rows that close a real prev->next pair valid
+                actions = jnp.where(active[:, None], actions, 0.0)
+                reward = jnp.where(active, reward, 0.0)
+                per_term = jnp.where(active[:, None], per_term, 0.0)
+                violated = active & violated
+                row_ok = active & prev_ok
+            else:
+                row_ok = None
             new_replay = jax.lax.cond(
                 have_prev,
                 lambda r: rp.add(r, prev_obs, prev_actions, reward, features,
-                                 tick_idx, version),
+                                 tick_idx, version, env_mask=row_ok),
                 lambda r: r,
                 replay)
             return actions, reward, per_term, violated, new_replay, new_mcarry
@@ -330,7 +356,8 @@ class Predictor:
         self._step = jax.jit(_step)
 
         def _steps(features, raw, tick_idx, prev_obs, prev_actions,
-                   have_prev, replay, params, version, prev_version, mcarry):
+                   have_prev, replay, params, version, prev_version, mcarry,
+                   active=None, prev_ok=None):
             """K windows in one dispatch. The policy/validate scan runs the
             SAME per-window (E, F) computation ``_step`` jits (a batched
             K-leading gemm could block/accumulate differently on some
@@ -346,10 +373,29 @@ class Predictor:
 
             mcarry_out, (actions, violated) = jax.lax.scan(
                 body, mcarry, features)
+            if active is not None:
+                # elastic slot pool: gate per-window outputs by select
+                # BEFORE the prev-chain materializes, so inactive rows
+                # carry deterministic zeros into the shifted stacks (the
+                # barrier seals the policy math from the select's fusion
+                # — see make_decide_fn)
+                actions, violated = jax.lax.optimization_barrier(
+                    (actions, violated))
+                actions = jnp.where(active[None, :, None], actions, 0.0)
+                violated = active[None, :] & violated
+                # trailing fence: the masked actions feed the reward
+                # compute below — the select must not fuse into it either
+                actions, violated = jax.lax.optimization_barrier(
+                    (actions, violated))
             prev_act_seq = jnp.concatenate([prev_actions[None], actions[:-1]],
                                            0)
             rewards, per_term = self.reward_spec.compute(raw, actions,
                                                          prev_act_seq)
+            if active is not None:
+                rewards, per_term = jax.lax.optimization_barrier(
+                    (rewards, per_term))
+                rewards = jnp.where(active[None, :], rewards, 0.0)
+                per_term = jnp.where(active[None, :, None], per_term, 0.0)
             # transition j stores (obs/actions entering window j, reward j,
             # next_obs = window j's features); only the first row of the
             # batch can lack a predecessor — and only row 0's banked action
@@ -360,9 +406,19 @@ class Predictor:
                                     jnp.ones((K - 1,), jnp.bool_)])
             ver_seq = jnp.concatenate(
                 [prev_version[None], jnp.full((K - 1,), version, jnp.int32)])
+            if active is not None:
+                # per-row liveness: window 0 closes a pair begun last
+                # batch (needs the per-env prev_ok), later windows need
+                # only active — membership is constant within a batch
+                E = features.shape[1]
+                rows = jnp.broadcast_to(active[None, :], (K, E))
+                env_mask = jnp.concatenate(
+                    [(active & prev_ok)[None, :], rows[1:]], axis=0)
+            else:
+                env_mask = None
             new_replay = rp.add_many(replay, prev_obs_seq, prev_act_seq,
                                      rewards, features, tick_idx, mask,
-                                     ver_seq)
+                                     ver_seq, env_mask=env_mask)
             return (actions, rewards, per_term, violated, features[-1],
                     actions[-1], new_replay, mcarry_out)
 
@@ -422,6 +478,22 @@ class Predictor:
             actions, violated = validate_actions(actions, low, high)
             reward, per_term = spec.compute(feats.raw, actions,
                                             carry.prev_actions)
+            if carry.active is not None:
+                # elastic slot pool: combine the mask by select only
+                # (active rows keep their exact bits; inactive rows
+                # become deterministic zeros) — the env-mask-gate rule
+                # rejects any row-compacting alternative. The barrier
+                # stops XLA fusing the selects into the reward reduction
+                # epilogue (changed fusion re-contracts multiply-adds:
+                # 1-ulp drift vs the dense build on XLA:CPU)
+                act = carry.active
+                actions, reward, per_term, violated = \
+                    jax.lax.optimization_barrier(
+                        (actions, reward, per_term, violated))
+                actions = jnp.where(act[:, None], actions, 0.0)
+                reward = jnp.where(act, reward, 0.0)
+                per_term = jnp.where(act[:, None], per_term, 0.0)
+                violated = act & violated
             # transition entering this window: only bankable once a
             # predecessor exists (the mask the bank applies); it is
             # attributed to the version that produced its ACTION —
@@ -434,13 +506,14 @@ class Predictor:
                               have_prev=jnp.ones((), jnp.bool_),
                               tick=carry.tick + 1, replay=carry.replay,
                               policy=carry.policy, version=carry.version,
-                              prev_version=carry.version, carry=new_mcarry)
+                              prev_version=carry.version, carry=new_mcarry,
+                              active=carry.active, prev_ok=carry.prev_ok)
             return new, (actions, reward, per_term, violated), transition
 
-        def bank(replay, transitions):
+        def bank(replay, transitions, env_mask=None):
             obs, actions, rewards, next_obs, tick, version, mask = transitions
             return rp.add_batch(replay, obs, actions, rewards, next_obs,
-                                tick, mask, version)
+                                tick, mask, version, env_mask=env_mask)
 
         return DecideFns(step, bank)
 
@@ -466,11 +539,13 @@ class Predictor:
             if idx >= 1:
                 self._replay_times[(idx - 1) % C] = float(t)
 
-    def on_tick(self, features, tick_time, raw=None):
+    def on_tick(self, features, tick_time, raw=None, active=None,
+                prev_ok=None):
         """features: (E, F) device array; returns host actions + rewards.
 
         The per-window reference path — :meth:`on_windows` must stay
-        bit-identical to K calls of this."""
+        bit-identical to K calls of this. ``active``/``prev_ok`` (E,) bool
+        are the elastic slot-pool masks (None = dense)."""
         raw = features if raw is None else raw
         idx = self.stats["ticks"]
         (actions, reward, per_term, violated, self.replay,
@@ -479,7 +554,9 @@ class Predictor:
             self.replay, jnp.asarray(idx, jnp.int32),
             jnp.asarray(self._prev["have"]), self.policy_params,
             jnp.asarray(self._prev["version"], jnp.int32),
-            self._model_carry)
+            self._model_carry,
+            None if active is None else jnp.asarray(active, jnp.bool_),
+            None if prev_ok is None else jnp.asarray(prev_ok, jnp.bool_))
         self._record_times(idx, [tick_time])
         self._prev = {"obs": features, "actions": actions, "have": True,
                       "version": self.policy_version}
@@ -487,7 +564,8 @@ class Predictor:
         self.stats["violations"] += int(np.asarray(violated).sum())
         return np.asarray(actions), np.asarray(reward), np.asarray(per_term)
 
-    def on_windows(self, features, tick_times, raw=None):
+    def on_windows(self, features, tick_times, raw=None, active=None,
+                   prev_ok=None):
         """Consume a K-window stack in ONE jitted dispatch.
 
         ``features``/``raw``: (K, E, F) (raw defaults to features);
@@ -495,6 +573,8 @@ class Predictor:
         sent to device). Returns host ``(actions (K, E, A), rewards (K, E),
         per_term (K, E, n_terms))`` — bit-identical to K sequential
         :meth:`on_tick` calls, including replay contents and stats.
+        ``active``/``prev_ok`` (E,) bool are the elastic slot-pool masks
+        (None = dense; membership is constant within a batch).
         """
         features = jnp.asarray(features)
         raw = features if raw is None else jnp.asarray(raw)
@@ -509,7 +589,9 @@ class Predictor:
             self.replay, self.policy_params,
             jnp.asarray(self.policy_version, jnp.int32),
             jnp.asarray(self._prev["version"], jnp.int32),
-            self._model_carry)
+            self._model_carry,
+            None if active is None else jnp.asarray(active, jnp.bool_),
+            None if prev_ok is None else jnp.asarray(prev_ok, jnp.bool_))
         self._record_times(base, tick_times)
         self._prev = {"obs": last_obs, "actions": last_actions, "have": True,
                       "version": self.policy_version}
@@ -522,3 +604,52 @@ class Predictor:
         absolute times reconstructed from the host-side mirror."""
         return rp.export_for_training(self.replay, env_ids, salt,
                                       slot_times=self._replay_times)
+
+    # --- elastic slot-pool hooks (PerceptaSystem(elastic=True)) ------------
+    def clear_env_rows(self, slots) -> None:
+        """Scrub env rows for recycled slots (scan-mode attach/detach):
+        zero the prev carry rows and invalidate every replay cell of the
+        slot, so a later tenant of the same row never observes — or banks
+        against — the departed env's transitions. Out-of-place ``.at``
+        updates between dispatches, so donation aliasing is never
+        violated."""
+        slots = np.asarray(slots, np.int64).reshape(-1)
+        if slots.size == 0:
+            return
+        self._prev["obs"] = jnp.asarray(self._prev["obs"]).at[slots].set(0.0)
+        self._prev["actions"] = \
+            jnp.asarray(self._prev["actions"]).at[slots].set(0.0)
+        self.replay = self.replay._replace(
+            valid=self.replay.valid.at[slots].set(False))
+        if self._model_carry is not None and self.model.init_carry is not None:
+            tmpl = self.model.init_carry(self.n_envs)
+            self._model_carry = jax.tree.map(
+                lambda x, t: jnp.asarray(x).at[slots].set(
+                    jnp.asarray(t)[slots]),
+                self._model_carry, tmpl)
+
+    def grow_envs(self, n_envs_new: int) -> None:
+        """Pad the env axis of every per-env structure to ``n_envs_new``
+        slots (elastic pool regrow). New rows come from a FRESH init
+        template — never raw zeros — and existing rows are byte-for-byte
+        preserved, so surviving envs resume bit-exactly."""
+        from repro.distribution import elastic as el
+
+        old_e = self.n_envs
+        assert n_envs_new > old_e, (n_envs_new, old_e)
+        self.n_envs = n_envs_new
+        tmpl_replay = rp.init(n_envs_new, self.replay.capacity,
+                              self.n_features, self.action_space.n)
+        self.replay = el.grow_env_tree(self.replay, tmpl_replay, old_e)
+        prev_tmpl = {
+            "obs": jnp.zeros((n_envs_new, self.n_features), jnp.float32),
+            "actions": jnp.zeros((n_envs_new, self.action_space.n),
+                                 jnp.float32),
+        }
+        self._prev["obs"] = el.grow_env_tree(
+            jnp.asarray(self._prev["obs"]), prev_tmpl["obs"], old_e)
+        self._prev["actions"] = el.grow_env_tree(
+            jnp.asarray(self._prev["actions"]), prev_tmpl["actions"], old_e)
+        if self._model_carry is not None and self.model.init_carry is not None:
+            self._model_carry = el.grow_env_tree(
+                self._model_carry, self.model.init_carry(n_envs_new), old_e)

@@ -39,6 +39,7 @@ class BatchPlan(NamedTuple):
     epoch: int                 # strictly increasing handoff tag
     bounds: List[Tuple[float, float]]
     pump: bool                 # advance the clock + poll receivers first
+    membership: int = 0        # env-membership epoch the plan was built under
 
 
 class AssembledBatch(NamedTuple):
@@ -46,6 +47,7 @@ class AssembledBatch(NamedTuple):
     bounds: List[Tuple[float, float]]
     raw: object                # RawWindow (K, E, S, M), window-relative ts
     counts: List[int]
+    membership: int = 0        # echoed from the plan; Manager verifies it
 
 
 class _PumpError(NamedTuple):
@@ -104,15 +106,24 @@ class WindowPrefetcher:
         self._next_consume = 0
 
     # --- Manager side --------------------------------------------------------
-    def submit(self, bounds, pump: bool = True) -> int:
-        """Queue one batch plan; returns its epoch tag."""
+    def submit(self, bounds, pump: bool = True, membership: int = 0) -> int:
+        """Queue one batch plan; returns its epoch tag.
+
+        ``membership`` tags the plan with the env-membership epoch it was
+        built under; elastic systems verify it on the assembled batch so
+        attach/detach can only land at batch boundaries (no plan built
+        before the change is ever consumed after it)."""
         if self._failed is not None:
             raise RuntimeError("window prefetcher failed") from self._failed
         self._ensure_thread()
         epoch = self._next_submit
         self._next_submit += 1
-        self._tasks.put(BatchPlan(epoch, list(bounds), pump))
+        self._tasks.put(BatchPlan(epoch, list(bounds), pump, membership))
         return epoch
+
+    def in_flight(self) -> int:
+        """Plans submitted but not yet consumed (0 = a true batch boundary)."""
+        return self._next_submit - self._next_consume
 
     def next_batch(self, timeout: float = 600.0) -> AssembledBatch:
         """Block for the next assembled batch, verifying the epoch handoff.
@@ -153,5 +164,6 @@ class WindowPrefetcher:
                 self._put_ready(_PumpError(task.epoch, e))
                 return
             if not self._put_ready(AssembledBatch(task.epoch, task.bounds,
-                                                  raw, counts)):
+                                                  raw, counts,
+                                                  task.membership)):
                 return

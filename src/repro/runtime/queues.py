@@ -110,6 +110,12 @@ class QueueBroker:
     def publish(self, item: Item):
         self.queue_for(item.env_id).put(item)
 
+    def remove(self, env_id: str) -> int:
+        """Drop an env's queue (elastic detach); returns discarded records."""
+        with self._lock:
+            q = self._queues.pop(env_id, None)
+        return q.record_depth() if q is not None else 0
+
     def stats(self):
         # depth stays in records (enqueued - dequeued holds because both
         # count records); depth_items is the raw queue length, which is

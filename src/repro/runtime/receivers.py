@@ -123,6 +123,17 @@ class Receiver(threading.Thread):
             # silently dropped (max_backlog_s still bounds staleness)
             self._last_t.setdefault(env_id, self.clock())
 
+    def unsubscribe(self, env_id: str) -> None:
+        """Detach an env from this source (elastic membership).
+
+        Atomic wrt a concurrent poll cycle; the poll horizon entry is
+        dropped too, so a later re-subscribe of the same env id starts a
+        FRESH horizon at attach time instead of replaying the gap."""
+        with self._poll_lock:
+            self._subs.pop(env_id, None)
+            self._batch_subs.pop(env_id, None)
+            self._last_t.pop(env_id, None)
+
     def poll_once(self):
         """One poll cycle: emit all new readings per environment.
 

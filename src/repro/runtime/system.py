@@ -91,6 +91,24 @@ on an empty ring) the decide path is bit-identical to the plain fused
 modes. Accessors: ``policy_version()``, ``snapshot_policy()``,
 ``train_stats()``.
 
+``elastic=True`` (scan modes only) turns the env axis into a padded SLOT
+POOL: ``env_slots`` rows are allocated up front, an ``active`` (E,) bool
+mask — a traced VALUE, so membership changes never retrace — rides every
+dispatch (a trailing ``run_many`` input in the plain scan modes, the
+``DecideState.active``/``prev_ok`` carry leaves in the fused ones), and
+:meth:`attach_env` / :meth:`detach_env` flip slots between window batches
+only (the prefetcher's membership epoch tag enforces the boundary in the
+async modes). Inactive slots are fed all-invalid raw windows (state
+updates are natural no-ops) and masked to deterministic zeros on every
+output; they are excluded from decisions, reward/violation stats,
+replay banking and sampling (the ring's per-cell ``valid`` column),
+LogDB rows and Forwarder traffic — active-row results stay bit-identical
+to a dense fixed-E system over the same envs. When the pool fills,
+:meth:`resize` grows it (``distribution.elastic``): every env-leading
+pytree is padded against a fresh init template, re-placed on the
+re-chosen env mesh (sharded modes), and the engine is rebuilt — the one
+allowed retrace point; surviving rows resume bit-exactly.
+
 ``ingest="columnar"`` (the default) moves record flow onto the
 structure-of-arrays fast path: Receivers hand whole polls to
 ``Translator.translate_batch`` which publishes one ``RecordBatch`` per
@@ -106,6 +124,7 @@ higher-fidelity one.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -165,13 +184,45 @@ class PerceptaSystem:
                  contract_check: bool = True,
                  train: Optional[str] = None,
                  train_cfg: Optional[dict] = None,
-                 policy=None):
+                 policy=None,
+                 env_slots: Optional[int] = None,
+                 elastic: bool = False):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
         self.manual_time = manual_time
         self._manual_t = t0
-        assert pipeline_cfg.n_envs == len(env_ids)
+        # elastic: the env axis is a padded slot pool; E == env_slots rows,
+        # of which only the masked subset is live (module docstring)
+        self.elastic = bool(elastic)
+        if self.elastic:
+            if mode not in _SCAN_MODES:
+                raise ValueError(
+                    "elastic=True needs a scan engine (the active mask "
+                    f"rides the scan dispatch); mode {mode!r} dispatches "
+                    "per window")
+            slots = int(env_slots) if env_slots is not None \
+                else pipeline_cfg.n_envs
+            assert len(env_ids) <= slots, (len(env_ids), slots)
+            assert pipeline_cfg.n_envs == slots, \
+                "elastic: pipeline_cfg.n_envs must equal env_slots " \
+                f"({pipeline_cfg.n_envs} != {slots})"
+            assert predictor.n_envs == slots, \
+                "elastic: build the Predictor at env_slots rows " \
+                f"({predictor.n_envs} != {slots})"
+            self.env_slots: Optional[int] = slots
+            self._slot_env: List[Optional[str]] = \
+                list(env_ids) + [None] * (slots - len(env_ids))
+            self._free_slots: List[int] = list(range(len(env_ids), slots))
+            self._active = np.zeros(slots, bool)
+            self._active[:len(env_ids)] = True
+            self._prev_ok = np.zeros(slots, bool)
+        else:
+            assert env_slots is None or env_slots == len(env_ids), \
+                "env_slots beyond len(env_ids) requires elastic=True"
+            assert pipeline_cfg.n_envs == len(env_ids)
+            self.env_slots = None
+        self._membership_epoch = 0
         assert pipeline_cfg.n_streams == len(sources)
         self.env_ids = list(env_ids)
         self.sources = list(sources)
@@ -194,7 +245,15 @@ class PerceptaSystem:
         # becomes part of the device carry — the Predictor hands both over
         # here and only does host bookkeeping (absorb_fused) afterwards
         decide = predictor.make_decide_fn() if self.fused_decide else None
+        self._decide = decide
         self._dstate = predictor.decide_state() if self.fused_decide else None
+        if self.elastic and self.fused_decide:
+            # the elastic mask leaves join the device carry BEFORE the
+            # contract check and the pipeline build, so the masked decide
+            # path is exactly what gets checked, traced and sharded
+            self._dstate = self._dstate._replace(
+                active=jnp.asarray(self._active),
+                prev_ok=jnp.asarray(self._prev_ok))
         # construction-time invariant gate (ROADMAP item 2): statically
         # check the decision path's jaxpr BEFORE building/compiling the
         # engine, so a cross-env contraction (silent 1-ulp shard
@@ -282,7 +341,8 @@ class PerceptaSystem:
             pipeline_cfg, mode=pipe_mode,
             donate=mode in ("scan", "scan_sharded", "scan_fused_decide",
                             "scan_fused_decide_sharded"),
-            mesh=mesh, decide=decide, decide_state=self._dstate)
+            mesh=mesh, decide=decide, decide_state=self._dstate,
+            elastic=self.elastic)
         self.state = self.pipeline.init_state()
         self._prefetcher: Optional[WindowPrefetcher] = None
         self.predictor = predictor
@@ -320,32 +380,49 @@ class PerceptaSystem:
         }
         self.receivers: List[Receiver] = []
         for s in sources:
-            r = Receiver(s.source_id, s.protocol, s.device, self.now,
-                         speedup=speedup)
-            tr = self.translators[s.source_id]
-            for env in env_ids:
-                def on_payload(env_id, payload, _tr=tr):
-                    rec = _tr.translate(env_id, payload)
-                    if rec is not None:
-                        self.broker.publish(rec)
-
-                def on_batch(env_id, stream, ts, vals, _tr=tr):
-                    batch = _tr.translate_batch(env_id, stream, ts, vals)
-                    if batch is not None:
-                        self.broker.publish(batch)
-
-                if self.ingest == "columnar":
-                    r.subscribe(env, on_batch=on_batch)
-                else:
-                    r.subscribe(env, on_payload)
-            self.receivers.append(r)
-        stream_names = [s.device.stream for s in sources]
-        self.accumulators = {
-            env: Accumulator(env, stream_names, pipeline_cfg.max_samples)
-            for env in env_ids
-        }
+            self.receivers.append(
+                Receiver(s.source_id, s.protocol, s.device, self.now,
+                         speedup=speedup))
+        self._stream_names = [s.device.stream for s in sources]
+        self.accumulators: Dict[str, Accumulator] = {}
+        for env in env_ids:
+            self._register_env(env)
         self.metrics: Dict[str, list] = {"tick_latency_s": [],
                                          "ingest_records": []}
+
+    def _register_env(self, env_id: str) -> None:
+        """Wire one env into every source Receiver and give it its own
+        Accumulator (construction and elastic :meth:`attach_env`)."""
+        for r in self.receivers:
+            tr = self.translators[r.source_id]
+
+            def on_payload(env_id, payload, _tr=tr):
+                rec = _tr.translate(env_id, payload)
+                if rec is not None:
+                    self.broker.publish(rec)
+
+            def on_batch(env_id, stream, ts, vals, _tr=tr):
+                batch = _tr.translate_batch(env_id, stream, ts, vals)
+                if batch is not None:
+                    self.broker.publish(batch)
+
+            if self.ingest == "columnar":
+                r.subscribe(env_id, on_batch=on_batch)
+            else:
+                r.subscribe(env_id, on_payload)
+        self.accumulators[env_id] = Accumulator(env_id, self._stream_names,
+                                                self.cfg.max_samples)
+
+    def _live_slots(self) -> List[tuple]:
+        """``[(slot_row, env_id), ...]`` of the live envs, slot order.
+
+        Non-elastic systems enumerate ``env_ids`` densely; elastic ones
+        skip free/inactive slots, so host loops (ingest, close_windows,
+        forwarders, DB, stats) never touch a dead row."""
+        if not self.elastic:
+            return list(enumerate(self.env_ids))
+        return [(i, e) for i, e in enumerate(self._slot_env)
+                if e is not None and self._active[i]]
 
     # --- virtual clock -------------------------------------------------------
     def now(self) -> float:
@@ -447,7 +524,8 @@ class PerceptaSystem:
         K = len(bounds)
         counts_arr = np.zeros(K, np.int64)
         starts = np.asarray([b[0] for b in bounds], np.float64)
-        for env in self.env_ids:
+        live = self._live_slots()
+        for _, env in live:
             recs = self.broker.queue_for(env).drain()
             scalar_ts = []        # one vectorized pass per drain, not per item
             for r in recs:
@@ -466,7 +544,9 @@ class PerceptaSystem:
         values = np.zeros((K, E, S, M), np.float32)
         ts = np.zeros((K, E, S, M), np.float32)
         valid = np.zeros((K, E, S, M), bool)
-        for i, env in enumerate(self.env_ids):
+        # inactive/free slots keep their all-invalid zero rows: on device
+        # their state updates are natural no-ops and outputs are masked
+        for i, env in live:
             v, t, m = self.accumulators[env].close_windows(bounds,
                                                            rebase=True)
             values[:, i], ts[:, i], valid[:, i] = v, t, m
@@ -490,7 +570,8 @@ class PerceptaSystem:
         # own start by close_windows, so every scan step sees start = 0
         starts = jnp.zeros((k, self.cfg.n_envs), jnp.float32)
         self.state, feats, frames = self.pipeline.run_many(
-            self.state, raw, starts)
+            self.state, raw, starts,
+            active=jnp.asarray(self._active) if self.elastic else None)
         return feats, frames, t_dispatch
 
     def _consume_scan(self, bounds, counts, feats, frames,
@@ -507,11 +588,26 @@ class PerceptaSystem:
         are bit-identical (asserted in tests/test_predictor_batch.py).
         """
         k = len(bounds)
+        # elastic: host sinks and stats see only the live rows (compacted,
+        # slot order == attach order of the current membership); the
+        # predictor gets the dense masked stack plus the mask itself
+        if self.elastic:
+            live = self._live_slots()
+            rows: Optional[np.ndarray] = np.asarray([i for i, _ in live],
+                                                    np.int64)
+            ids = [e for _, e in live]
+        else:
+            rows, ids = None, self.env_ids
         if self.batched_consume:
             # feed the stacked DEVICE features straight into the predictor
             # scan — one dispatch, one host transfer per output leaf
             actions_b, rewards_b, _ = self.predictor.on_windows(
-                feats.features, [b[1] for b in bounds], raw=feats.raw)
+                feats.features, [b[1] for b in bounds], raw=feats.raw,
+                active=self._active if self.elastic else None,
+                prev_ok=self._prev_ok if self.elastic else None)
+            if self.elastic:
+                # host mirror of the device-side first-window chain rule
+                self._prev_ok = self._prev_ok | self._active
             batch_latency = time.time() - t_dispatch
         else:
             jax.block_until_ready(feats.features)
@@ -535,11 +631,25 @@ class PerceptaSystem:
                 # reference path: the per-window dispatch stays inside the
                 # timed region so latency_s keeps counting Predictor time
                 actions, rewards, _ = self.predictor.on_tick(
-                    feat_np[j], t_end, raw=raw_np[j])
+                    feat_np[j], t_end, raw=raw_np[j],
+                    active=self._active if self.elastic else None,
+                    prev_ok=self._prev_ok if self.elastic else None)
+                if self.elastic:
+                    self._prev_ok = self._prev_ok | self._active
+            if rows is not None:
+                # compact to the live rows: Forwarders/DB/stats must never
+                # see (or average over) a dead slot's masked zeros
+                actions, rewards = actions[rows], rewards[rows]
+                feat_j = feat_np[j][rows]
+                obs_j, fill_j, anom_j = (obs_np[j][rows], fill_np[j][rows],
+                                         anom_np[j][rows])
+            else:
+                feat_j = feat_np[j]
+                obs_j, fill_j, anom_j = obs_np[j], fill_np[j], anom_np[j]
             if self.forwarders is not None:
                 self.forwarders.dispatch_window(t_end, actions)
             if self.db is not None:
-                self.db.append_many(self.env_ids, t_end, feat_np[j], actions,
+                self.db.append_many(ids, t_end, feat_j, actions,
                                     rewards,
                                     extra={"policy_version":
                                            int(self.predictor.policy_version)})
@@ -553,10 +663,11 @@ class PerceptaSystem:
                 "window": self.window_index - 1,
                 "records": counts[j],
                 "latency_s": latency,
-                "mean_reward": float(np.mean(rewards)),
-                "observed_frac": float(obs_np[j].mean()),
-                "filled_frac": float(fill_np[j].mean()),
-                "anomalous": int(anom_np[j].sum()),
+                "mean_reward": float(np.mean(rewards)) if rewards.size
+                               else 0.0,
+                "observed_frac": float(obs_j.mean()) if obs_j.size else 0.0,
+                "filled_frac": float(fill_j.mean()) if fill_j.size else 0.0,
+                "anomalous": int(anom_j.sum()),
             })
         return out
 
@@ -582,6 +693,10 @@ class PerceptaSystem:
         starts = jnp.zeros((k, self.cfg.n_envs), jnp.float32)
         self.state, self._dstate, outs = self.pipeline.run_many_decide(
             self.state, self._dstate, raw, starts)
+        if self.elastic:
+            # host mirror of the device-side post-scan update
+            # (prev_ok = prev_ok | active, see run_many_decide)
+            self._prev_ok = self._prev_ok | self._active
         if self.trainer is not None:
             self.trainer.dispatch(self._dstate)
         return outs, t_dispatch, ver
@@ -606,15 +721,31 @@ class PerceptaSystem:
         feat_np = np.asarray(outs.features) if self.db is not None else None
         self.predictor.absorb_fused([b[1] for b in bounds],
                                     np.asarray(outs.violated))
-        denom = float(self.cfg.n_envs * self.cfg.n_streams * self.cfg.n_ticks)
+        # elastic: stats normalize by the LIVE row count (frame counts from
+        # inactive rows are masked zeros on device, so whole-array sums are
+        # already live-only); sinks get the compacted live rows
+        if self.elastic:
+            live = self._live_slots()
+            rows: Optional[np.ndarray] = np.asarray([i for i, _ in live],
+                                                    np.int64)
+            ids = [e for _, e in live]
+            n_rows = max(len(live), 1)
+        else:
+            rows, ids, n_rows = None, self.env_ids, self.cfg.n_envs
+        denom = float(n_rows * self.cfg.n_streams * self.cfg.n_ticks)
         out = []
         for j, (t_start, t_end) in enumerate(bounds):
             t_host0 = time.time()
             actions, rewards = actions_b[j], rewards_b[j]
+            feat_j = feat_np[j] if feat_np is not None else None
+            if rows is not None:
+                actions, rewards = actions[rows], rewards[rows]
+                if feat_j is not None:
+                    feat_j = feat_j[rows]
             if self.forwarders is not None:
                 self.forwarders.dispatch_window(t_end, actions)
             if self.db is not None:
-                self.db.append_many(self.env_ids, t_end, feat_np[j], actions,
+                self.db.append_many(ids, t_end, feat_j, actions,
                                     rewards,
                                     extra={"policy_version": version})
             self.window_index += 1
@@ -625,9 +756,10 @@ class PerceptaSystem:
                 "window": self.window_index - 1,
                 "records": counts[j],
                 "latency_s": latency,
-                "mean_reward": float(np.mean(rewards)),
+                "mean_reward": float(np.mean(rewards)) if rewards.size
+                               else 0.0,
                 # exact integer counts / float64 size == np.mean over the
-                # (E, S, T) bool frame, bit for bit
+                # live rows of the (E, S, T) bool frame, bit for bit
                 "observed_frac": float(int(obs_c[j].sum()) / denom),
                 "filled_frac": float(int(fill_c[j].sum()) / denom),
                 "anomalous": int(anom_c[j].sum()),
@@ -655,6 +787,175 @@ class PerceptaSystem:
         else:
             while self.now() < t_end:
                 time.sleep(0.001)
+
+    # --- elastic membership (attach / detach / regrow) -------------------------
+    def _assert_membership_boundary(self):
+        assert self.elastic, "attach/detach/resize require elastic=True"
+        if self._prefetcher is not None:
+            assert self._prefetcher.in_flight() == 0, \
+                "membership changes only at batch boundaries: a window " \
+                "batch plan is still in flight (finish run_windows first)"
+
+    def _refresh_env_ids(self):
+        self.env_ids = [e for _, e in self._live_slots()]
+
+    def _export_env_ids(self) -> List[str]:
+        """Slot-table env ids at the FULL pool width (replay export keys
+        rows by slot; free slots get a placeholder that never matches a
+        valid row)."""
+        if not self.elastic:
+            return self.env_ids
+        return [e if e is not None else f"__slot{i}__"
+                for i, e in enumerate(self._slot_env)]
+
+    def attach_env(self, env_id: str) -> int:
+        """Join a new env into a free slot between window batches.
+
+        No retrace: only the ``active`` mask value changes. The slot's
+        pipeline-state rows are reset from a fresh init template (the init
+        sentinels — ``prev_ts``, norm min/max — are NOT zeros), its decide
+        rows are scrubbed, and its receiver subscriptions start a fresh
+        poll horizon at attach time. Grows the pool first when it is full.
+        Returns the slot row."""
+        self._assert_membership_boundary()
+        assert env_id not in self.accumulators, \
+            f"env {env_id!r} is already attached"
+        if not self._free_slots:
+            self.resize()
+        slot = self._free_slots.pop(0)
+        self._slot_env[slot] = env_id
+        self._active[slot] = True
+        self._prev_ok[slot] = False
+        self._register_env(env_id)
+        from repro.distribution import elastic as elastic_lib
+        self.state = elastic_lib.reset_env_rows(
+            self.state, self.pipeline.init_state(), [slot])
+        if self.fused_decide:
+            self._dstate = self._reset_dstate_rows(self._dstate, slot)
+        else:
+            self.predictor.clear_env_rows([slot])
+        self._refresh_env_ids()
+        self._membership_epoch += 1
+        return slot
+
+    def detach_env(self, env_id: str) -> int:
+        """Remove a live env, freeing its slot for reuse.
+
+        Host plumbing is torn down (receiver subscriptions, queue,
+        accumulator — pending records are discarded) and the slot's decide
+        rows / replay validity are scrubbed so a later tenant never
+        observes the departed env's data. Returns the freed slot row."""
+        self._assert_membership_boundary()
+        assert env_id in self.accumulators, f"env {env_id!r} is not attached"
+        slot = self._slot_env.index(env_id)
+        for r in self.receivers:
+            r.unsubscribe(env_id)
+        self.broker.remove(env_id)
+        self.accumulators.pop(env_id).reset()
+        self._slot_env[slot] = None
+        self._active[slot] = False
+        self._prev_ok[slot] = False
+        bisect.insort(self._free_slots, slot)
+        if self.fused_decide:
+            self._dstate = self._reset_dstate_rows(self._dstate, slot)
+        else:
+            self.predictor.clear_env_rows([slot])
+        self._refresh_env_ids()
+        self._membership_epoch += 1
+        return slot
+
+    def _reset_dstate_rows(self, d, slot: int):
+        """Scrub one slot's rows of the fused decide carry and refresh the
+        mask leaves from the host mirrors (out-of-place ``.at`` updates
+        between dispatches — donation aliasing is never violated)."""
+        d = d._replace(
+            prev_obs=d.prev_obs.at[slot].set(0.0),
+            prev_actions=d.prev_actions.at[slot].set(0.0),
+            replay=d.replay._replace(
+                valid=d.replay.valid.at[slot].set(False)),
+            active=jnp.asarray(self._active),
+            prev_ok=jnp.asarray(self._prev_ok))
+        model = self.predictor.model
+        if d.carry is not None and model.init_carry is not None:
+            tmpl = model.init_carry(self.cfg.n_envs)
+            d = d._replace(carry=jax.tree.map(
+                lambda x, t: x.at[slot].set(jnp.asarray(t)[slot]),
+                d.carry, tmpl))
+        return d
+
+    def resize(self, new_slots: Optional[int] = None) -> int:
+        """Grow the slot pool (the ONE allowed retrace point).
+
+        Protocol (module docstring / distribution.elastic): flush any
+        pending train step into the carry, pad every env-leading pytree
+        against a fresh init template at the new width, rebuild the engine
+        at the new shapes, and re-place state + decide carry on the
+        re-chosen env mesh in the sharded modes. Surviving rows are
+        byte-for-byte preserved, so live envs resume bit-exactly."""
+        self._assert_membership_boundary()
+        from repro.distribution import elastic as elastic_lib
+        from repro.distribution import sharding as shard_lib
+        old = self.env_slots
+        pipe_mode = _PIPELINE_MODE.get(self.mode, self.mode)
+        sharded = pipe_mode in _SHARDED_PIPE_MODES
+        ndev = len(jax.devices()) if sharded else 1
+        if new_slots is None:
+            new_slots = elastic_lib.next_pool_size(old + 1, old, ndev)
+        assert new_slots > old, (new_slots, old)
+        if self.trainer is not None:
+            # a train step dispatched against the old-width carry must land
+            # before the carry is grown under it
+            self._dstate = self.trainer.flush_pending(self._dstate)
+        pad = new_slots - old
+        self._active = np.concatenate([self._active, np.zeros(pad, bool)])
+        self._prev_ok = np.concatenate([self._prev_ok, np.zeros(pad, bool)])
+        self._slot_env.extend([None] * pad)
+        self._free_slots.extend(range(old, new_slots))
+        if self.fused_decide:
+            # the predictor's replay/model-carry mirrors are stale donated
+            # snapshots in fused modes (module docstring): refresh them from
+            # the live carry so grow_envs concatenates real buffers and the
+            # decide_state() template below is materialized at new width
+            self.predictor.replay = self._dstate.replay
+            self.predictor._prev["obs"] = np.asarray(self._dstate.prev_obs)
+            self.predictor._prev["actions"] = \
+                np.asarray(self._dstate.prev_actions)
+            if self._dstate.carry is not None:
+                self.predictor._model_carry = self._dstate.carry
+        self.predictor.grow_envs(new_slots)
+        new_cfg = dataclasses.replace(self.cfg, n_envs=new_slots)
+        mesh = shard_lib.env_mesh(new_slots) if sharded else None
+        if self.fused_decide:
+            # grow against the predictor's fresh-template carry: the mask
+            # leaves are None there, so strip ours first (same pytree
+            # structure), then re-set them at the new width
+            d = self._dstate._replace(active=None, prev_ok=None)
+            d = elastic_lib.grow_env_tree(d, self.predictor.decide_state(),
+                                          old)
+            self._dstate = d._replace(active=jnp.asarray(self._active),
+                                      prev_ok=jnp.asarray(self._prev_ok))
+        self.cfg = new_cfg
+        self.pipeline = PerceptaPipeline(
+            new_cfg, mode=pipe_mode,
+            donate=self.mode in ("scan", "scan_sharded", "scan_fused_decide",
+                                 "scan_fused_decide_sharded"),
+            mesh=mesh, decide=self._decide,
+            decide_state=self._dstate if self.fused_decide else None,
+            elastic=True)
+        self.state = elastic_lib.grow_env_tree(
+            self.state, self.pipeline.init_state(), old)
+        self.env_slots = new_slots
+        if mesh is not None:
+            self.state = shard_lib.place_env_tree(self.state, 0, mesh)
+            if self.fused_decide:
+                # decide_specs, not the rank rule: policy weights must stay
+                # replicated even when their leading dim divides the pool
+                specs = shard_lib.decide_specs(self._dstate, 0,
+                                               mesh.axis_names[0])
+                self._dstate = shard_lib.place_env_tree(
+                    self._dstate, 0, mesh, specs=specs)
+        self._membership_epoch += 1
+        return new_slots
 
     # --- donation-safe state access -------------------------------------------
     def snapshot_state(self):
@@ -745,7 +1046,7 @@ class PerceptaSystem:
         Predictor with prior ``on_tick``/``on_windows`` history) keep
         their host-mirror times — their windows were not this system's."""
         if not self.fused_decide:
-            return self.predictor.export_replay(self.env_ids, salt)
+            return self.predictor.export_replay(self._export_env_ids(), salt)
         from repro.core import replay as rp
         buf = self.snapshot_decide().replay
         # every env row shares the batch-wide tick index, so row 0 carries
@@ -756,7 +1057,7 @@ class PerceptaSystem:
         recon = (self._t0 + idx * self.window_s) + self.window_s
         slot_times = np.where(idx_i >= self._tick_base, recon,
                               self.predictor._replay_times)
-        return rp.export_for_training(buf, self.env_ids, salt,
+        return rp.export_for_training(buf, self._export_env_ids(), salt,
                                       slot_times=slot_times)
 
     def run_windows(self, n: int, pump: bool = True) -> List[dict]:
@@ -810,12 +1111,18 @@ class PerceptaSystem:
             plans.append([self.window_bounds(idx + j) for j in range(k)])
             idx, left = idx + k, left - k
         for bounds in plans:
-            self._prefetcher.submit(bounds, pump=pump)
+            self._prefetcher.submit(bounds, pump=pump,
+                                    membership=self._membership_epoch)
 
         out: List[dict] = []
         pending = None
         for _ in plans:
             batch = self._prefetcher.next_batch()
+            assert batch.membership == self._membership_epoch, \
+                "membership changed while a batch plan was in flight " \
+                f"(plan built under epoch {batch.membership}, now " \
+                f"{self._membership_epoch}); attach/detach/resize only " \
+                "between run_windows calls"
             # consume j-1 BEFORE dispatching j: the Predictor's per-window
             # steps are device computations too, and the single device
             # executes its queue in order — dispatching batch j first would

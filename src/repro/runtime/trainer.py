@@ -160,7 +160,9 @@ class OnlineTrainer:
 
         def train_step(params, tstate, replay, rng):
             batch = rp.sample_device(replay, rng, self.batch_size)
-            has_data = batch["valid"][0]
+            # any() not [0]: under an elastic mask individual cells can be
+            # invalid (detached-slot rows) while the ring still has data
+            has_data = jnp.any(batch["valid"])
             joint = {"policy": params, "critic": tstate["critic"]}
             loss, grads = jax.value_and_grad(
                 lambda pc: td_loss(apply_fn, pc["policy"], pc["critic"],

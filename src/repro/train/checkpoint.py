@@ -17,7 +17,7 @@ Fault-tolerance contract:
 
 Restore re-places leaves with the CURRENT process's shardings — restoring a
 256-chip checkpoint onto a different mesh (elastic resize) works as long as
-the global shapes match (distribution/elastic.py picks the new mesh).
+the global shapes match; the caller picks the new mesh for the survivors.
 """
 from __future__ import annotations
 

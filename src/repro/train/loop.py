@@ -21,10 +21,67 @@ from repro import compat
 from repro.configs.base import (ModelConfig, ShapeConfig, ShardingConfig,
                                 TrainConfig)
 from repro.data.pipeline import Prefetcher, StreamCursor, SyntheticLMStream
-from repro.distribution.elastic import PreemptionGuard, StragglerPolicy
 from repro.launch.steps import build_train_step
 from repro.train import optimizer as opt_lib
 from repro.train.checkpoint import Checkpointer
+
+
+@dataclass
+class StragglerPolicy:
+    """EWMA step-time deadline detector.
+
+    On pods a straggling host stalls the synchronous collective; the
+    framework-level mitigation is (a) detect (step time > k x EWMA),
+    (b) after M consecutive detections treat the host as failed:
+    checkpoint and restart.  Host-side, unit-tested with a simulated
+    slow worker.
+    """
+    k: float = 3.0                 # deadline = k * ewma
+    alpha: float = 0.2
+    consecutive_to_fail: int = 3
+    min_steps: int = 5
+    ewma: float = 0.0
+    steps: int = 0
+    strikes: int = 0
+    slow_events: int = 0
+
+    def observe(self, step_time_s: float) -> str:
+        """Returns 'ok' | 'slow' | 'fail' (fail => trigger restart)."""
+        self.steps += 1
+        if self.steps <= self.min_steps:
+            self.ewma = step_time_s if self.ewma == 0.0 else \
+                (1 - self.alpha) * self.ewma + self.alpha * step_time_s
+            return "ok"
+        verdict = "ok"
+        if step_time_s > self.k * max(self.ewma, 1e-9):
+            self.strikes += 1
+            self.slow_events += 1
+            verdict = "slow"
+            if self.strikes >= self.consecutive_to_fail:
+                verdict = "fail"
+        else:
+            self.strikes = 0
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time_s
+        return verdict
+
+
+@dataclass
+class PreemptionGuard:
+    """SIGTERM-aware: cloud preemption sends SIGTERM before the kill."""
+    triggered: bool = False
+
+    def install(self):
+        import signal
+
+        def handler(signum, frame):
+            self.triggered = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not main thread (tests)
+        return self
 
 
 @dataclass

@@ -173,9 +173,10 @@ def test_reward_shape_rule():
 
 def test_all_builtins_accepted():
     """linear_policy, every RewardTerm kind (through RewardSpec.compute),
-    energy_reward_spec, validate_actions, the builtin DecideFns pair, and
-    the four registry policies (certified against the full catalog)."""
-    assert check_builtins() == 16
+    energy_reward_spec, validate_actions, the builtin DecideFns pair (plus
+    its elastic masked variant under the env-mask-gate family), and the
+    four registry policies (certified against the full catalog)."""
+    assert check_builtins() == 17
 
 
 def test_real_predictor_decide_fns_accepted():
@@ -196,6 +197,87 @@ def test_decide_fns_with_bad_custom_reward_rejected():
     with pytest.raises(ContractViolation) as ei:
         check_decide_fns(pred.make_decide_fn(), pred.decide_state(), E, F)
     assert "env-reduce" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr checker: the env-mask-gate family (elastic slot pools)
+# ---------------------------------------------------------------------------
+
+def test_mask_compaction_cumsum_rejected():
+    """The bad fixture: cumsum of the active mask along the env axis is
+    the row-compaction-offset pattern — row placement then depends on
+    membership, which breaks the no-retrace bit-exactness contract."""
+    def bad(feats, active):
+        off = jnp.cumsum(active.astype(jnp.int32))
+        return jnp.take(feats, off - 1, axis=0)
+
+    v, _ = check_fn(bad, (_sds((E, F)), _sds((E,), jnp.bool_)),
+                    ("env:0", "env:0,mask"),
+                    rules=Rules(env=False, mask=True))
+    rules_hit = {x.rule for x in v}
+    assert "env-mask-gate" in rules_hit
+    prims = {x.primitive for x in v if x.rule == "env-mask-gate"}
+    assert "cumsum" in prims          # the offset scan itself
+    assert "gather" in prims          # and the mask-derived indexing
+
+
+def test_mask_sort_and_dynamic_slice_rejected():
+    def bad_sort(feats, active):
+        order = jnp.argsort(active.astype(jnp.int32))
+        return feats, order
+
+    v, _ = check_fn(bad_sort, (_sds((E, F)), _sds((E,), jnp.bool_)),
+                    ("env:0", "env:0,mask"),
+                    rules=Rules(env=False, mask=True))
+    assert "env-mask-gate" in {x.rule for x in v}
+
+    def bad_slice(feats, active):
+        start = jnp.sum(active.astype(jnp.int32))
+        return jax.lax.dynamic_slice(feats, (start, 0), (1, F))
+
+    v, _ = check_fn(bad_slice, (_sds((E, F)), _sds((E,), jnp.bool_)),
+                    ("env:0", "env:0,mask"),
+                    rules=Rules(env=False, mask=True))
+    assert "env-mask-gate" in {x.rule for x in v}
+
+
+def test_mask_select_gating_accepted():
+    """The sanctioned combinators: where/select and multiply keep row i's
+    output a function of row i's mask bit alone — and the select predicate
+    does NOT leak the mask tag into the selected values."""
+    def good(feats, active):
+        gated = jnp.where(active[:, None], feats, 0.0)
+        return gated * active[:, None].astype(jnp.float32)
+
+    v, _ = check_fn(good, (_sds((E, F)), _sds((E,), jnp.bool_)),
+                    ("env:0", "env:0,mask"),
+                    rules=Rules(env=False, mask=True))
+    assert v == []
+
+
+def test_elastic_decide_fns_accepted_and_gated():
+    """The SHIPPED masked decide path passes the gate; a step that
+    compacts rows with the carried mask is rejected through the same
+    entry point (check_decide_fns auto-enables the family when the state
+    carries an ``active`` leaf)."""
+    pred = Predictor(linear_policy(F, A),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.full(A, -1.0), np.full(A, 1.0)),
+                     E, F, replay_capacity=8)
+    el_state = pred.decide_state()._replace(
+        active=jnp.arange(E) < 2, prev_ok=jnp.zeros((E,), bool))
+    decide = pred.make_decide_fn()
+    check_decide_fns(decide, el_state, E, F)   # shipped path: clean
+
+    def compacting_step(carry, feats):
+        off = jnp.cumsum(carry.active.astype(jnp.int32))
+        packed = jnp.take(feats.features, off - 1, axis=0)
+        return decide.step(carry, feats._replace(features=packed))
+
+    bad = decide._replace(step=compacting_step)
+    with pytest.raises(ContractViolation) as ei:
+        check_decide_fns(bad, el_state, E, F)
+    assert "env-mask-gate" in str(ei.value)
 
 
 # ---------------------------------------------------------------------------
@@ -512,7 +594,7 @@ def test_rule_catalogs_cover_engines():
     assert set(JAXPR_RULES) == {
         "env-contraction", "env-gemm-rows", "env-reduce", "collective",
         "time-cast", "callback-in-scan", "reward-shape", "carry-env-mix",
-        "pallas-env-block", "param-replication"}
+        "pallas-env-block", "param-replication", "env-mask-gate"}
     assert set(LINT_RULES) == {
         "jax-version-branch", "jax-experimental-outside-compat",
         "mesh-outside-compat", "donate-outside-compat", "state-leaf-alias",

@@ -67,26 +67,34 @@ def test_checkpointer_atomic_and_gc(tmp_path):
 
 
 def test_straggler_policy_detects_slow_steps():
-    from repro.distribution.elastic import StragglerPolicy
+    from repro.train.loop import StragglerPolicy
     p = StragglerPolicy(k=3.0, consecutive_to_fail=3, min_steps=3)
     for _ in range(10):
         assert p.observe(0.1) == "ok"
     assert p.observe(1.0) == "slow"      # simulated slow worker
     assert p.observe(1.0) == "slow"
-    assert p.observe(1.0) == "fail"      # third strike -> elastic restart
+    assert p.observe(1.0) == "fail"      # third strike -> restart
     assert p.slow_events == 3
 
 
-def test_elastic_mesh_shapes():
-    from repro.distribution.elastic import best_mesh_shape, rescale_microbatches
-    assert best_mesh_shape(512, 16) == (2, 16, 16)
-    assert best_mesh_shape(256, 16) == (16, 16)
-    # losing one host of 8 devices: 248 devices -> data axis shrinks
-    assert best_mesh_shape(248, 16) == (15, 16)
+def test_elastic_pool_growth_helpers():
+    from repro.distribution.elastic import grow_env_tree, next_pool_size
+    assert next_pool_size(3, 4) == 4          # fits, no growth
+    assert next_pool_size(5, 4) == 8          # doubles
+    assert next_pool_size(17, 4, n_devices=8) == 32
+    assert next_pool_size(9, 8, n_devices=3) == 18  # device-aligned round-up
+    tree = {"rows": jnp.arange(8, dtype=jnp.float32).reshape(4, 2),
+            "scalar": jnp.float32(7.0)}
+    tmpl = {"rows": jnp.full((8, 2), -1.0, jnp.float32),
+            "scalar": jnp.float32(0.0)}
+    grown = grow_env_tree(tree, tmpl, old_e=4)
+    assert grown["rows"].shape == (8, 2)
+    assert_allclose(np.asarray(grown["rows"][:4]),
+                    np.arange(8).reshape(4, 2))       # survivors bit-exact
+    assert_allclose(np.asarray(grown["rows"][4:]), -1.0)  # fresh init rows
+    assert float(grown["scalar"]) == 7.0  # equal shapes pass through
     with pytest.raises(ValueError):
-        best_mesh_shape(8, 16)
-    # keep global batch: fewer data rows -> more microbatches
-    assert rescale_microbatches(256, old_data=16, new_data=8, old_micro=1) == 2
+        grow_env_tree({"x": jnp.zeros((4, 2))}, {"x": jnp.zeros((8, 3))}, 4)
 
 
 def test_grad_compression_reduces_bytes_and_converges(rng):
