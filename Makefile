@@ -2,8 +2,8 @@
 # ROADMAP.md; `make bench-smoke` is a ~2-minute benchmark pass covering the
 # pipeline execution axes (modular / fused / scan / scan_sharded /
 # scan_async / scan_fused_decide) plus the scan-engine, async-overlap,
-# batched-Predictor, fused-decide, autotuner and columnar-ingest acceptance
-# cells. The sharded modes run on a forced 8-host-device CPU mesh
+# batched-Predictor, fused-decide, autotuner, columnar-ingest and
+# ingest-fast-path acceptance cells. The sharded modes run on a forced 8-host-device CPU mesh
 # (--host-devices) so the shard_map path is exercised in CI, not just on
 # real multi-chip hardware; the async overlap cell runs in its own
 # subprocess (accelerator-emulating XLA flags, see benchmarks/run.py).
@@ -13,7 +13,7 @@
 PY ?= python
 
 .PHONY: test lint train-smoke bench-smoke bench-pr2 bench-pr3 bench-pr4 \
-	bench-pr5 bench-pr6 bench-pr7 bench-pr8 bench-pr9 ci
+	bench-pr5 bench-pr6 bench-pr7 bench-pr8 bench-pr9 bench-pr10 ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -99,4 +99,17 @@ bench-pr9:
 		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|elastic|autotune|columnar|contract_check|certify" \
 		--json BENCH_pr9.json
 
+# PR 10: the host-ingest fast-path phase-decomposition cell (legacy vs
+# arena-staged sorted-merge assembly, bit-identity asserted in-cell) next
+# to the full trajectory set — the async overlap cell re-measures with the
+# fast path on, so its speedup reflects the smaller A term
+bench-pr10:
+	PYTHONPATH=src $(PY) -m benchmarks.run --host-devices 8 \
+		--only "scan_engine|scan_sharded|scan_async|predictor_batch|fused_decide|online_train|elastic|autotune|columnar|contract_check|certify|ingest_fastpath" \
+		--json BENCH_pr10.json
+
+# CI boxes should `pip install -r requirements-dev.txt` first so the
+# property tests (elastic schedules, sorted-merge vs lexsort parity) run
+# under real hypothesis; without it they still RUN — repro.testing falls
+# back to a deterministic draw shim — they just don't shrink.
 ci: lint test train-smoke bench-smoke

@@ -1,11 +1,16 @@
 """Diff two BENCH_*.json artifacts and flag throughput regressions.
 
-Walks both artifacts for throughput-like numeric leaves (``windows_per_s``
-/ ``records_per_s`` maps and any key named ``*windows_per_s*`` /
-``*records_per_s*`` / ``speedup`` nested in the cell blocks), joins them by
-path, and reports every metric present in both with its ratio. A metric
-whose new value is more than ``--threshold`` (default 10%) below the old
-one is flagged as a REGRESSION.
+Walks both artifacts for comparable numeric leaves — throughput-like ones
+(``windows_per_s`` / ``records_per_s`` maps and any key named
+``*windows_per_s*`` / ``*records_per_s*`` / ``speedup`` nested in the cell
+blocks) AND host-phase latencies (keys ending ``_ms`` or nested under a
+``*phase_ms*`` block, e.g. the overlap cell's assemble/device/consume
+ms/batch) — joins them by path, and reports every metric present in both
+with its ratio. Throughput metrics regress DOWNWARD; latency metrics are
+direction-inverted (marked ``ms↓`` in the report) and regress UPWARD, so
+host-side assembly wins/losses ride the trajectory record exactly like
+device ones. A metric that moves more than ``--threshold`` (default 10%)
+the wrong way is flagged as a REGRESSION.
 
 Exit status is 0 unless ``--strict`` is passed and regressions were found:
 CI (``make bench-smoke``) runs it report-only, because single-run bench
@@ -32,11 +37,19 @@ _METRIC_HINTS = ("windows_per_s", "records_per_s", "speedup",
                  "host_transfer_reduction")
 
 
+def _is_lower_better(path: tuple) -> bool:
+    """Latency-like metrics (host-phase ms/batch): smaller is faster, so
+    the regression direction flips."""
+    return path[-1].endswith("_ms") \
+        or any("phase_ms" in p for p in path[:-1])
+
+
 def _is_metric(path: tuple) -> bool:
     leaf = path[-1]
     return any(h in leaf for h in _METRIC_HINTS) \
         or any(h in p for p in path[:-1] for h in ("windows_per_s",
-                                                   "records_per_s"))
+                                                   "records_per_s")) \
+        or _is_lower_better(path)
 
 
 def flatten_metrics(obj, path=()) -> dict:
@@ -55,18 +68,24 @@ def flatten_metrics(obj, path=()) -> dict:
 
 def compare(old: dict, new: dict, threshold: float = 0.1):
     """Returns (report_rows, regressions): every joined metric with its
-    ratio, and the subset whose new/old ratio is below 1 - threshold."""
+    ratio, and the subset that moved more than ``threshold`` the wrong way
+    (down for throughput, up for ``ms`` latencies)."""
     a, b = flatten_metrics(old), flatten_metrics(new)
     rows, regressions = [], []
     for path in sorted(set(a) & set(b)):
         ov, nv = a[path], b[path]
         ratio = nv / ov if ov else float("inf")
-        flag = ""
-        if ov and ratio < 1.0 - threshold:
-            flag = "REGRESSION"
+        lower_better = _is_lower_better(path)
+        flag = "ms↓ " if lower_better else ""
+        worse = ratio > 1.0 + threshold if lower_better \
+            else ratio < 1.0 - threshold
+        better = ratio < 1.0 - threshold if lower_better \
+            else ratio > 1.0 + threshold
+        if ov and worse:
+            flag += "REGRESSION"
             regressions.append((path, ov, nv, ratio))
-        elif ov and ratio > 1.0 + threshold:
-            flag = "improved"
+        elif ov and better:
+            flag += "improved"
         rows.append((path, ov, nv, ratio, flag))
     only_old = sorted(set(a) - set(b))
     only_new = sorted(set(b) - set(a))

@@ -2,7 +2,9 @@
 logged in a database, enabling future analysis and potential retraining."
 
 JSONL segments with atomic rotation; env identities are stored anonymized
-(salted hash, pseudonyms cached) per the paper's anonymization requirement.
+(salted hash, pseudonyms cached in a bounded LRU — ``anon_cache_size``
+caps host memory under high-cardinality env ids; eviction only costs a
+re-hash on the next append) per the paper's anonymization requirement.
 A cursor (segment, offset) is exposed so the training node can consume
 exactly-once.
 
@@ -22,6 +24,7 @@ import json
 import os
 import threading
 import time
+from collections import OrderedDict
 from pathlib import Path
 from typing import Iterator, Optional
 
@@ -30,7 +33,8 @@ from repro.core.replay import anonymize_env_ids
 
 class LogDB:
     def __init__(self, root: str, salt: str = "percepta",
-                 rotate_bytes: int = 8 * 2**20):
+                 rotate_bytes: int = 8 * 2**20,
+                 anon_cache_size: int = 4096):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.salt = salt
@@ -39,7 +43,13 @@ class LogDB:
         self._seg = self._latest_segment()
         self._fh = None
         self._seg_bytes = 0
-        self._anon_cache: dict = {}
+        assert anon_cache_size >= 1, anon_cache_size
+        self.anon_cache_size = int(anon_cache_size)
+        self._anon_cache: OrderedDict = OrderedDict()
+        # rows are encoded OUTSIDE the write lock (append_many), so the
+        # LRU needs its own guard: a get/evict race on the shared
+        # OrderedDict could move_to_end an already-evicted key
+        self._anon_lock = threading.Lock()
         self.stats = {"rows": 0, "bytes": 0, "segments": 0}
 
     def _latest_segment(self) -> int:
@@ -47,10 +57,19 @@ class LogDB:
         return int(segs[-1].stem.split("-")[1]) if segs else 0
 
     def _anon(self, env_id: str) -> str:
-        p = self._anon_cache.get(env_id)
-        if p is None:
-            p = anonymize_env_ids([env_id], self.salt)[0]
-            self._anon_cache[env_id] = p
+        """Pseudonym lookup through the bounded LRU (hash is pure, so an
+        evicted id simply re-hashes to the same pseudonym later)."""
+        cache = self._anon_cache
+        with self._anon_lock:
+            p = cache.get(env_id)
+            if p is not None:
+                cache.move_to_end(env_id)
+                return p
+        p = anonymize_env_ids([env_id], self.salt)[0]   # hash outside lock
+        with self._anon_lock:
+            cache[env_id] = p
+            if len(cache) > self.anon_cache_size:
+                cache.popitem(last=False)      # evict least recently used
         return p
 
     def _open(self):

@@ -20,7 +20,12 @@ deterministic batch-epoch handoff protocol:
     same window boundaries — so every record lands in the same batch;
   * assembled batches travel back on a depth-1 buffer (the "double" in
     double-buffered: one batch on device, at most one staged ahead), which
-    also bounds host memory when the device falls behind;
+    also bounds host memory when the device falls behind; this depth is
+    what sizes the system's rotating staging-buffer pool (at most three
+    batches are ever alive: assembling, staged, in flight — see
+    ``PerceptaSystem._STAGE_DEPTH``), and ``ingest_workers`` composes
+    cleanly because the pump thread remains the sole pumper/drainer and
+    merely fans the per-env assembly work out to its worker pool;
   * the Manager consumes batches in epoch order and verifies the epoch tag
     on every handoff.
 

@@ -33,9 +33,13 @@ def _n(item: Item) -> int:
 
 
 def _head(batch: RecordBatch, n: int) -> RecordBatch:
-    """First ``n`` rows of a batch (arrival order preserved)."""
+    """First ``n`` rows of a batch (arrival order preserved).
+
+    The sortedness promise carries over: a prefix of a per-stream
+    time-sorted batch is still per-stream time-sorted."""
     return RecordBatch(batch.env_id, batch.streams, batch.stream_ids[:n],
-                       batch.timestamps[:n], batch.values[:n])
+                       batch.timestamps[:n], batch.values[:n],
+                       batch.sorted_ts)
 
 
 class EnvQueue:

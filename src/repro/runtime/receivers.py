@@ -75,9 +75,15 @@ class Receiver(threading.Thread):
     Two delivery shapes per subscription:
       * ``on_payload`` — one encoded wire payload per reading (the
         protocol-faithful path; exercises the codecs end to end).
-      * ``on_batch``   — one ``(env_id, stream, ts_column, value_column)``
-        call per poll (the columnar fast path: a poll's readings cross the
-        receiver boundary as two NumPy columns, no per-reading Python).
+      * ``on_batch``   — one ``(env_id, stream, ts_column, value_column,
+        sorted_ts)`` call per poll (the columnar fast path: a poll's
+        readings cross the receiver boundary as two NumPy columns plus a
+        sortedness flag, no per-reading Python). ``sorted_ts`` is computed
+        here — the receiver is the one place that sees the columns exactly
+        once — and lets the Accumulator's sorted-merge close skip both its
+        verification pass and its sort. Device jitter can reorder adjacent
+        readings (jitter_s > interval_s), so the flag is measured, never
+        assumed.
     When both are given the batch path wins; stats count logical readings
     either way (bytes on the batch path are the 16-byte binary-equivalent
     per reading, so load accounting stays comparable across paths).
@@ -161,7 +167,8 @@ class Receiver(threading.Thread):
                                      len(readings))
                     self.stats["payloads"] += len(readings)
                     self.stats["bytes"] += 16 * len(readings)
-                    cb_batch(env_id, self.device.stream, ts, vs)
+                    srt = bool(np.all(ts[1:] >= ts[:-1]))
+                    cb_batch(env_id, self.device.stream, ts, vs, srt)
             elif cb is None:
                 # a half-installed subscription (e.g. a batch re-subscribe
                 # that lost its route): keep _last_t so nothing is skipped

@@ -39,25 +39,36 @@ class RecordBatch:
     close, same as the per-record path). Row order is arrival order — the
     Accumulator's stable sorts rely on it for tie-breaking parity with the
     Record-list path.
+
+    ``sorted_ts`` is the producer's sortedness promise: ``True`` means each
+    stream's timestamp subsequence is non-decreasing (for a single-stream
+    batch, simply that ``timestamps`` is non-decreasing), which lets the
+    Accumulator's sorted-merge close skip its O(n) verification pass.
+    ``None`` (default) means unknown — consumers verify cheaply on append.
+    It must only be set ``True`` when actually true; ``False``/``None`` are
+    always safe. Receivers compute it per poll; queue truncation preserves
+    it (a prefix of a sorted column is sorted).
     """
     env_id: str
     streams: tuple                # stream-name table, indexed by stream_ids
     stream_ids: np.ndarray        # (N,) int32
     timestamps: np.ndarray        # (N,) float64
     values: np.ndarray            # (N,) float64
+    sorted_ts: "bool | None" = None
 
     def __len__(self) -> int:
         return int(self.values.shape[0])
 
     @staticmethod
-    def from_columns(env_id: str, stream: str, timestamps,
-                     values) -> "RecordBatch":
+    def from_columns(env_id: str, stream: str, timestamps, values,
+                     sorted_ts: "bool | None" = None) -> "RecordBatch":
         """Single-stream batch (one Receiver poll of one device)."""
         ts = np.asarray(timestamps, np.float64).ravel()
         vs = np.asarray(values, np.float64).ravel()
         assert ts.shape == vs.shape
         return RecordBatch(env_id, (stream,),
-                           np.zeros(ts.shape[0], np.int32), ts, vs)
+                           np.zeros(ts.shape[0], np.int32), ts, vs,
+                           sorted_ts)
 
     @staticmethod
     def from_records(records: Sequence[Record]) -> "RecordBatch":

@@ -121,6 +121,19 @@ paths produce identical windows for lossless codecs (mqtt json, amqp
 doubles); the http CSV codec rounds values to 6 decimals on the wire, so
 there the columnar path (which skips the encode/decode) is the
 higher-fidelity one.
+
+The host ingest fast path (``ingest_fastpath=True``, default) makes batch
+assembly allocation- and sort-free in the steady state: Accumulators
+append into preallocated per-stream arenas, receivers attach a measured
+per-poll sortedness flag that lets ``close_windows`` bucket by
+``searchsorted`` alone (a stable per-stream argsort handles unsorted
+arrivals — identical ordering to the legacy global lexsort), and
+``assemble_windows`` closes every env directly into a rotating pool of
+preallocated (K, E, S, M) staging buffers (host numpy; donation rules
+untouched). ``ingest_workers=N`` additionally partitions the per-env
+assembly across N persistent threads with deterministic slot-striped
+ownership. Every combination is bit-identical to the legacy path —
+windows, stats, tie order, drop accounting (tests/test_ingest_fastpath).
 """
 from __future__ import annotations
 
@@ -186,7 +199,9 @@ class PerceptaSystem:
                  train_cfg: Optional[dict] = None,
                  policy=None,
                  env_slots: Optional[int] = None,
-                 elastic: bool = False):
+                 elastic: bool = False,
+                 ingest_workers: int = 1,
+                 ingest_fastpath: bool = True):
         # manual_time: the virtual clock only advances when run_windows
         # closes a window — deterministic under arbitrary jit-compile stalls
         # (tests); wall-clock speedup mode is the realistic deployment shape.
@@ -329,6 +344,30 @@ class PerceptaSystem:
         self.scan_k = max(1, int(scan_k))
         assert ingest in ("columnar", "records"), ingest
         self.ingest = ingest
+        # ingest_fastpath: per-stream arena staging + sorted-merge window
+        # bucketing in every Accumulator (bit-identical to the legacy
+        # chunk-list + global-lexsort path, which False keeps alive for
+        # before/after benchmarking and parity tests)
+        self.ingest_fastpath = bool(ingest_fastpath)
+        # ingest_workers=N: assemble_windows partitions the live envs over
+        # N persistent workers with deterministic slot-striped ownership;
+        # per-env work (drain -> ingest -> close into disjoint staging
+        # rows) is env-isolated, and the per-window record counts are
+        # summed with integer adds, so results are bit-identical to the
+        # serial loop. The pump thread stays the only pumper/drainer in
+        # async modes — workers only parallelize the per-env assembly the
+        # pump (or Manager) already owns, so the prefetcher's epoch
+        # protocol is untouched.
+        self.ingest_workers = max(1, int(ingest_workers))
+        self._ingest_pool = None
+        if self.ingest_workers > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            self._ingest_pool = ThreadPoolExecutor(
+                max_workers=self.ingest_workers,
+                thread_name_prefix="percepta-ingest")
+        # (K, E, S, M)-keyed pool of reusable host staging buffers for
+        # assemble_windows (see _staging_buffers)
+        self._stage_pool: Dict[tuple, dict] = {}
         # scan-mode consume: one Predictor.on_windows dispatch per K-window
         # batch (default); False keeps the per-window on_tick loop — the
         # tested reference path the batched one must match bit for bit
@@ -401,8 +440,8 @@ class PerceptaSystem:
                 if rec is not None:
                     self.broker.publish(rec)
 
-            def on_batch(env_id, stream, ts, vals, _tr=tr):
-                batch = _tr.translate_batch(env_id, stream, ts, vals)
+            def on_batch(env_id, stream, ts, vals, srt=None, _tr=tr):
+                batch = _tr.translate_batch(env_id, stream, ts, vals, srt)
                 if batch is not None:
                     self.broker.publish(batch)
 
@@ -411,7 +450,8 @@ class PerceptaSystem:
             else:
                 r.subscribe(env_id, on_payload)
         self.accumulators[env_id] = Accumulator(env_id, self._stream_names,
-                                                self.cfg.max_samples)
+                                                self.cfg.max_samples,
+                                                fastpath=self.ingest_fastpath)
 
     def _live_slots(self) -> List[tuple]:
         """``[(slot_row, env_id), ...]`` of the live envs, slot order.
@@ -447,6 +487,11 @@ class PerceptaSystem:
             self._prefetcher.stop()
         if self.trainer is not None:
             self.trainer.close()
+        if self._ingest_pool is not None:
+            self._ingest_pool.shutdown(wait=True)
+            # a post-stop run_windows call degrades to the serial loop
+            # instead of submitting to a dead executor
+            self._ingest_pool = None
 
     # --- synchronous operation (benchmarks / tests) ---------------------------
     def pump_receivers(self):
@@ -508,8 +553,67 @@ class PerceptaSystem:
         }
 
     # --- scan-fused operation --------------------------------------------------
+    # Staging buffers alive at once in the deepest pipeline (async modes):
+    # one being assembled by the pump, one staged in the depth-1 ready
+    # buffer, one consumed/in flight on device. ``jnp.asarray`` may
+    # zero-copy an aligned host buffer on CPU, so a buffer is only reused
+    # once its batch is provably consumed — with depth 3 the epoch reusing
+    # buffer b%3 starts only after batch b-3's results were consumed.
+    _STAGE_DEPTH = 3
+
+    def _staging_buffers(self, K: int, E: int):
+        """Rotating preallocated (K, E, S, M) staging triple, zeroed.
+
+        One allocation per (shape, rotation slot) for the lifetime of the
+        system: steady-state assembly reuses the arrays (a memset instead
+        of three fresh allocations per batch). Cleared on :meth:`resize`
+        (the env width changes)."""
+        S, M = self.cfg.n_streams, self.cfg.max_samples
+        pool = self._stage_pool.setdefault((K, E, S, M),
+                                           {"bufs": [], "next": 0})
+        i = pool["next"]
+        pool["next"] = (i + 1) % self._STAGE_DEPTH
+        if i >= len(pool["bufs"]):
+            shape = (K, E, S, M)
+            pool["bufs"].append((np.zeros(shape, np.float32),
+                                 np.zeros(shape, np.float32),
+                                 np.zeros(shape, bool)))
+        else:
+            for a in pool["bufs"][i]:
+                a.fill(0)
+        return pool["bufs"][i]
+
+    def _assemble_env(self, slot: int, env: str, bounds, starts,
+                      values, ts, valid) -> np.ndarray:
+        """Drain, count, ingest and close ONE env into its staging rows.
+
+        The unit of work ``ingest_workers`` partitions: everything touched
+        here — the env's queue, its Accumulator, column ``slot`` of the
+        staging buffers — belongs to exactly one env, so concurrent calls
+        for different envs share nothing."""
+        K = len(bounds)
+        recs = self.broker.queue_for(env).drain()
+        c = np.zeros(K, np.int64)
+        scalar_ts = []            # one vectorized pass per drain, not per item
+        for r in recs:
+            if isinstance(r, RecordBatch):
+                j = np.searchsorted(starts, r.timestamps, side="right") - 1
+                c += np.bincount(np.clip(j, 0, K - 1), minlength=K)
+            else:
+                scalar_ts.append(r.timestamp)
+        if scalar_ts:
+            j = np.searchsorted(starts, np.asarray(scalar_ts),
+                                side="right") - 1
+            c += np.bincount(np.clip(j, 0, K - 1), minlength=K)
+        acc = self.accumulators[env]
+        acc.ingest(recs)
+        acc.close_windows(bounds, rebase=True,
+                          out=(values[:, slot], ts[:, slot], valid[:, slot]))
+        return c
+
     def assemble_windows(self, bounds) -> tuple:
-        """Drain queues once and stack K closed windows per env.
+        """Drain queues once and stack K closed windows per env — one pass
+        straight into preallocated (K, E, S, M) staging buffers.
 
         Returns ``(RawWindow with leading K axis, per_window_counts)`` where
         the counts attribute each drained record to the window whose bounds
@@ -517,39 +621,41 @@ class PerceptaSystem:
         the drain total — mirroring fused mode's per-window ingest numbers
         for consumers like dead-source detection). Per-env isolation is
         structural: each env's records flow queue -> its own Accumulator ->
-        row i of every window in the stack; no cross-env array is ever
-        indexed by more than one env.
+        column i of the staging stack; no cross-env array is ever indexed
+        by more than one env. Inactive/free slots keep their all-invalid
+        zero rows: on device their state updates are natural no-ops and
+        outputs are masked.
+
+        With ``ingest_workers=N`` the live envs are partitioned
+        slot-striped across N persistent workers (env at live position p is
+        owned by worker p mod N — deterministic for a given membership).
+        Each env's drain -> ingest -> close sequence is unchanged and
+        env-isolated, and the per-window counts are summed with integer
+        adds, so the result is bit-identical to the serial loop.
         """
-        E, S, M = self.cfg.n_envs, self.cfg.n_streams, self.cfg.max_samples
+        E = self.cfg.n_envs
         K = len(bounds)
-        counts_arr = np.zeros(K, np.int64)
         starts = np.asarray([b[0] for b in bounds], np.float64)
         live = self._live_slots()
-        for _, env in live:
-            recs = self.broker.queue_for(env).drain()
-            scalar_ts = []        # one vectorized pass per drain, not per item
-            for r in recs:
-                if isinstance(r, RecordBatch):
-                    j = np.searchsorted(starts, r.timestamps, side="right") - 1
-                    counts_arr += np.bincount(np.clip(j, 0, K - 1),
-                                              minlength=K)
-                else:
-                    scalar_ts.append(r.timestamp)
-            if scalar_ts:
-                j = np.searchsorted(starts, np.asarray(scalar_ts),
-                                    side="right") - 1
-                counts_arr += np.bincount(np.clip(j, 0, K - 1), minlength=K)
-            self.accumulators[env].ingest(recs)
+        values, ts, valid = self._staging_buffers(K, E)
+        counts_arr = np.zeros(K, np.int64)
+        if self._ingest_pool is not None and len(live) > 1:
+            def run_shard(shard):
+                return [self._assemble_env(i, env, bounds, starts,
+                                           values, ts, valid)
+                        for i, env in shard]
+            shards = [live[w::self.ingest_workers]
+                      for w in range(self.ingest_workers)]
+            futs = [self._ingest_pool.submit(run_shard, sh)
+                    for sh in shards if sh]
+            for f in futs:
+                for c in f.result():
+                    counts_arr += c
+        else:
+            for i, env in live:
+                counts_arr += self._assemble_env(i, env, bounds, starts,
+                                                 values, ts, valid)
         counts = [int(c) for c in counts_arr]
-        values = np.zeros((K, E, S, M), np.float32)
-        ts = np.zeros((K, E, S, M), np.float32)
-        valid = np.zeros((K, E, S, M), bool)
-        # inactive/free slots keep their all-invalid zero rows: on device
-        # their state updates are natural no-ops and outputs are masked
-        for i, env in live:
-            v, t, m = self.accumulators[env].close_windows(bounds,
-                                                           rebase=True)
-            values[:, i], ts[:, i], valid[:, i] = v, t, m
         return make_raw_window(values, ts, valid), counts
 
     def run_windows_scan(self, k: int) -> List[dict]:
@@ -945,6 +1051,9 @@ class PerceptaSystem:
         self.state = elastic_lib.grow_env_tree(
             self.state, self.pipeline.init_state(), old)
         self.env_slots = new_slots
+        # staging buffers are keyed by (K, E, S, M); the env width just
+        # changed, so drop the old-width pool (rebuilt lazily)
+        self._stage_pool.clear()
         if mesh is not None:
             self.state = shard_lib.place_env_tree(self.state, 0, mesh)
             if self.fused_decide:

@@ -41,12 +41,16 @@ class Translator:
                       value=value * self.unit_scale)
 
     def translate_batch(self, env_id: str, stream: str, timestamps,
-                        values) -> Optional[RecordBatch]:
+                        values,
+                        sorted_ts: Optional[bool] = None
+                        ) -> Optional[RecordBatch]:
         """Columnar poll -> one RecordBatch (rename + unit scale, no loop).
 
         The receiver already decoded/simulated the columns, so there is no
         per-row parse step to fail — malformed data is a per-payload-path
         concern, which is why ``errors`` only moves on ``translate``.
+        ``sorted_ts`` (the receiver's measured sortedness promise) passes
+        through untouched — rename and unit scaling never reorder rows.
         """
         ts = np.asarray(timestamps, np.float64)
         vs = np.asarray(values, np.float64)
@@ -56,4 +60,4 @@ class Translator:
             vs = vs * self.unit_scale
         self.stats["records"] += int(ts.shape[0])
         stream = self.stream_rename.get(stream, stream)
-        return RecordBatch.from_columns(env_id, stream, ts, vs)
+        return RecordBatch.from_columns(env_id, stream, ts, vs, sorted_ts)

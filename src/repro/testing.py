@@ -1,0 +1,99 @@
+"""Property-test support: hypothesis when installed, deterministic shim else.
+
+The tier-1 suite has property tests (random elastic-membership schedules,
+sorted-merge vs lexsort bucketing parity) that should run EVERYWHERE — but
+``hypothesis`` is a dev extra some deployment images lack. Importing
+``given`` / ``settings`` / ``st`` from here gives tests the real library
+when it is installed and otherwise a small deterministic stand-in that
+draws ``max_examples`` pseudo-random examples from a seed derived from the
+test's qualified name — every run samples the same examples, so a failure
+reproduces without example databases or shrinking.
+
+The shim implements only the subset this suite uses (``st.integers``,
+``st.lists``, ``st.sampled_from``, ``st.booleans``, ``st.floats``,
+``@given`` with keyword strategies, ``@settings(max_examples, deadline)``)
+and intentionally nothing more: richer property tests that need real
+hypothesis features should keep ``pytest.importorskip("hypothesis")``.
+"""
+from __future__ import annotations
+
+try:                                        # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function ``random.Random -> value``."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+        @staticmethod
+        def lists(elem: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Strategy(
+                lambda rng: [elem.draw(rng)
+                             for _ in range(rng.randint(min_size,
+                                                        max_size))])
+
+    st = _strategies()
+
+    def settings(max_examples: int = 16, deadline=None, **_ignored):
+        """Record the example budget on the test (order-independent with
+        ``@given`` — ``functools.wraps`` carries the attribute outward)."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            drawn_names = set(strategies)
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = int(getattr(runner, "_shim_max_examples", 16))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = random.Random(seed * 1_000_003 + i)
+                    example = {k: s.draw(rng)
+                               for k, s in strategies.items()}
+                    try:
+                        fn(*args, **{**kwargs, **example})
+                    except BaseException as e:
+                        e.args = (f"falsifying example ({i + 1}/{n}): "
+                                  f"{example!r}",) + e.args
+                        raise
+
+            # pytest must not see the strategy-drawn params as fixtures
+            sig = inspect.signature(fn)
+            runner.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in drawn_names])
+            return runner
+        return deco

@@ -207,21 +207,19 @@ def test_elastic_churn_schedules_match_dense(ops, mode):
     _run_schedule(ops, mode)
 
 
-try:                                       # property test: random schedules
-    from hypothesis import given, settings, strategies as st
-except ImportError:                        # pragma: no cover
-    @pytest.mark.skip(reason="property tests need hypothesis "
-                             "(pip install -r requirements-dev.txt)")
-    def test_elastic_random_schedule_matches_dense():
-        pass
-else:
-    @given(ops=st.lists(st.integers(OP_NONE, OP_RESIZE),
-                        min_size=2, max_size=3),
-           mode=st.sampled_from(("scan", "scan_fused_decide")))
-    @settings(max_examples=8, deadline=None)
-    def test_elastic_random_schedule_matches_dense(ops, mode):
-        """Random schedules over the same op alphabet as the anchors."""
-        _run_schedule(tuple(ops), mode)
+# property test: random schedules. repro.testing hands out real hypothesis
+# when installed and a deterministic drop-in otherwise, so this runs (never
+# skips) in every environment.
+from repro.testing import given, settings, st  # noqa: E402
+
+
+@given(ops=st.lists(st.integers(OP_NONE, OP_RESIZE),
+                    min_size=2, max_size=3),
+       mode=st.sampled_from(("scan", "scan_fused_decide")))
+@settings(max_examples=8, deadline=None)
+def test_elastic_random_schedule_matches_dense(ops, mode):
+    """Random schedules over the same op alphabet as the anchors."""
+    _run_schedule(tuple(ops), mode)
 
 
 # --------------------------------------------------------------------------

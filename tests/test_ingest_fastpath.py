@@ -1,0 +1,265 @@
+"""Host ingest fast path: bit-identity with the legacy path everywhere.
+
+The arena-staged, sorted-merge, one-pass-assembly ingest
+(``ingest_fastpath=True``, the default) and its ``ingest_workers``
+sharding must reproduce the legacy chunk-list + global-lexsort path
+bit for bit: windows, stats, tie order, overflow truncation, and the
+replay/LogDB sinks — across codecs, ``ingest="records"`` vs
+``"columnar"``, elastic masked pools, and scan/async/fused modes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PipelineConfig
+from repro.core.reward import energy_reward_spec
+from repro.runtime.accumulator import Accumulator
+from repro.runtime.db import LogDB
+from repro.runtime.predictor import ActionSpace, Predictor, linear_policy
+from repro.runtime.queues import _head
+from repro.runtime.receivers import Receiver, SimulatedDevice
+from repro.runtime.records import Record, RecordBatch
+from repro.runtime.system import PerceptaSystem, SourceSpec
+from repro.runtime.translator import Translator
+from repro.testing import given, settings, st
+
+STREAMS = ["grid_kw", "temp_c", "price"]
+BOUNDS = [(0.0, 100.0), (100.0, 200.0), (200.0, 300.0)]
+LATER_BOUNDS = [(300.0, 400.0), (400.0, 500.0)]
+
+
+def _mixed_items(rng, n=150, max_t=480.0):
+    """A drained-queue mix: singles, multi-stream batches, single-stream
+    sorted and unsorted batches — with boundary ties, stale records and
+    rows past the last window end (stay pending)."""
+    items, recs = [], []
+    for i in range(n):
+        s = STREAMS[rng.randint(len(STREAMS))]
+        t = float(rng.uniform(0, max_t))
+        if i % 13 == 0:                       # exact boundary ties
+            t = float(BOUNDS[i % 3][1])
+        recs.append(Record("env", s, t, float(rng.normal(5, 2))))
+    i = 0
+    while i < len(recs):
+        kind = rng.randint(4)
+        take = recs[i:i + 1 + rng.randint(12)]
+        i += len(take)
+        if kind == 0:
+            items.extend(take)                # singles
+        elif kind == 1:
+            items.append(RecordBatch.from_records(take))   # multi-stream
+        else:
+            s = take[0].stream                # single-stream batch
+            ts = np.asarray([r.timestamp for r in take])
+            vs = np.asarray([r.value for r in take])
+            if kind == 2:                     # sorted + honestly flagged
+                order = np.argsort(ts, kind="stable")
+                ts, vs = ts[order], vs[order]
+                items.append(RecordBatch.from_columns("env", s, ts, vs,
+                                                      sorted_ts=True))
+            else:                             # arrival order, unflagged
+                items.append(RecordBatch.from_columns("env", s, ts, vs))
+    return items
+
+
+def _close_twice(acc):
+    """Two close rounds: the second exercises the retained tail (the
+    arena's self-healing sortedness) and fresh stats accumulation."""
+    r1 = acc.close_windows(BOUNDS, rebase=True)
+    r2 = acc.close_windows(LATER_BOUNDS, rebase=False)
+    return r1, r2
+
+
+@pytest.mark.parametrize("max_samples", [4, 16])   # 4 forces overflow
+def test_sorted_merge_equals_lexsort_bit_for_bit(rng, max_samples):
+    items = _mixed_items(rng)
+    fast = Accumulator("env", STREAMS, max_samples, fastpath=True)
+    slow = Accumulator("env", STREAMS, max_samples, fastpath=False)
+    fast.ingest(items)
+    slow.ingest(items)
+    for ra, rb in zip(_close_twice(fast), _close_twice(slow)):
+        for x, y in zip(ra, rb):
+            assert x.dtype == y.dtype and (x == y).all()
+    assert fast.stats == slow.stats
+    assert fast.merge_stats["close_lexsort"] == 0
+    assert slow.merge_stats["close_fast"] == 0
+
+
+@given(seed=st.integers(0, 10_000), max_samples=st.sampled_from((3, 8, 64)))
+@settings(max_examples=25, deadline=None)
+def test_property_sorted_merge_vs_lexsort_parity(seed, max_samples):
+    """Random record streams (random batching, sortedness, ties, overflow):
+    the sorted-merge close and the global-lexsort close agree bit for bit
+    on every output array and every stat, across two close rounds."""
+    rng = np.random.RandomState(seed)
+    items = _mixed_items(rng, n=30 + rng.randint(120))
+    fast = Accumulator("env", STREAMS, max_samples, fastpath=True)
+    slow = Accumulator("env", STREAMS, max_samples, fastpath=False)
+    fast.ingest(items)
+    slow.ingest(items)
+    for ra, rb in zip(_close_twice(fast), _close_twice(slow)):
+        for x, y in zip(ra, rb):
+            assert x.dtype == y.dtype and (x == y).all()
+    assert fast.stats == slow.stats
+
+
+def test_out_of_order_arrivals_sort_then_heal(rng):
+    """Unsorted arrivals take the argsort fallback exactly once: the
+    retained tail is stored sorted, so the NEXT close is fast again."""
+    acc = Accumulator("env", ["s"], 64)
+    ts = rng.uniform(0, 480.0, 50)            # unsorted, spans both closes
+    acc.ingest_batch(RecordBatch.from_columns("env", "s", ts, ts))
+    acc.close_windows(BOUNDS)
+    assert acc.merge_stats == {"close_fast": 0, "close_sort": 1,
+                               "close_lexsort": 0}
+    acc.close_windows(LATER_BOUNDS)
+    assert acc.merge_stats["close_fast"] == 1  # tail healed to sorted
+
+
+def test_sorted_flag_skips_verification_and_buckets_fast():
+    acc = Accumulator("env", ["s"], 64)
+    ts = np.arange(10, dtype=np.float64) * 30.0
+    acc.ingest_batch(RecordBatch.from_columns("env", "s", ts, ts,
+                                              sorted_ts=True))
+    v, t, m = acc.close_windows(BOUNDS)
+    assert acc.merge_stats["close_fast"] == 1
+    assert int(m.sum()) == 10 and acc.stats["records"] == 10
+
+
+def test_sorted_flag_propagates_receiver_translator_queue():
+    # receiver: measured per poll (jitter can't exceed the interval here)
+    dev = SimulatedDevice("s", interval_s=60.0, dropout_p=0.0, jitter_s=0.5,
+                          spike_p=0.0)
+    clock = {"now": 0.0}
+    r = Receiver("src", "mqtt", dev, lambda: clock["now"])
+    seen = []
+    r.subscribe("e", on_batch=lambda e, s, ts, vs, srt: seen.append(srt))
+    clock["now"] = 600.0
+    r.poll_once()
+    assert seen == [True]
+    # translator passes the promise through; rename/scale never reorder
+    tr = Translator("src", "mqtt", unit_scale=2.0)
+    b = tr.translate_batch("e", "s", [1.0, 2.0], [3.0, 4.0], True)
+    assert b.sorted_ts is True
+    # queue overflow truncation keeps it (prefix of sorted is sorted)
+    assert _head(b, 1).sorted_ts is True
+    # default stays "unknown", never a false promise
+    b2 = tr.translate_batch("e", "s", [2.0, 1.0], [3.0, 4.0])
+    assert b2.sorted_ts is None
+
+
+# --------------------------------------------------------------------------
+# System level: every ingest configuration is bit-identical
+# --------------------------------------------------------------------------
+
+def _system(mode="scan", n_envs=2, scan_k=3, protocols=("mqtt", "amqp"),
+            **kw):
+    srcs = [
+        SourceSpec("meter", protocols[0],
+                   SimulatedDevice("grid_kw", 60.0, base=3.0, seed=1)),
+        SourceSpec("price", protocols[1],
+                   SimulatedDevice("price_eur", 300.0, base=0.2,
+                                   amplitude=0.05, seed=2)),
+    ]
+    cfg = PipelineConfig(n_envs=n_envs, n_streams=2, n_ticks=8, tick_s=60.0,
+                         max_samples=32)
+    pred = Predictor(linear_policy(2, 2),
+                     energy_reward_spec(price_idx=1, grid_idx=0, temp_idx=0),
+                     ActionSpace(np.array([-1., -1.]), np.array([1., 1.])),
+                     n_envs, cfg.n_features, replay_capacity=64)
+    envs = [f"bldg-{i}" for i in range(n_envs)]
+    return PerceptaSystem(envs, srcs, cfg, pred, speedup=5000.0,
+                          manual_time=True, mode=mode, scan_k=scan_k, **kw)
+
+
+def _strip(results):
+    """Everything but the wall-clock latency metric must match exactly."""
+    return [{k: v for k, v in r.items() if k != "latency_s"}
+            for r in results]
+
+
+@pytest.mark.parametrize("ingest", ["records", "columnar"])
+@pytest.mark.parametrize("protocols", [("mqtt", "amqp"), ("http", "http")])
+def test_fastpath_matches_legacy_per_ingest_path(ingest, protocols):
+    """fastpath on == fastpath off for BOTH ingest paths and all codecs
+    (including lossy http CSV: the wire rounding is identical on both
+    sides of this comparison, so equality is exact)."""
+    a = _system(ingest=ingest, protocols=protocols, ingest_fastpath=True)
+    b = _system(ingest=ingest, protocols=protocols, ingest_fastpath=False)
+    ra, rb = a.run_windows(7), b.run_windows(7)
+    a.stop(), b.stop()
+    assert _strip(ra) == _strip(rb)
+
+
+@pytest.mark.parametrize("mode", ["scan", "scan_async", "scan_fused_decide"])
+@pytest.mark.parametrize("workers", [2, 4])
+def test_ingest_workers_bit_identical(mode, workers):
+    """Worker-sharded assembly == serial assembly through the scan, async
+    (prefetcher epoch protocol) and fused-decide engines; the replay sink
+    sees identical rows."""
+    ref = _system(mode=mode)
+    got = _system(mode=mode, ingest_workers=workers)
+    rr, rg = ref.run_windows(7), got.run_windows(7)
+    assert _strip(rr) == _strip(rg)
+    ra, rb = ref.export_replay("s"), got.export_replay("s")
+    for k, v in ra.items():
+        eq = (np.asarray(v) == np.asarray(rb[k]))
+        assert eq if isinstance(eq, bool) else eq.all(), k
+    ref.stop(), got.stop()
+
+
+def test_fastpath_logdb_rows_identical(tmp_path):
+    """The LogDB sink logs byte-identical rows under the fast path."""
+    rows = {}
+    for name, fast in (("fast", True), ("legacy", False)):
+        db = LogDB(str(tmp_path / name), salt="x")
+        s = _system(ingest_fastpath=fast, db=db)
+        s.run_windows(6)
+        s.stop(), db.close()
+        rows[name] = [{k: v for k, v in r.items() if k != "logged_at"}
+                      for _, r in db.read_from()]
+    assert rows["fast"] == rows["legacy"] and len(rows["fast"]) == 12
+
+
+def test_elastic_masked_pool_fastpath_identity():
+    """Fast path under elastic churn (attach into a free slot, detach):
+    identical per-window rows and replay export to the legacy path."""
+    def run(fast):
+        s = _system(n_envs=4, elastic=True, env_slots=4,
+                    ingest_fastpath=fast)
+        s.detach_env("bldg-3")                # start 3-of-4 occupied
+        out = _strip(s.run_windows(3))
+        s.attach_env("joiner")
+        out += _strip(s.run_windows(3))
+        s.detach_env("bldg-1")
+        out += _strip(s.run_windows(3))
+        exp = s.export_replay("s")
+        s.stop()
+        return out, exp
+    (ra, ea), (rb, eb) = run(True), run(False)
+    assert ra == rb
+    for k, v in ea.items():
+        eq = (np.asarray(v) == np.asarray(eb[k]))
+        assert eq if isinstance(eq, bool) else eq.all(), k
+
+
+def test_staging_buffers_not_reused_while_batch_alive():
+    """The rotating staging pool must not overwrite a RawWindow that is
+    still within the pipeline depth: the buffer an assembly returned is
+    untouched for the next ``_STAGE_DEPTH - 1`` assemblies."""
+    s = _system()
+    k = s.scan_k
+    def assemble():
+        bounds = [s.window_bounds(s.window_index + j) for j in range(k)]
+        s._advance_clock(bounds[-1][1])
+        s.pump_receivers()
+        raw, _ = s.assemble_windows(bounds)
+        s.window_index += k
+        return raw
+    raw0 = assemble()
+    snap = [np.array(np.asarray(x)) for x in
+            (raw0.values, raw0.timestamps, raw0.valid)]
+    for _ in range(PerceptaSystem._STAGE_DEPTH - 1):
+        assemble()
+    for a, b in zip(snap, (raw0.values, raw0.timestamps, raw0.valid)):
+        assert (a == np.asarray(b)).all()
+    s.stop()

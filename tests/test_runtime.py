@@ -84,9 +84,10 @@ def test_system_overflow_drop_parity_across_ingest_paths():
             tr = sys_.translators[s.source_id]
             for env in sys_.env_ids:
                 if ingest == "columnar":
-                    def on_batch(env_id, stream, ts, vs, _tr=tr,
-                                 _sys=sys_):
-                        batch = _tr.translate_batch(env_id, stream, ts, vs)
+                    def on_batch(env_id, stream, ts, vs, srt=None,
+                                 _tr=tr, _sys=sys_):
+                        batch = _tr.translate_batch(env_id, stream, ts, vs,
+                                                    srt)
                         if batch is not None:
                             _sys.broker.publish(batch)
                     r.subscribe(env, on_batch=on_batch)
@@ -121,7 +122,7 @@ def test_receiver_concurrent_start_pump_conserves_records():
     r = Receiver("src", "mqtt", dev, lambda: clock["now"], speedup=1e9)
     got, glock = [], threading.Lock()
 
-    def on_batch(env_id, stream, ts, vs):
+    def on_batch(env_id, stream, ts, vs, srt):
         with glock:
             got.extend(ts.tolist())
 
@@ -159,7 +160,8 @@ def test_receiver_resubscribe_batch_then_payload_and_guard():
     clock = {"now": 0.0}
     r = Receiver("src", "mqtt", dev, lambda: clock["now"])
     batches, payloads = [], []
-    r.subscribe("e", on_batch=lambda e, s, ts, vs: batches.append(len(ts)))
+    r.subscribe("e",
+                on_batch=lambda e, s, ts, vs, srt: batches.append(len(ts)))
     clock["now"] = 5.0
     r.poll_once()
     assert sum(batches) == 5 and not payloads
@@ -178,7 +180,8 @@ def test_receiver_resubscribe_batch_then_payload_and_guard():
     r._batch_subs.pop("e", None)
     clock["now"] = 10.0
     r.poll_once()
-    r.subscribe("e", on_batch=lambda e, s, ts, vs: batches.append(len(ts)))
+    r.subscribe("e",
+                on_batch=lambda e, s, ts, vs, srt: batches.append(len(ts)))
     clock["now"] = 11.0
     r.poll_once()
     assert sum(batches) == 5 + 3    # ts in [8, 11): nothing skipped
@@ -276,6 +279,26 @@ def test_logdb_append_many_matches_appends(tmp_path, monkeypatch):
     assert strip(a) == strip(b)
     assert a.stats["rows"] == b.stats["rows"] == 2
     assert a.stats["bytes"] == b.stats["bytes"]
+
+
+def test_logdb_anon_cache_is_bounded_lru(tmp_path):
+    """The pseudonym cache never exceeds its cap under high-cardinality
+    env ids, eviction follows recency, and an evicted id re-hashes to the
+    SAME pseudonym (the salted hash is pure — eviction is invisible in
+    the log)."""
+    db = LogDB(str(tmp_path), salt="x", anon_cache_size=4)
+    first = db._anon("env-0")
+    for i in range(10):
+        db.append(f"env-{i}", 1.0, [0.0], [0.0], 0.0)
+    assert len(db._anon_cache) == 4
+    assert "env-9" in db._anon_cache          # most recent survives
+    assert "env-0" not in db._anon_cache      # oldest evicted
+    assert db._anon("env-0") == first         # stable across eviction
+    # re-reading rows: each env's pseudonym is consistent regardless of
+    # when its cache entry lived
+    envs = {r["env"] for _, r in db.read_from()}
+    db.close()
+    assert len(envs) == 10
 
 
 def test_forwarder_window_dispatch_matches_per_env():
